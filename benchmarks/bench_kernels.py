@@ -1,0 +1,99 @@
+"""Kernel micro-benchmarks (CPU interpret timings + analytic TPU-v5e µs).
+
+``us_per_call`` is the CPU wall time (interpret mode — correctness path);
+``derived`` is the analytic TPU-v5e time in µs from the roofline terms
+(max of compute and HBM terms), i.e. what the hillclimb optimizes against.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=3):
+    out = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: one mixtral-scale head block (bf16)
+    from repro.kernels.flash_attention.ops import flash_attention
+    B, S, Hq, Hkv, D = 1, 1024, 4, 2, 128
+    q = jax.random.normal(key, (B, S, Hq, D), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, Hkv, D), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, Hkv, D), jnp.bfloat16)
+    us = _time(lambda: flash_attention(q, k, v, interpret=True))
+    flops = 4 * B * Hq * S * S * D * 0.5          # causal
+    bytes_ = 2 * (q.size + k.size + v.size) * 2
+    rows.append(("kernel_flash_attn_1k", us,
+                 max(flops / PEAK_FLOPS, bytes_ / HBM_BW) * 1e6))
+
+    # paged attention decode: 128-seq batch
+    from repro.kernels.paged_attention.ops import paged_attention
+    Bd, Hq2, Hkv2, ps, P, npg = 16, 8, 8, 16, 512, 16
+    qd = jax.random.normal(key, (Bd, Hq2, D), jnp.bfloat16)
+    kp = jax.random.normal(key, (P, ps, Hkv2, D), jnp.bfloat16)
+    vp = jax.random.normal(key, (P, ps, Hkv2, D), jnp.bfloat16)
+    pt = jnp.tile(jnp.arange(npg, dtype=jnp.int32)[None], (Bd, 1))
+    kl = jnp.full((Bd,), npg * ps, jnp.int32)
+    us = _time(lambda: paged_attention(qd, kp, vp, pt, kl, interpret=True))
+    bytes_ = 2 * Bd * npg * ps * Hkv2 * D * 2
+    rows.append(("kernel_paged_attn_decode", us, bytes_ / HBM_BW * 1e6))
+
+    # grouped expert FFN
+    from repro.kernels.moe_gmm.ops import moe_gmm
+    E, C, Dm, F = 4, 128, 256, 512
+    x = jax.random.normal(key, (E, C, Dm), jnp.bfloat16)
+    wg = jax.random.normal(key, (E, Dm, F), jnp.bfloat16) * 0.1
+    wi = jax.random.normal(key, (E, Dm, F), jnp.bfloat16) * 0.1
+    wo = jax.random.normal(key, (E, F, Dm), jnp.bfloat16) * 0.1
+    us = _time(lambda: moe_gmm(x, wg, wi, wo, interpret=True))
+    flops = 2 * E * C * Dm * F * 3
+    rows.append(("kernel_moe_gmm", us, flops / PEAK_FLOPS * 1e6))
+
+    # hash probe (NAM-DB §5.2 hot spot)
+    from repro.core import hashtable as ht, header as hdr
+    from repro.kernels.hash_probe.ops import hash_probe
+    t = ht.init(4096)
+    keys = jnp.arange(1, 2000, dtype=jnp.uint32) * 7919
+    t, _ = ht.insert(t, keys, jnp.arange(1999, dtype=jnp.int32),
+                     max_probes=64)
+    meta = hdr.pack(jnp.zeros(4096, jnp.uint32), jnp.zeros(4096, jnp.uint32))
+    tsv = jnp.zeros((4,), jnp.uint32)
+    qs = keys[:1024]
+    us = _time(lambda: hash_probe(t.keys, t.vals, meta[:, 0], meta[:, 1],
+                                  tsv, qs, interpret=True))
+    bytes_ = 4096 * 16 + 1024 * 8
+    rows.append(("kernel_hash_probe_1k", us, bytes_ / HBM_BW * 1e6))
+
+    # mamba selective scan
+    from repro.kernels.mamba_scan.ops import mamba_scan
+    Bm_, S2, Di, N = 2, 256, 128, 16
+    dt = jax.nn.softplus(jax.random.normal(key, (Bm_, S2, Di)))
+    xm = jax.random.normal(key, (Bm_, S2, Di))
+    Bmat = jax.random.normal(key, (Bm_, S2, N)) * 0.3
+    Cmat = jax.random.normal(key, (Bm_, S2, N)) * 0.3
+    A_log = jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)[None]
+                    * jnp.ones((Di, 1)))
+    Dsk = jnp.ones((Di,))
+    us = _time(lambda: mamba_scan(dt, xm, Bmat, Cmat, A_log, Dsk,
+                                  bd=64, chunk=16, interpret=True))
+    bytes_ = (3 * Bm_ * S2 * Di + 2 * Bm_ * S2 * N) * 4
+    rows.append(("kernel_mamba_scan", us, bytes_ / HBM_BW * 1e6))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]:.2f}")

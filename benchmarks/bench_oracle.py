@@ -1,0 +1,90 @@
+"""Exp-2 (paper Fig. 6): scalability of the timestamp oracle.
+
+Two outputs per variant:
+* ``us_per_call`` — measured wall time of one fully-jitted *batched round* of
+  timestamp transactions on this host (real protocol execution),
+* ``derived``    — modeled t-trx/s on the paper's cluster B (8 nodes, 20
+  threads each) from the calibrated InfiniBand model.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import netmodel
+from repro.core.tsoracle import (CompressedVectorOracle, GlobalCounterOracle,
+                                 VectorOracle)
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _ttrx_round_vector(oracle, state, tids):
+    """read vector → next cts → make visible (one batched round)."""
+    vec = oracle.read(state)
+    cts = vec[oracle.slot_of_thread(tids)] + jnp.uint32(1)
+    return oracle.make_visible(state, tids, cts,
+                               jnp.ones(tids.shape, bool))
+
+
+def _ttrx_round_naive(oracle, state, n):
+    state, cts = oracle.fetch_commit_ts(state, n)
+    state = oracle.complete(state, cts, jnp.ones((n,), bool))
+    return oracle.advance(state)
+
+
+def run(n_clients: int = 8, threads_per_client: int = 20):
+    rows = []
+    n_threads = n_clients * threads_per_client
+    tids = jnp.arange(n_threads, dtype=jnp.int32)
+
+    naive = GlobalCounterOracle(capacity=1 << 14)
+    st = naive.init()
+    f = jax.jit(lambda s: _ttrx_round_naive(naive, s, n_threads))
+    us = _time(f, st)
+    rows.append(("oracle_naive_globalcounter", us / n_threads,
+                 netmodel.oracle_throughput("naive", n_clients,
+                                            threads_per_client)))
+
+    vec = VectorOracle(n_threads)
+    st = vec.init()
+    f = jax.jit(lambda s: _ttrx_round_vector(vec, s, tids))
+    us = _time(f, st)
+    for variant in ("vector", "vector_bg", "vector_compressed",
+                    "vector_both"):
+        rows.append((f"oracle_{variant}", us / n_threads,
+                     netmodel.oracle_throughput(variant, n_clients,
+                                                threads_per_client)))
+
+    comp = CompressedVectorOracle(n_threads, threads_per_client)
+    st = comp.init()
+    want = jnp.ones((n_threads,), bool)
+    f = jax.jit(lambda s: comp.next_commit_ts_batch(s, tids, want))
+    us = _time(f, st)
+    rows.append(("oracle_compressed_cts_assign", us / n_threads, 0.0))
+
+    # scaling curve for the figure: derived t-trx/s vs client count
+    curve = {}
+    for variant in ("naive", "vector", "vector_bg", "vector_compressed",
+                    "vector_both"):
+        curve[variant] = [
+            (c, netmodel.oracle_throughput(variant, c, threads_per_client))
+            for c in (1, 2, 4, 8)]
+    return rows, curve
+
+
+if __name__ == "__main__":
+    rows, curve = run()
+    for r in rows:
+        print(f"{r[0]},{r[1]:.3f},{r[2]:.0f}")
+    for v, pts in curve.items():
+        print(f"# {v}: " + " ".join(f"{c}n={t/1e6:.1f}M" for c, t in pts))

@@ -1,0 +1,82 @@
+"""Quickstart — the NAM-DB core in ~80 lines.
+
+Runs the paper's full Snapshot-Isolation protocol (timestamp-vector oracle,
+MVCC record store, CAS validate+lock, in-place install) as one vectorized
+"round" of concurrent transaction threads, then a one-step tour of the LM
+side of the framework (build an assigned architecture, run a forward pass).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import mvcc, si
+from repro.core.tsoracle import VectorOracle
+
+# --------------------------------------------------------------------------
+# 1. A tiny NAM pool: 64 bank accounts, 100 units each, 4 old versions kept.
+# --------------------------------------------------------------------------
+N_ACCOUNTS, WIDTH, T = 64, 2, 16          # T concurrent transaction threads
+table = mvcc.init_table(N_ACCOUNTS, payload_width=WIDTH, n_old=4)
+data0 = jnp.zeros((N_ACCOUNTS, WIDTH), jnp.int32).at[:, 0].set(100)
+table = table._replace(cur_data=data0)
+
+oracle = VectorOracle(n_threads=T)        # the paper's scalable T_R vector
+state = oracle.init()
+
+# --------------------------------------------------------------------------
+# 2. Transfer 10 units between random account pairs, SI-transactionally.
+#    Each thread reads 2 records and writes both — a distributed transaction.
+# --------------------------------------------------------------------------
+key = jax.random.PRNGKey(0)
+committed_total, aborted_total = 0, 0
+for rnd in range(8):
+    key, k1, k2 = jax.random.split(key, 3)
+    src = jax.random.randint(k1, (T,), 0, N_ACCOUNTS)
+    dst = (src + 1 + jax.random.randint(k2, (T,), 0, N_ACCOUNTS - 1)) \
+        % N_ACCOUNTS
+    batch = si.TxnBatch(
+        tid=jnp.arange(T, dtype=jnp.int32),
+        read_slots=jnp.stack([src, dst], axis=1).astype(jnp.int32),
+        read_mask=jnp.ones((T, 2), bool),
+        write_ref=jnp.broadcast_to(jnp.arange(2, dtype=jnp.int32), (T, 2)),
+        write_mask=jnp.ones((T, 2), bool),
+    )
+
+    def transfer(read_hdr, read_data, ts_vec):
+        """Local transaction logic: move 10 from src to dst."""
+        out = read_data.astype(jnp.int32)
+        out = out.at[:, 0, 0].add(-10)     # debit  src
+        out = out.at[:, 1, 0].add(+10)     # credit dst
+        return out
+
+    res = si.run_round(table, oracle, state, batch, transfer)
+    table, state = res.table, res.oracle_state
+    n_c = int(res.committed.sum())
+    committed_total += n_c
+    aborted_total += T - n_c
+    print(f"round {rnd}: committed {n_c:2d}/{T}   "
+          f"T_R head={[int(x) for x in state.vec[:6]]}")
+
+# SI invariant: money is conserved no matter which transactions aborted.
+total = int(table.cur_data[:, 0].sum())
+assert total == N_ACCOUNTS * 100, total
+print(f"\nconservation holds: Σbalances = {total} "
+      f"({committed_total} committed, {aborted_total} aborted)")
+
+# --------------------------------------------------------------------------
+# 3. The LM side: every assigned architecture is one `--arch` flag away.
+# --------------------------------------------------------------------------
+from repro.configs import get_arch, reduced
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import build
+
+cfg = reduced(get_arch("granite-3-8b"))
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(1))
+batch = make_batch(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4), 0)
+loss = jax.jit(model.train_loss)(params, batch)
+print(f"\n{cfg.name} (reduced, {cfg.n_layers}L/{cfg.d_model}d): "
+      f"one-batch loss = {float(loss):.3f}  "
+      f"(~ln V = {float(jnp.log(cfg.vocab)):.3f})")
+print("quickstart OK")

@@ -1,0 +1,74 @@
+"""Serving driver — batched requests through the NAM paged-KV engine.
+
+The engine's paged KV cache IS a NAM pool (DESIGN.md §3): pages are records
+with 8-byte version headers, page allocation is a transactional insert, and
+decode workers read a consistent snapshot — the paper's architecture applied
+to LM serving. This example admits a batch of prompts, decodes with
+continuous batching (finished sequences release pages that new requests
+reuse), and prints pool/throughput stats.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 12 --max-new 24
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.data.pipeline import make_prompts
+from repro.models import build
+from repro.serve.engine import Engine, EngineConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-seqs", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, EngineConfig(
+        max_seqs=args.max_seqs, page_size=16, n_pages=128, max_len=128))
+
+    prompts = make_prompts(jax.random.PRNGKey(1), args.requests, cfg.vocab,
+                           min_len=4, max_len=20)
+    print(f"arch={cfg.name} (reduced)  requests={len(prompts)}  "
+          f"engine: {args.max_seqs} seqs x 128 pages")
+
+    # continuous batching: admit a wave, decode max_new steps (sequences
+    # that emit EOS earlier stop earlier), truncate the rest, release the
+    # pages, admit the next wave into the freed pages.
+    t0 = time.time()
+    state = engine.init_state()
+    pending = list(prompts)
+    waves, total_new = 0, 0
+    while pending:
+        admit_now, pending = pending[:args.max_seqs], pending[args.max_seqs:]
+        state = engine.admit(state, admit_now)
+        waves += 1
+        for _ in range(args.max_new - 1):
+            if bool(np.asarray(state.done | ~state.table.active).all()):
+                break
+            state = engine.decode_step(state)
+            total_new += int(np.asarray(state.table.active
+                                        & ~state.done).sum())
+        # truncate stragglers at the wave budget, free their pages
+        state = state._replace(done=state.done | state.table.active)
+        free_before = int(np.asarray(state.meta.free_count)) \
+            if hasattr(state.meta, "free_count") else -1
+        state = engine.release_finished(state)
+        print(f"wave {waves}: admitted {len(admit_now)}, "
+              f"pool free pages before release: {free_before}")
+    dt = time.time() - t0
+    print(f"waves={waves}  tokens decoded={total_new} in {dt:.1f}s "
+          f"({total_new / max(dt, 1e-9):.1f} tok/s on 1 CPU core)")
+    print("serve_lm OK — continuous batching with page reuse")
+
+
+if __name__ == "__main__":
+    main()

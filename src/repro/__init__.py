@@ -1,0 +1,6 @@
+"""NAM-JAX: a scalable distributed transaction + LM training/serving framework.
+
+Reproduction and TPU-native extension of Zamanian et al., "The End of a Myth:
+Distributed Transactions Can Scale" (2016). See DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""SI-consistent checkpointing and elastic restore."""
+from repro.checkpoint import snapshot

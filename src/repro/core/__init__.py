@@ -1,0 +1,12 @@
+"""NAM-DB core: the paper's contribution as composable JAX modules.
+
+Layers (bottom-up): header packing -> timestamp oracles -> batched CAS
+arbitration -> MVCC record storage -> SI protocol rounds -> the NAM store with
+catalog/extends and shard_map distribution -> hash/range indexes -> WAL +
+recovery -> GC -> locality -> the calibrated InfiniBand cost model.
+"""
+from repro.core import (cas, catalog, gc, hashtable, header, locality, mvcc,
+                        netmodel, rangeindex, si, store, tsoracle, wal)
+
+__all__ = ["cas", "catalog", "gc", "hashtable", "header", "locality", "mvcc",
+           "netmodel", "rangeindex", "si", "store", "tsoracle", "wal"]

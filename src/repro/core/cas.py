@@ -1,0 +1,105 @@
+"""Batched owner-arbitrated compare-and-swap (validate + lock, paper §3.1/§5.1).
+
+NAM-DB combines write-set validation and locking into ONE RDMA
+compare-and-swap per record: compare the 8-byte header seen at read time with
+the header installed at the memory server; if equal (same version, lock bit 0)
+atomically set the lock bit.
+
+TPUs have no remote-atomic primitive, so we do not emulate the RNIC
+instruction; we adapt the *serialization contract*: within one protocol round,
+all lock requests that target the same record are arbitrated deterministically
+by the record's owning shard, and exactly one requester can win. The RNIC
+achieves this with an internal latch (serially); we achieve it with a
+scatter-min tournament (vectorized — one pass on the VPU), which is the
+TPU-idiomatic equivalent and is additionally livelock-free.
+
+Requests carry a priority (the transaction's round-unique id). The winner of
+a slot is the active requester with minimum priority whose expected header
+matches the installed header exactly (8-byte compare, lock bit included — an
+already-locked record can never match an unlocked expectation, so "lock bit
+must be 0" falls out of the equality, as in the paper).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import header as hdr_ops
+
+NO_WINNER = jnp.uint32(0xFFFFFFFF)
+
+
+class CasResult(NamedTuple):
+    granted: jnp.ndarray   # bool [Q] — request won arbitration AND matched
+    new_hdr: jnp.ndarray   # uint32 [R, 2] — headers with lock bits applied
+
+
+def arbitrate(hdrs, slots, expected, prio, active) -> CasResult:
+    """One round of compare-and-swap requests against one header array.
+
+    Args:
+      hdrs:     uint32 [R, 2] installed headers.
+      slots:    int32  [Q] target record slot per request.
+      expected: uint32 [Q, 2] header each requester read (its version check).
+      prio:     uint32 [Q] round-unique priority (lower wins), e.g. txn id.
+      active:   bool   [Q] mask for padded / non-writing requests.
+
+    Returns:
+      CasResult(granted[Q], new_hdr[R,2]).
+    """
+    n_rec = hdrs.shape[0]
+    slots = jnp.asarray(slots, jnp.int32)
+    safe_slots = jnp.where(active, slots, 0)
+
+    # --- tournament: min priority per slot ------------------------------
+    arb = jnp.full((n_rec,), NO_WINNER, jnp.uint32)
+    masked_prio = jnp.where(active, prio, NO_WINNER)
+    arb = arb.at[safe_slots].min(masked_prio)
+    won = active & (arb[safe_slots] == masked_prio) & (masked_prio != NO_WINNER)
+
+    # --- 8-byte compare (version + flag bits, lock bit included) --------
+    installed = hdrs[safe_slots]
+    matches = hdr_ops.equal(installed, expected)
+    not_locked = ~hdr_ops.is_locked(installed)
+    granted = won & matches & not_locked
+
+    # --- swap: set lock bit for granted slots ---------------------------
+    lock_or = jnp.where(granted, hdr_ops.LOCKED_BIT, jnp.uint32(0))
+    new_meta = hdrs[:, hdr_ops.META].at[safe_slots].max(
+        # max with (meta | LOCKED) == set bit, because meta is unchanged
+        # elsewhere and LOCKED is the lowest bit of an otherwise-equal word.
+        installed[:, hdr_ops.META] | lock_or
+    )
+    new_hdr = hdrs.at[:, hdr_ops.META].set(new_meta)
+    return CasResult(granted=granted, new_hdr=new_hdr)
+
+
+def release(hdrs, slots, mask):
+    """Reset lock bits (abort path, Listing 1 lines 24-28): one RDMA write
+    of the pre-lock header per slot — here a masked scatter of cleared bits."""
+    slots = jnp.asarray(slots, jnp.int32)
+    # masked-out entries go out of bounds and are dropped; active entries are
+    # duplicate-free (each targets a lock the caller exclusively holds)
+    idx = jnp.where(mask, slots, hdrs.shape[0])
+    meta = hdrs[:, hdr_ops.META]
+    cleared = meta[jnp.where(mask, slots, 0)] & ~hdr_ops.LOCKED_BIT
+    meta = meta.at[idx].set(cleared, mode="drop")
+    return hdrs.at[:, hdr_ops.META].set(meta)
+
+
+def all_granted_per_txn(granted, txn_of_request, n_txn, request_active):
+    """Fold per-record grants into per-transaction commit decisions.
+
+    A transaction commits iff every *active* write request it issued was
+    granted (Listing 1: ``commit = commit && success[i]``).
+    """
+    failed = request_active & ~granted
+    fail_count = jnp.zeros((n_txn,), jnp.int32).at[txn_of_request].add(
+        failed.astype(jnp.int32)
+    )
+    any_active = jnp.zeros((n_txn,), jnp.int32).at[txn_of_request].add(
+        request_active.astype(jnp.int32)
+    )
+    # Read-only transactions (no active writes) always "commit".
+    return (fail_count == 0) | (any_active == 0)

@@ -1,0 +1,82 @@
+"""Database catalog (paper §6.1).
+
+The catalog maps table/index names to storage locations in the NAM pool. It
+is hash-partitioned over memory servers, accessed with two-sided operations
+(cheap relative to transaction traffic), and *cached* by compute servers. A
+per-memory-server version counter invalidates caches: threads re-read the
+counter before compiling a transaction and refresh entries when it moved.
+
+Layouts are static during a run (tables are created up front in our
+benchmarks), so the Python-side spec dict is the compile-time component, and
+the version-counter protocol is retained as runtime state for fidelity
+(tested in tests/test_catalog.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """One table or index region inside the unified record pool."""
+    name: str
+    base: int          # first record slot in the pool
+    count: int         # number of record slots
+    width: int         # payload width in int32 words
+    n_columns: int     # logical columns packed into the payload
+    kind: str = "table"  # "table" | "hash_index" | "range_index"
+
+    @property
+    def end(self) -> int:
+        return self.base + self.count
+
+    def slot(self, local_id):
+        """Global pool slot of a local record id (the &_r operator)."""
+        return self.base + local_id
+
+
+class CatalogState(NamedTuple):
+    version: jnp.ndarray  # uint32 [n_servers] — per-server alter counters
+
+
+@dataclasses.dataclass
+class Catalog:
+    specs: Dict[str, TableSpec] = dataclasses.field(default_factory=dict)
+    n_servers: int = 1
+    _next_base: int = 0
+
+    def create_table(self, name: str, count: int, width: int,
+                     n_columns: Optional[int] = None,
+                     kind: str = "table") -> TableSpec:
+        spec = TableSpec(name=name, base=self._next_base, count=count,
+                         width=width, n_columns=n_columns or width, kind=kind)
+        self.specs[name] = spec
+        self._next_base += count
+        return spec
+
+    @property
+    def total_records(self) -> int:
+        return self._next_base
+
+    def __getitem__(self, name: str) -> TableSpec:
+        return self.specs[name]
+
+    def server_of(self, name: str) -> int:
+        """Hash partitioning of catalog entries over memory servers."""
+        return hash(name) % self.n_servers
+
+    # ---- runtime version-counter protocol --------------------------------
+    def init_state(self) -> CatalogState:
+        return CatalogState(version=jnp.zeros((self.n_servers,), jnp.uint32))
+
+    def alter(self, state: CatalogState, name: str) -> CatalogState:
+        """DDL on ``name`` bumps its server's counter (invalidates caches)."""
+        return CatalogState(
+            version=state.version.at[self.server_of(name)].add(1))
+
+    def needs_refresh(self, state: CatalogState, cached: CatalogState):
+        """Compute-server check before compiling a transaction (§6.1)."""
+        return state.version != cached.version

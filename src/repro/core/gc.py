@@ -1,0 +1,70 @@
+"""Garbage collection of old versions (paper §5.3).
+
+The application bounds the maximal transaction execution time ``E``. The
+system snapshots the timestamp vector ``T_R`` every interval and keeps the
+snapshots with their wall-clock times; any version that is not the newest
+version visible at the snapshot taken more than ``E`` ago can never be read
+again and is marked with the deleted bit by the per-memory-server GC thread;
+marked versions are truncated lazily. Transactions older than ``E`` may abort
+with ``snapshot_miss`` — faithful to the paper's contract.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import header as hdr_ops
+from repro.core.mvcc import VersionedTable
+
+
+class SnapshotLog(NamedTuple):
+    times: jnp.ndarray  # int32  [S] — wall-clock (monotone), -1 = unused
+    vecs: jnp.ndarray   # uint32 [S, n_slots]
+
+
+def init_log(n_snapshots: int, n_slots: int) -> SnapshotLog:
+    return SnapshotLog(times=jnp.full((n_snapshots,), -1, jnp.int32),
+                       vecs=jnp.zeros((n_snapshots, n_slots), jnp.uint32))
+
+
+def take_snapshot(log: SnapshotLog, now, vec) -> SnapshotLog:
+    """Append (ring) the current T_R with its wall-clock time."""
+    pos = jnp.argmin(log.times)  # oldest / unused slot
+    return SnapshotLog(times=log.times.at[pos].set(now),
+                       vecs=log.vecs.at[pos].set(vec))
+
+
+def safe_vector(log: SnapshotLog, now, max_txn_time) -> jnp.ndarray:
+    """The newest snapshot older than E — no live transaction can hold an
+    older read timestamp (elementwise max over qualifying snapshots is the
+    tight, still-safe choice)."""
+    old_enough = (log.times >= 0) & (log.times <= now - max_txn_time)
+    masked = jnp.where(old_enough[:, None], log.vecs, 0)
+    return jnp.max(masked, axis=0)
+
+
+def collect(table: VersionedTable, safe_vec) -> VersionedTable:
+    """GC sweep of the overflow region (the GC thread's scan).
+
+    For each record keep, among overflow versions visible at ``safe_vec``,
+    only the NEWEST (it is the read target of the oldest admissible
+    snapshot); older ones get the deleted bit. Invisible-but-newer versions
+    are never touched (they serve newer snapshots).
+    """
+    vis = hdr_ops.visible(table.ovf_hdr, safe_vec) \
+        & ~hdr_ops.is_deleted(table.ovf_hdr)          # [R, KO]
+    cts = hdr_ops.commit_ts(table.ovf_hdr)
+    vis_cts = jnp.where(vis, cts, 0)
+    newest = jnp.max(vis_cts, axis=1, keepdims=True)
+    doomed = vis & (vis_cts < newest)
+    new_hdr = hdr_ops.with_deleted(table.ovf_hdr, doomed
+                                   | hdr_ops.is_deleted(table.ovf_hdr))
+    return table._replace(ovf_hdr=new_hdr)
+
+
+def reclaimable_fraction(table: VersionedTable) -> jnp.ndarray:
+    """Telemetry: share of overflow slots whose deleted bit is set (lazy
+    truncation happens when contiguous regions free up)."""
+    d = hdr_ops.is_deleted(table.ovf_hdr)
+    return jnp.mean(d.astype(jnp.float32))

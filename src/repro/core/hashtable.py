@@ -1,0 +1,141 @@
+"""RDMA-friendly hash table (paper §5.2, after Pilaf [31]).
+
+Open addressing with linear probing over a bucket array: a ``get`` is one
+one-sided read of a small cluster of buckets (often a single read when there
+is no collision — the paper's design goal); a ``put`` claims a bucket with the
+same tournament-arbitration used for record CAS. Keys are ``uint32`` stored
+``+1`` so 0 can be the empty sentinel; values are ``int32`` record slots in
+the NAM pool.
+
+Partitioning (§5.2): the bucket array is split into equal ranges over memory
+servers; ``bucket = hash(key) % n_buckets`` locates both the bucket and the
+owning server — compute servers address it directly, no directory hop. The
+same structure backs both primary-table lookups and hash secondary indexes
+(the latter simply store primary keys as values and no version pointers).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.uint32(0)
+
+
+class HashTable(NamedTuple):
+    keys: jnp.ndarray  # uint32 [B] — stored key+1; 0 = empty
+    vals: jnp.ndarray  # int32  [B]
+
+    @property
+    def n_buckets(self) -> int:
+        return self.keys.shape[0]
+
+
+def init(n_buckets: int) -> HashTable:
+    return HashTable(keys=jnp.zeros((n_buckets,), jnp.uint32),
+                     vals=jnp.full((n_buckets,), -1, jnp.int32))
+
+
+def _hash(key, n_buckets):
+    """Fibonacci hashing — cheap, well-mixing, VPU-friendly."""
+    h = jnp.asarray(key, jnp.uint32) * jnp.uint32(2654435769)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def lookup(ht: HashTable, keys, max_probes: int = 16):
+    """Batched get. Returns (vals[Q], found[Q]).
+
+    One gather per probe distance == one one-sided read of the probe cluster;
+    ``max_probes`` bounds it exactly like the fixed-size cluster read in [31].
+    """
+    keys1 = jnp.asarray(keys, jnp.uint32) + jnp.uint32(1)
+    base = _hash(keys, ht.n_buckets)
+    B = ht.n_buckets
+
+    def body(p, carry):
+        vals, found, done = carry
+        idx = jnp.mod(base + p, B)
+        k = ht.keys[idx]
+        hit = ~done & (k == keys1)
+        empty = ~done & (k == EMPTY)          # probe chain ends → not found
+        vals = jnp.where(hit, ht.vals[idx], vals)
+        found = found | hit
+        done = done | hit | empty
+        return vals, found, done
+
+    vals = jnp.full(keys1.shape, -1, jnp.int32)
+    found = jnp.zeros(keys1.shape, bool)
+    done = jnp.zeros(keys1.shape, bool)
+    vals, found, _ = jax.lax.fori_loop(0, max_probes, body,
+                                       (vals, found, done))
+    return vals, found
+
+
+def insert(ht: HashTable, keys, vals, mask=None, max_probes: int = 16):
+    """Batched put with tournament arbitration per bucket.
+
+    Each probe round, every unresolved inserter bids for its probe bucket;
+    the minimum-rank bidder whose bucket is empty (or already holds its key —
+    update-in-place) wins via scatter-min; losers advance to the next probe
+    position. Duplicate keys *within one batch* resolve to the lowest rank.
+    Returns (new_ht, inserted_at[Q] bucket index or -1).
+    """
+    Q = len(keys)
+    keys1 = jnp.asarray(keys, jnp.uint32) + jnp.uint32(1)
+    vals = jnp.asarray(vals, jnp.int32)
+    if mask is None:
+        mask = jnp.ones((Q,), bool)
+    base = _hash(keys, ht.n_buckets)
+    B = ht.n_buckets
+    rank = jnp.arange(Q, dtype=jnp.uint32)
+
+    def body(p, carry):
+        tkeys, tvals, placed_at, open_ = carry
+        idx = jnp.mod(base + p, B)
+        cur = tkeys[idx]
+        can = open_ & ((cur == EMPTY) | (cur == keys1))
+        # tournament: lowest rank per bucket among claimants
+        arb = jnp.full((B,), jnp.uint32(0xFFFFFFFF))
+        arb = arb.at[jnp.where(can, idx, B)].min(
+            jnp.where(can, rank, jnp.uint32(0xFFFFFFFF)), mode="drop")
+        win = can & (arb[idx] == rank)
+        widx = jnp.where(win, idx, B)
+        tkeys = tkeys.at[widx].set(keys1, mode="drop")
+        tvals = tvals.at[widx].set(vals, mode="drop")
+        placed_at = jnp.where(win, idx, placed_at)
+        open_ = open_ & ~win
+        return tkeys, tvals, placed_at, open_
+
+    placed = jnp.full((Q,), -1, jnp.int32)
+    tkeys, tvals, placed, open_ = jax.lax.fori_loop(
+        0, max_probes, body, (ht.keys, ht.vals, placed, mask))
+    return HashTable(keys=tkeys, vals=tvals), placed
+
+
+def delete(ht: HashTable, keys, max_probes: int = 16):
+    """Tombstone-free delete is unsafe under linear probing; NAM-DB marks the
+    *record* deleted (header deleted-bit) and leaves the directory entry — we
+    keep the same discipline and only expose value invalidation."""
+    vals, found = lookup(ht, keys, max_probes)
+    del vals
+    keys1 = jnp.asarray(keys, jnp.uint32) + jnp.uint32(1)
+    base = _hash(keys, ht.n_buckets)
+    B = ht.n_buckets
+
+    def body(p, carry):
+        tvals, done = carry
+        idx = jnp.mod(base + p, B)
+        hit = ~done & (ht.keys[idx] == keys1)
+        tvals = tvals.at[jnp.where(hit, idx, B)].set(-1, mode="drop")
+        return tvals, done | hit
+
+    tvals, _ = jax.lax.fori_loop(0, max_probes, body,
+                                 (ht.vals, jnp.zeros(keys1.shape, bool)))
+    return ht._replace(vals=tvals), found
+
+
+def partition_of(keys, n_buckets: int, n_servers: int):
+    """Which memory server owns each key's bucket (range partitioning)."""
+    per = -(-n_buckets // n_servers)
+    return _hash(keys, n_buckets) // per

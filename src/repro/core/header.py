@@ -1,0 +1,112 @@
+"""8-byte record headers (paper §5.1, Figure 3).
+
+NAM-DB packs, into a single 8-byte word that the RNIC can compare-and-swap
+atomically:
+
+    [ thread-id : 29 bits | commit-ts : 32 bits | moved : 1 | deleted : 1 | locked : 1 ]
+
+JAX on CPU runs with x64 disabled by default, so we represent the header as a
+pair of ``uint32`` words stored in the trailing axis of a ``(..., 2)`` array:
+
+    word 0 ("meta"): thread-id in bits [31:3], moved bit 2, deleted bit 1,
+                     locked bit 0.
+    word 1 ("cts") : the 32-bit commit timestamp.
+
+The pair is compared as a unit wherever the paper compares the 8-byte header
+(validate+lock CAS), which preserves the atomic-compare semantics: our batched
+CAS arbitration (core/cas.py) grants a lock only when *both* words match the
+reader's expectation, exactly as the RNIC compares the full 8 bytes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Bit layout of the meta word.
+LOCKED_BIT = jnp.uint32(1 << 0)
+DELETED_BIT = jnp.uint32(1 << 1)
+MOVED_BIT = jnp.uint32(1 << 2)
+_FLAG_MASK = jnp.uint32(0b111)
+THREAD_SHIFT = 3
+MAX_THREADS = 1 << 29  # paper: 29-bit thread identifier
+
+META = 0  # index of the meta word in the trailing axis
+CTS = 1  # index of the commit-timestamp word
+
+
+def pack(thread_id, cts, *, moved=False, deleted=False, locked=False):
+    """Build ``(..., 2) uint32`` headers from components (broadcasting)."""
+    thread_id = jnp.asarray(thread_id, jnp.uint32)
+    cts = jnp.asarray(cts, jnp.uint32)
+    meta = thread_id << THREAD_SHIFT
+    meta = meta | jnp.where(jnp.asarray(moved), MOVED_BIT, jnp.uint32(0))
+    meta = meta | jnp.where(jnp.asarray(deleted), DELETED_BIT, jnp.uint32(0))
+    meta = meta | jnp.where(jnp.asarray(locked), LOCKED_BIT, jnp.uint32(0))
+    return jnp.stack(jnp.broadcast_arrays(meta, cts), axis=-1)
+
+
+def thread_id(hdr):
+    return hdr[..., META] >> THREAD_SHIFT
+
+
+def commit_ts(hdr):
+    return hdr[..., CTS]
+
+
+def is_locked(hdr):
+    return (hdr[..., META] & LOCKED_BIT) != 0
+
+
+def is_deleted(hdr):
+    return (hdr[..., META] & DELETED_BIT) != 0
+
+
+def is_moved(hdr):
+    return (hdr[..., META] & MOVED_BIT) != 0
+
+
+def with_lock(hdr, locked):
+    """Return ``hdr`` with the locked bit set/cleared (pure)."""
+    meta = hdr[..., META]
+    meta = jnp.where(
+        jnp.asarray(locked), meta | LOCKED_BIT, meta & ~LOCKED_BIT
+    )
+    return hdr.at[..., META].set(meta)
+
+
+def with_moved(hdr, moved):
+    meta = hdr[..., META]
+    meta = jnp.where(jnp.asarray(moved), meta | MOVED_BIT, meta & ~MOVED_BIT)
+    return hdr.at[..., META].set(meta)
+
+
+def with_deleted(hdr, deleted):
+    meta = hdr[..., META]
+    meta = jnp.where(
+        jnp.asarray(deleted), meta | DELETED_BIT, meta & ~DELETED_BIT
+    )
+    return hdr.at[..., META].set(meta)
+
+
+def equal(a, b):
+    """Full 8-byte equality — the unit the RNIC CAS compares."""
+    return jnp.all(a == b, axis=-1)
+
+
+def visible(hdr, ts_vector):
+    """Paper §4.1 visibility check.
+
+    A version tagged ``⟨i, t⟩`` is visible under read-timestamp vector ``T_R``
+    iff ``t <= T_R[i]``. ``ts_vector`` is ``uint32 [n_slots]``; broadcast over
+    leading dims of ``hdr``.
+    """
+    tid = thread_id(hdr)
+    return commit_ts(hdr) <= ts_vector[tid]
+
+
+def key64(hdr):
+    """A sortable scalar view of the header: (cts << 0) keyed by thread slot.
+
+    Used to order versions produced by the *same* thread (their cts values are
+    totally ordered); cross-thread versions are ordered only by visibility.
+    """
+    return hdr[..., CTS]

@@ -1,0 +1,69 @@
+"""Locality as an optimization, not a requirement (paper §2.2, §7.3).
+
+In NAM-DB every transaction is distributed by default; if a compute server
+happens to be co-located with the memory server owning a record, the access
+can use local memory instead of an RDMA verb. This module provides:
+
+* placement maps (which memory server owns which slot range),
+* home-aware transaction routing (execute a txn on the compute server
+  co-located with its home warehouse — the §7.3 "w/ locality" deployment),
+* measurement of the local-access fraction for a given access trace, which
+  feeds ``netmodel.txn_latency(local_fraction=…)``.
+
+Nothing in the protocol changes — locality only flips per-op costs, which is
+precisely the paper's "like an index" claim (validated in Exp-3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class Placement(NamedTuple):
+    """Range partitioning of the unified pool over memory servers."""
+    n_servers: int
+    shard_records: int
+
+    def server_of_slot(self, slots):
+        return jnp.asarray(slots, jnp.int32) // self.shard_records
+
+
+def co_located_server(tid, threads_per_server: int):
+    """Compute server hosting thread ``tid`` (one pair per machine, §7.1)."""
+    return jnp.asarray(tid, jnp.int32) // threads_per_server
+
+
+def local_fraction(placement: Placement, txn_server, access_slots,
+                   access_mask) -> jnp.ndarray:
+    """Fraction of record accesses that hit the executing machine's memory.
+
+    txn_server: int32 [T]   — machine executing each transaction
+    access_slots: int32 [T, A], access_mask: bool [T, A]
+    """
+    owner = placement.server_of_slot(access_slots)
+    local = (owner == txn_server[:, None]) & access_mask
+    total = jnp.maximum(jnp.sum(access_mask), 1)
+    return jnp.sum(local) / total
+
+
+def route_home(home_warehouse, warehouses_per_server: int):
+    """§7.3 'w/ locality': run the txn where its home warehouse lives."""
+    return jnp.asarray(home_warehouse, jnp.int32) // warehouses_per_server
+
+
+def expected_local_fraction(distributed_pct: float,
+                            items_remote_when_distributed: float = 1.0,
+                            accesses_home: float = 13.0,
+                            accesses_remote: float = 10.0) -> float:
+    """Analytic expectation for TPC-C new-order at a given degree of
+    distribution (used to cross-check the measured fraction).
+
+    A non-distributed new-order touches only home-warehouse records
+    (district, customer, ~10 stocks, order/order-lines). A distributed one
+    sources item stock from remote warehouses.
+    """
+    d = distributed_pct / 100.0
+    total = accesses_home + accesses_remote * 0  # remote replaces home stock
+    local = accesses_home - d * items_remote_when_distributed * 10.0
+    return max(0.0, local / total)

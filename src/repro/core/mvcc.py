@@ -1,0 +1,228 @@
+"""Multi-version record storage (paper §5.1, Figure 3).
+
+Layout per table (R record slots, payload width W int32 words, K old-version
+slots, KO overflow slots):
+
+* ``cur_hdr  uint32 [R, 2]``, ``cur_data int32 [R, W]`` — the *current
+  version*, stored in place so the common case is ONE one-sided read; a
+  contiguous region so scans are one bulk read.
+* ``old_hdr  uint32 [R, K, 2]``, ``old_data int32 [R, K, W]`` — the circular
+  *old-version buffers*, header and data split (paper: headers are fetched
+  alone first to locate a version, then exactly one payload read follows).
+* ``next_write int32 [R]`` — the circular buffers' next-write counter.
+* ``ovf_hdr/ovf_data [R, KO, …]``, ``ovf_next int32 [R]`` — the overflow
+  region fed by the version-mover thread.
+
+Fixed-length payloads only, exactly as the paper's current implementation
+(§5.1 "Record Layout"); our TPC-C encodes every column into int32 words.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import header as hdr_ops
+
+
+class VersionedTable(NamedTuple):
+    cur_hdr: jnp.ndarray    # uint32 [R, 2]
+    cur_data: jnp.ndarray   # int32  [R, W]
+    old_hdr: jnp.ndarray    # uint32 [R, K, 2]
+    old_data: jnp.ndarray   # int32  [R, K, W]
+    next_write: jnp.ndarray  # int32 [R]
+    ovf_hdr: jnp.ndarray    # uint32 [R, KO, 2]
+    ovf_data: jnp.ndarray   # int32  [R, KO, W]
+    ovf_next: jnp.ndarray   # int32 [R]
+
+    @property
+    def n_records(self) -> int:
+        return self.cur_hdr.shape[0]
+
+    @property
+    def payload_width(self) -> int:
+        return self.cur_data.shape[1]
+
+    @property
+    def n_old(self) -> int:
+        return self.old_hdr.shape[1]
+
+
+def init_table(n_records: int, payload_width: int, n_old: int = 4,
+               n_overflow: int = 8) -> VersionedTable:
+    """Fresh table: version 0 by thread 0, all old slots moved (=reusable)."""
+    cur_hdr = hdr_ops.pack(
+        jnp.zeros((n_records,), jnp.uint32), jnp.zeros((n_records,), jnp.uint32)
+    )
+    old_hdr = hdr_ops.pack(
+        jnp.zeros((n_records, n_old), jnp.uint32),
+        jnp.zeros((n_records, n_old), jnp.uint32),
+        moved=jnp.ones((n_records, n_old), bool),
+    )
+    ovf_hdr = hdr_ops.pack(
+        jnp.zeros((n_records, n_overflow), jnp.uint32),
+        jnp.zeros((n_records, n_overflow), jnp.uint32),
+        deleted=jnp.ones((n_records, n_overflow), bool),
+    )
+    return VersionedTable(
+        cur_hdr=cur_hdr,
+        cur_data=jnp.zeros((n_records, payload_width), jnp.int32),
+        old_hdr=old_hdr,
+        old_data=jnp.zeros((n_records, n_old, payload_width), jnp.int32),
+        next_write=jnp.zeros((n_records,), jnp.int32),
+        ovf_hdr=ovf_hdr,
+        ovf_data=jnp.zeros((n_records, n_overflow, payload_width), jnp.int32),
+        ovf_next=jnp.zeros((n_records,), jnp.int32),
+    )
+
+
+def read_current(tbl: VersionedTable, slots):
+    """The common-case single one-sided read: header + payload in place."""
+    return tbl.cur_hdr[slots], tbl.cur_data[slots]
+
+
+class VisibleRead(NamedTuple):
+    hdr: jnp.ndarray     # uint32 [Q, 2] — header of the chosen version
+    data: jnp.ndarray    # int32  [Q, W]
+    found: jnp.ndarray   # bool [Q] — False ⇒ snapshot too old (GC'd) → abort
+    from_current: jnp.ndarray  # bool [Q] — stats: hit the in-place version
+
+
+def read_visible(tbl: VersionedTable, slots, ts_vec) -> VisibleRead:
+    """Find the newest version visible under T_R (paper §4.1 + §5.1).
+
+    Order of attempts mirrors the RDMA access pattern: (1) current version —
+    one read; (2) old-version buffer headers, newest→oldest by circular
+    position; (3) overflow region. A version is usable if visible(⟨i,t⟩, T_R)
+    and not deleted.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    cur_h, cur_d = read_current(tbl, slots)
+    cur_ok = hdr_ops.visible(cur_h, ts_vec) & ~hdr_ops.is_deleted(cur_h)
+
+    # ---- old-version circular buffer, scanned newest first -------------
+    K = tbl.n_old
+    nw = tbl.next_write[slots]                       # [Q]
+    ages = jnp.arange(K, dtype=jnp.int32)            # 0 = newest old version
+    pos = jnp.mod(nw[:, None] - 1 - ages[None, :], K)  # [Q, K]
+    oh = tbl.old_hdr[slots[:, None], pos]            # [Q, K, 2]
+    od = tbl.old_data[slots[:, None], pos]           # [Q, K, W]
+    ok = hdr_ops.visible(oh, ts_vec) & ~hdr_ops.is_deleted(oh)
+    # A never-written slot holds the zero header with moved=1 (sentinel); its
+    # cts is 0 which is visible — exclude slots that merely hold the moved
+    # sentinel AND have cts 0 AND thread 0 while the record has real history.
+    is_sentinel = (hdr_ops.commit_ts(oh) == 0) & (hdr_ops.thread_id(oh) == 0) \
+        & hdr_ops.is_moved(oh)
+    ok = ok & ~is_sentinel
+    first = jnp.argmax(ok, axis=1)                   # newest visible
+    any_old = jnp.any(ok, axis=1)
+    old_h = jnp.take_along_axis(oh, first[:, None, None], axis=1)[:, 0]
+    old_d = jnp.take_along_axis(od, first[:, None, None], axis=1)[:, 0]
+
+    # ---- overflow region (oldest versions) ------------------------------
+    KO = tbl.ovf_hdr.shape[1]
+    on = tbl.ovf_next[slots]
+    oages = jnp.arange(KO, dtype=jnp.int32)
+    opos = jnp.mod(on[:, None] - 1 - oages[None, :], KO)
+    vh = tbl.ovf_hdr[slots[:, None], opos]
+    vd = tbl.ovf_data[slots[:, None], opos]
+    vok = hdr_ops.visible(vh, ts_vec) & ~hdr_ops.is_deleted(vh)
+    vfirst = jnp.argmax(vok, axis=1)
+    any_ovf = jnp.any(vok, axis=1)
+    ovf_h = jnp.take_along_axis(vh, vfirst[:, None, None], axis=1)[:, 0]
+    ovf_d = jnp.take_along_axis(vd, vfirst[:, None, None], axis=1)[:, 0]
+
+    hdr = jnp.where(cur_ok[:, None], cur_h,
+                    jnp.where(any_old[:, None], old_h, ovf_h))
+    data = jnp.where(cur_ok[:, None], cur_d,
+                     jnp.where(any_old[:, None], old_d, ovf_d))
+    found = cur_ok | any_old | any_ovf
+    return VisibleRead(hdr=hdr, data=data, found=found, from_current=cur_ok)
+
+
+class InstallResult(NamedTuple):
+    table: VersionedTable
+    installed: jnp.ndarray  # bool [Q] — False ⇒ old-slot not reusable yet
+
+
+def install(tbl: VersionedTable, slots, new_hdr, new_data, mask) -> InstallResult:
+    """Install write-set versions in place (paper §5.1 "Version Management").
+
+    Callers hold the lock on every masked slot (granted by cas.arbitrate), so
+    masked slots are pairwise distinct and scatters are conflict-free. Steps,
+    per record: (1) check the circular slot at ``next_write`` has moved=1 —
+    else the install must wait (we abort-and-retry, returning installed=False
+    after releasing the lock upstream); (2) copy the current version into the
+    circular buffers; (3) write the new current version with the lock bit
+    cleared; (4) bump next_write.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    safe = jnp.where(mask, slots, 0)
+    K = tbl.n_old
+    nw = tbl.next_write[safe]
+    wpos = jnp.mod(nw, K)
+    victim = tbl.old_hdr[safe, wpos]                  # slot to overwrite
+    reusable = hdr_ops.is_moved(victim)
+    do = mask & reusable
+
+    # Masked-out requests are routed OUT OF BOUNDS and dropped by the scatter
+    # (mode='drop'), so they can never alias a real record's update. Active
+    # requests hold locks (cas.arbitrate grants exclusively), hence are
+    # pairwise-distinct and the scatters below are conflict-free.
+    idx = jnp.where(do, safe, tbl.n_records)
+    cur_h = tbl.cur_hdr[safe]
+    cur_d = tbl.cur_data[safe]
+    # (2) move current → old buffer (moved=0: not yet copied to overflow)
+    moved_h = hdr_ops.with_moved(hdr_ops.with_lock(cur_h, False), False)
+    old_hdr = tbl.old_hdr.at[idx, wpos].set(moved_h, mode="drop")
+    old_data = tbl.old_data.at[idx, wpos].set(cur_d, mode="drop")
+    # (3) new current version, lock cleared in the same 8-byte write
+    inst_h = hdr_ops.with_lock(new_hdr, False)
+    cur_hdr2 = tbl.cur_hdr.at[idx].set(inst_h, mode="drop")
+    cur_data2 = tbl.cur_data.at[idx].set(new_data, mode="drop")
+    # (4) bump the circular counter
+    next_write = tbl.next_write.at[idx].add(1, mode="drop")
+    return InstallResult(
+        table=tbl._replace(cur_hdr=cur_hdr2, cur_data=cur_data2,
+                           old_hdr=old_hdr, old_data=old_data,
+                           next_write=next_write),
+        installed=do,
+    )
+
+
+def version_mover(tbl: VersionedTable, budget_per_record: int = 1) -> VersionedTable:
+    """The memory-server version-mover thread (paper §5.1).
+
+    Copies the OLDEST not-yet-moved old-buffer version of every record into
+    the overflow region and sets its moved bit, freeing the slot for reuse.
+    Runs continuously on memory servers; here one sweep per call.
+    """
+    for _ in range(budget_per_record):
+        K = tbl.n_old
+        r = jnp.arange(tbl.n_records)
+        # oldest occupied position = next_write (mod K) scanning forward for
+        # the first not-moved slot
+        ages = jnp.arange(K, dtype=jnp.int32)
+        pos = jnp.mod(tbl.next_write[:, None] + ages[None, :], K)  # old→new
+        h = tbl.old_hdr[r[:, None], pos]
+        not_moved = ~hdr_ops.is_moved(h)
+        first = jnp.argmax(not_moved, axis=1)
+        has = jnp.any(not_moved, axis=1)
+        src = jnp.take_along_axis(pos, first[:, None], axis=1)[:, 0]
+        mh = tbl.old_hdr[r, src]
+        md = tbl.old_data[r, src]
+        # append to overflow ring
+        opos = jnp.mod(tbl.ovf_next, tbl.ovf_hdr.shape[1])
+        ovf_hdr = tbl.ovf_hdr.at[r, opos].set(
+            jnp.where(has[:, None], hdr_ops.with_deleted(mh, False),
+                      tbl.ovf_hdr[r, opos]))
+        ovf_data = tbl.ovf_data.at[r, opos].set(
+            jnp.where(has[:, None], md, tbl.ovf_data[r, opos]))
+        ovf_next = tbl.ovf_next + has.astype(jnp.int32)
+        # set moved bit in the old buffer (slot stays readable until reused)
+        old_hdr = tbl.old_hdr.at[r, src].set(
+            jnp.where(has[:, None], hdr_ops.with_moved(mh, True),
+                      tbl.old_hdr[r, src]))
+        tbl = tbl._replace(old_hdr=old_hdr, ovf_hdr=ovf_hdr,
+                           ovf_data=ovf_data, ovf_next=ovf_next)
+    return tbl

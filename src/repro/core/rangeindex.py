@@ -1,0 +1,135 @@
+"""Range index — the B+-tree analogue (paper §5.2).
+
+The paper implements B+-trees with *two-sided* operations because pointer
+chasing over one-sided reads costs a round trip per level; the memory server
+executes the descent locally. The TPU-idiomatic equivalent keeps exactly that
+contract: the descent (here a binary search over a sorted key array) runs
+*shard-side* inside ``shard_map`` on the owning memory server's partition —
+one request in, one (key-range) answer out, like the paper's two-sided call.
+
+Structure: a bulk-loaded sorted base array plus a small sorted delta buffer
+for inserts, merged when full (log-structured — equivalent lookup semantics,
+O(log n) with two binary searches). Range partitioning over memory servers by
+key range (§5.2) is driven by ``partition_bounds``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.uint32(0xFFFFFFFF)
+
+
+class RangeIndex(NamedTuple):
+    base_keys: jnp.ndarray   # uint32 [N]  sorted; SENTINEL padding at tail
+    base_vals: jnp.ndarray   # int32  [N]  primary keys / record slots
+    delta_keys: jnp.ndarray  # uint32 [D]  sorted; SENTINEL padding
+    delta_vals: jnp.ndarray  # int32  [D]
+    delta_used: jnp.ndarray  # int32  []
+
+
+def build(keys, vals, capacity: int, delta_capacity: int = 256) -> RangeIndex:
+    keys = jnp.asarray(keys, jnp.uint32)
+    vals = jnp.asarray(vals, jnp.int32)
+    order = jnp.argsort(keys)
+    n = keys.shape[0]
+    bk = jnp.full((capacity,), SENTINEL, jnp.uint32).at[:n].set(keys[order])
+    bv = jnp.full((capacity,), -1, jnp.int32).at[:n].set(vals[order])
+    return RangeIndex(
+        base_keys=bk, base_vals=bv,
+        delta_keys=jnp.full((delta_capacity,), SENTINEL, jnp.uint32),
+        delta_vals=jnp.full((delta_capacity,), -1, jnp.int32),
+        delta_used=jnp.zeros((), jnp.int32))
+
+
+def insert(idx: RangeIndex, keys, vals, mask=None) -> RangeIndex:
+    """Append into the delta buffer, keep it sorted (one sort per batch —
+    the 'two-sided' work done by the owning shard)."""
+    keys = jnp.asarray(keys, jnp.uint32)
+    vals = jnp.asarray(vals, jnp.int32)
+    if mask is not None:
+        keys = jnp.where(mask, keys, SENTINEL)
+        vals = jnp.where(mask, vals, -1)
+    dk = jnp.concatenate([idx.delta_keys, keys])
+    dv = jnp.concatenate([idx.delta_vals, vals])
+    order = jnp.argsort(dk)
+    D = idx.delta_keys.shape[0]
+    used = idx.delta_used + jnp.sum(
+        (keys != SENTINEL).astype(jnp.int32))
+    return idx._replace(delta_keys=dk[order][:D], delta_vals=dv[order][:D],
+                        delta_used=jnp.minimum(used, D))
+
+
+def merge(idx: RangeIndex) -> RangeIndex:
+    """Fold the delta into the base (compaction — off the critical path)."""
+    allk = jnp.concatenate([idx.base_keys, idx.delta_keys])
+    allv = jnp.concatenate([idx.base_vals, idx.delta_vals])
+    order = jnp.argsort(allk)
+    N = idx.base_keys.shape[0]
+    return idx._replace(
+        base_keys=allk[order][:N], base_vals=allv[order][:N],
+        delta_keys=jnp.full_like(idx.delta_keys, SENTINEL),
+        delta_vals=jnp.full_like(idx.delta_vals, -1),
+        delta_used=jnp.zeros((), jnp.int32))
+
+
+def range_scan(idx: RangeIndex, lo, hi, max_results: int):
+    """All (key, val) with lo <= key < hi, from base ∪ delta.
+
+    Returns (keys[Q,max_results], vals[...], count[Q]) with SENTINEL padding;
+    results are key-sorted per query.
+    """
+    lo = jnp.atleast_1d(jnp.asarray(lo, jnp.uint32))
+    hi = jnp.atleast_1d(jnp.asarray(hi, jnp.uint32))
+
+    def scan_one(l, h):
+        picks_k, picks_v = [], []
+        for keys, vals in ((idx.base_keys, idx.base_vals),
+                           (idx.delta_keys, idx.delta_vals)):
+            s = jnp.searchsorted(keys, l)
+            offs = jnp.arange(max_results)
+            pos = jnp.clip(s + offs, 0, keys.shape[0] - 1)
+            k = keys[pos]
+            ok = (k >= l) & (k < h) & (offs < max_results)
+            picks_k.append(jnp.where(ok, k, SENTINEL))
+            picks_v.append(jnp.where(ok, vals[pos], -1))
+        k = jnp.concatenate(picks_k)
+        v = jnp.concatenate(picks_v)
+        order = jnp.argsort(k)
+        k, v = k[order][:max_results], v[order][:max_results]
+        return k, v, jnp.sum((k != SENTINEL).astype(jnp.int32))
+
+    return jax.vmap(scan_one)(lo, hi)
+
+
+def lookup_max_below(idx: RangeIndex, hi):
+    """Largest key < hi (e.g. latest order of a customer). Returns
+    (key, val, found)."""
+    hi = jnp.atleast_1d(jnp.asarray(hi, jnp.uint32))
+
+    def one(h):
+        cands = []
+        for keys, vals in ((idx.base_keys, idx.base_vals),
+                           (idx.delta_keys, idx.delta_vals)):
+            s = jnp.searchsorted(keys, h)
+            pos = jnp.clip(s - 1, 0, keys.shape[0] - 1)
+            k = keys[pos]
+            ok = (k < h) & (k != SENTINEL) & (s > 0)
+            cands.append((jnp.where(ok, k, 0), jnp.where(ok, vals[pos], -1),
+                          ok))
+        k = jnp.stack([c[0] for c in cands])
+        v = jnp.stack([c[1] for c in cands])
+        ok = jnp.stack([c[2] for c in cands])
+        best = jnp.argmax(jnp.where(ok, k, 0))
+        return k[best], v[best], jnp.any(ok)
+
+    return jax.vmap(one)(hi)
+
+
+def partition_bounds(n_servers: int, key_space: int):
+    """Range partitioning of the key space over memory servers (§5.2)."""
+    per = -(-key_space // n_servers)
+    lo = jnp.arange(n_servers, dtype=jnp.uint32) * per
+    return lo, jnp.minimum(lo + per, key_space)

@@ -1,0 +1,200 @@
+"""The end-to-end Snapshot Isolation protocol (paper §3.1 Listing 1 + §4-6).
+
+Execution model: NAM-DB runs many transaction-execution threads, each in a
+closed loop. The TPU-idiomatic rendering is a *batched round*: one call
+executes one transaction per thread, fully vectorized. Within a round the
+phases are exactly Listing 1's:
+
+  1. read the timestamp vector T_R (optionally a prefetched/stale one — §4.2),
+  2. build the read-set with one-sided visible reads (MVCC, §5.1),
+  3. compute the write-set locally (the transaction logic callback),
+  4. create commit timestamps locally ⟨i, t_i+1⟩ (§4.1 — no communication),
+  5. validate + lock each write record with one CAS (arbitrated, core/cas.py),
+  6. append the WAL journal entry (§6.2 — *before* installing),
+  7. install the write-set in place, old versions into the circular buffers,
+  8. release locks of aborted transactions,
+  9. make commits visible by bumping own T_R slot (one unilateral write).
+
+Transactions abort iff (a) they lose a CAS (version changed or write-write
+conflict in-round), (b) a required version was already GC'd (snapshot too
+old), or (c) an old-version slot was not yet reusable (install would block —
+we abort-and-retry instead of waiting, see DESIGN.md §2). Aborted transactions
+are retried by the driver, as in the paper ("the compute server directly
+triggers a retry after an abort", §7.4).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cas, header as hdr_ops, mvcc
+from repro.core.mvcc import VersionedTable
+from repro.core.tsoracle import VectorOracle, VectorState
+
+
+class TxnBatch(NamedTuple):
+    """One transaction per execution thread, fixed-capacity sets, masked.
+
+    ``write_ref`` indexes into the transaction's OWN read-set (Listing 1 uses
+    ``t.readSet[i].header`` as the CAS expectation — the write-set is always a
+    subset of the read-set under SI validation).
+    """
+    tid: jnp.ndarray          # int32  [T] — global thread ids (round-unique)
+    read_slots: jnp.ndarray   # int32  [T, RS]
+    read_mask: jnp.ndarray    # bool   [T, RS]
+    write_ref: jnp.ndarray    # int32  [T, WS] — index into read-set
+    write_mask: jnp.ndarray   # bool   [T, WS]
+
+
+class OpCounts(NamedTuple):
+    """Per-round RDMA-op accounting consumed by core/netmodel.py."""
+    ts_reads: jnp.ndarray       # vector fetches
+    ts_read_bytes: jnp.ndarray
+    record_reads: jnp.ndarray   # one-sided reads (incl. old-version probes)
+    cas_ops: jnp.ndarray
+    writes: jnp.ndarray         # install + unlock + visibility writes
+    bytes_moved: jnp.ndarray
+
+
+class RoundResult(NamedTuple):
+    table: VersionedTable
+    oracle_state: VectorState
+    committed: jnp.ndarray      # bool [T]
+    snapshot_miss: jnp.ndarray  # bool [T] — version GC'd / not found
+    read_data: jnp.ndarray      # int32 [T, RS, W] (post-visibility payloads)
+    ops: OpCounts
+
+
+ComputeFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+# (read_hdr [T,RS,2], read_data [T,RS,W], rts_vec) -> new_data [T,WS,W]
+
+
+def run_round(
+    table: VersionedTable,
+    oracle: VectorOracle,
+    state: VectorState,
+    batch: TxnBatch,
+    compute_fn: ComputeFn,
+    *,
+    rts_vec: Optional[jnp.ndarray] = None,
+    payload_bytes: int = 0,
+) -> RoundResult:
+    """Execute one vectorized round of the SI protocol."""
+    T, RS = batch.read_slots.shape
+    WS = batch.write_ref.shape[1]
+    W = table.payload_width
+
+    # ---- 1. read timestamp (whole vector = the snapshot) -----------------
+    if rts_vec is None:
+        rts_vec = oracle.read(state)
+
+    # ---- 2. visible reads -------------------------------------------------
+    flat_slots = batch.read_slots.reshape(-1)
+    vr = mvcc.read_visible(table, flat_slots, rts_vec)
+    read_hdr = vr.hdr.reshape(T, RS, 2)
+    read_data = vr.data.reshape(T, RS, W)
+    found = vr.found.reshape(T, RS) | ~batch.read_mask
+    txn_found = jnp.all(found, axis=1)
+
+    # ---- 3. transaction logic (local to the compute server) --------------
+    new_data = compute_fn(read_hdr, read_data, rts_vec)
+    assert new_data.shape == (T, WS, W), (new_data.shape, (T, WS, W))
+
+    # ---- 4. commit timestamps, created locally ----------------------------
+    slot = oracle.slot_of_thread(batch.tid)
+    if hasattr(oracle, "next_commit_ts_batch"):
+        cts = oracle.next_commit_ts_batch(state, batch.tid, txn_found)
+    else:
+        cts = state.vec[slot] + jnp.uint32(1)          # [T]
+    new_hdr = hdr_ops.pack(
+        jnp.broadcast_to(slot.astype(jnp.uint32)[:, None], (T, WS)),
+        jnp.broadcast_to(cts[:, None], (T, WS)),
+    )                                                   # [T, WS, 2]
+
+    # ---- 5. validate + lock (one CAS per write record) --------------------
+    wref = jnp.clip(batch.write_ref, 0, RS - 1)
+    write_slots = jnp.take_along_axis(batch.read_slots, wref, axis=1)
+    expected = jnp.take_along_axis(read_hdr, wref[:, :, None], axis=1)
+    req_active = (batch.write_mask & txn_found[:, None]).reshape(-1)
+    req_slots = write_slots.reshape(-1)
+    req_expected = expected.reshape(-1, 2)
+    # round-unique priorities: thread id (each thread issues ≤1 txn/round)
+    req_prio = jnp.broadcast_to(
+        batch.tid.astype(jnp.uint32)[:, None], (T, WS)).reshape(-1)
+    res = cas.arbitrate(table.cur_hdr, req_slots, req_expected, req_prio,
+                        req_active)
+    table = table._replace(cur_hdr=res.new_hdr)
+
+    # install feasibility: the circular victim slot must be reusable (§5.1)
+    K = table.n_old
+    wpos = jnp.mod(table.next_write[jnp.where(req_active, req_slots, 0)], K)
+    victim = table.old_hdr[jnp.where(req_active, req_slots, 0), wpos]
+    can_install = hdr_ops.is_moved(victim)
+    effective = res.granted & can_install
+
+    txn_of_req = jnp.broadcast_to(
+        jnp.arange(T, dtype=jnp.int32)[:, None], (T, WS)).reshape(-1)
+    committed = cas.all_granted_per_txn(effective, txn_of_req, T, req_active)
+    committed = committed & txn_found
+
+    # ---- 7. install write-sets of committed transactions ------------------
+    inst_mask = res.granted & committed[txn_of_req]   # they hold these locks
+    do_install = effective & committed[txn_of_req]
+    inst = mvcc.install(
+        table, req_slots, new_hdr.reshape(-1, 2),
+        new_data.reshape(-1, W), do_install)
+    table = inst.table
+
+    # ---- 8. release locks held by aborted transactions --------------------
+    release_mask = res.granted & ~committed[txn_of_req]
+    new_cur_hdr = cas.release(table.cur_hdr, req_slots, release_mask)
+    table = table._replace(cur_hdr=new_cur_hdr)
+
+    # ---- 9. make visible: bump own slot of T_R ----------------------------
+    state = oracle.make_visible(state, batch.tid, cts, committed)
+
+    # ---- op accounting -----------------------------------------------------
+    n_active_r = jnp.sum(batch.read_mask)
+    n_active_w = jnp.sum(req_active)
+    vec_bytes = 4 * getattr(oracle, "n_slots", T)
+    rec_bytes = 8 + 4 * W if payload_bytes == 0 else payload_bytes
+    ops = OpCounts(
+        ts_reads=jnp.asarray(T),
+        ts_read_bytes=jnp.asarray(T * vec_bytes),
+        record_reads=n_active_r + jnp.sum(~vr.from_current.reshape(T, RS)
+                                          & batch.read_mask),
+        cas_ops=n_active_w,
+        writes=2 * jnp.sum(do_install) + jnp.sum(release_mask)
+        + jnp.sum(committed),
+        bytes_moved=(n_active_r + 2 * jnp.sum(do_install)) * rec_bytes
+        + jnp.asarray(T * vec_bytes),
+    )
+    del inst_mask
+    return RoundResult(table=table, oracle_state=state, committed=committed,
+                       snapshot_miss=~txn_found, read_data=read_data, ops=ops)
+
+
+def run_rounds(table, oracle, state, make_batch, compute_fn, n_rounds: int,
+               key: jax.Array, *, staleness: int = 0):
+    """Driver: scan ``n_rounds`` rounds; ``make_batch(key, round) -> TxnBatch``.
+
+    ``staleness`` > 0 emulates the §4.2 dedicated-fetch-thread by reusing the
+    vector fetched ``staleness`` rounds earlier (ring history buffer).
+    """
+    hist = jnp.broadcast_to(state.vec, (max(1, staleness + 1),) + state.vec.shape)
+
+    def step(carry, rnd):
+        table, state, hist, key = carry
+        key, sub = jax.random.split(key)
+        batch = make_batch(sub, rnd)
+        rts = hist[-1] if staleness > 0 else None
+        out = run_round(table, oracle, state, batch, compute_fn, rts_vec=rts)
+        hist = jnp.concatenate([out.oracle_state.vec[None], hist[:-1]], 0)
+        stats = (out.committed, out.snapshot_miss)
+        return (out.table, out.oracle_state, hist, key), stats
+
+    (table, state, _, _), (committed, missed) = jax.lax.scan(
+        step, (table, state, hist, key), jnp.arange(n_rounds))
+    return table, state, committed, missed

@@ -1,0 +1,204 @@
+"""The NAM store: the shared distributed memory pool (paper §2.1, §5).
+
+A :class:`NAMStore` bundles the unified versioned record pool (one
+:class:`~repro.core.mvcc.VersionedTable` whose slot space is carved into
+tables by the :class:`~repro.core.catalog.Catalog`), the timestamp-vector
+oracle state, and the extend-based allocator for inserts (§5.3).
+
+Distribution: :func:`distributed_round` executes one SI round with the pool
+**range-partitioned over a mesh axis** via ``shard_map`` — each device is one
+memory server. One-sided reads become masked local gathers + an
+``all-reduce`` combine; CAS/installs are arbitrated and applied only by the
+owning shard; the commit decision is a global AND (``psum`` of per-shard
+failure counts). This is the JAX-native rendering of the paper's one-sided
+access pattern (see DESIGN.md §2) — no shard ever runs another shard's
+transaction logic hand-shake, mirroring "memory servers are dumb".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import cas, header as hdr_ops, mvcc
+from repro.core.catalog import Catalog
+from repro.core.mvcc import VersionedTable
+from repro.core.si import TxnBatch
+from repro.core.tsoracle import VectorOracle, VectorState
+
+
+class ExtendState(NamedTuple):
+    """§5.3 extend allocator: each (thread, table-region) owns a contiguous
+    extend of slots; inserts bump a private cursor — no allocation RPC in the
+    critical path and no cross-thread contention, as in the paper."""
+    cursor: jnp.ndarray  # int32 [n_threads, n_regions]
+
+
+class NAMStore(NamedTuple):
+    table: VersionedTable
+    oracle_state: VectorState
+    extends: ExtendState
+
+
+def init_store(catalog: Catalog, oracle: VectorOracle, *, n_old: int = 2,
+               n_overflow: int = 2, width: int | None = None,
+               n_insert_regions: int = 1) -> NAMStore:
+    w = width or max(s.width for s in catalog.specs.values())
+    tbl = mvcc.init_table(catalog.total_records, w, n_old=n_old,
+                          n_overflow=n_overflow)
+    # insert-style tables start "deleted" so reads report not-found
+    for spec in catalog.specs.values():
+        if spec.kind == "table" and getattr(spec, "insertable", False):
+            pass  # handled by caller via mark_region_deleted
+    return NAMStore(
+        table=tbl,
+        oracle_state=oracle.init(),
+        extends=ExtendState(
+            cursor=jnp.zeros((oracle.n_threads, n_insert_regions), jnp.int32)),
+    )
+
+
+def mark_region_deleted(store: NAMStore, base: int, count: int) -> NAMStore:
+    """Pre-mark an insert region's records as deleted (non-existent)."""
+    meta = store.table.cur_hdr[:, hdr_ops.META]
+    idx = jnp.arange(base, base + count)
+    meta = meta.at[idx].set(meta[idx] | hdr_ops.DELETED_BIT)
+    return store._replace(
+        table=store.table._replace(
+            cur_hdr=store.table.cur_hdr.at[:, hdr_ops.META].set(meta)))
+
+
+def allocate(extends: ExtendState, tid, region, n, region_base, extend_size,
+             threads: int):
+    """Allocate ``n`` slots from thread ``tid``'s extend of ``region``.
+
+    Returns (new_extends, first_slot). Layout: region records are striped as
+    ``region_base + tid*extend_size + cursor`` — the compute server computed
+    the remote address itself, no RPC (one-sided allocation).
+    """
+    cur = extends.cursor[tid, region]
+    first = region_base + tid * extend_size + cur
+    new = extends.cursor.at[tid, region].add(n)
+    return ExtendState(cursor=new), first
+
+
+# ---------------------------------------------------------------------------
+# Distributed execution: one SI round under shard_map
+# ---------------------------------------------------------------------------
+def _local_slots(slots, base, count):
+    """Map global slots to local; out-of-shard → count (OOB, dropped)."""
+    loc = slots - base
+    inside = (loc >= 0) & (loc < count)
+    return jnp.where(inside, loc, count), inside
+
+
+def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
+                      compute_fn: Callable, shard_records: int):
+    """Build a jittable ``round(table_sharded, oracle_vec, batch) -> …``.
+
+    ``table_sharded``: VersionedTable with leading record axis sharded over
+    ``axis``. ``oracle_vec`` is replicated (its partitioned variant shards it
+    too — see PartitionedVectorOracle). ``batch`` is replicated: every memory
+    server sees every request, applies only its own slots — the all-gather of
+    requests is the message-pattern dual of one-sided reads and is counted as
+    such by the cost model, not as two-sided RPC handling.
+    """
+    n_shards = mesh.shape[axis]
+
+    def local_round(table: VersionedTable, vec: jnp.ndarray, batch: TxnBatch):
+        shard_id = jax.lax.axis_index(axis)
+        base = shard_id * shard_records
+        T, RS = batch.read_slots.shape
+        WS = batch.write_ref.shape[1]
+        W = table.payload_width
+
+        # ---- one-sided visible reads (masked local + all-reduce) ---------
+        flat = batch.read_slots.reshape(-1)
+        loc, inside = _local_slots(flat, base, shard_records)
+        safe = jnp.where(inside, loc, 0)
+        vr = mvcc.read_visible(table, safe, vec)
+        rh = jnp.where(inside[:, None], vr.hdr, 0)
+        rd = jnp.where(inside[:, None], vr.data, 0)
+        fnd = jnp.where(inside, vr.found, False)
+        rh = jax.lax.psum(rh, axis)
+        rd = jax.lax.psum(rd, axis)
+        found = jax.lax.psum(fnd.astype(jnp.int32), axis) > 0
+        read_hdr = rh.reshape(T, RS, 2).astype(jnp.uint32)
+        read_data = rd.reshape(T, RS, W)
+        found = found.reshape(T, RS) | ~batch.read_mask
+        txn_found = jnp.all(found, axis=1)
+
+        # ---- local transaction logic (replicated, deterministic) ---------
+        new_data = compute_fn(read_hdr, read_data, vec)
+
+        slot_ids = oracle.slot_of_thread(batch.tid)
+        cts = vec[slot_ids] + jnp.uint32(1)
+        new_hdr = hdr_ops.pack(
+            jnp.broadcast_to(slot_ids.astype(jnp.uint32)[:, None], (T, WS)),
+            jnp.broadcast_to(cts[:, None], (T, WS)))
+
+        # ---- validate+lock on the owning shard ---------------------------
+        wref = jnp.clip(batch.write_ref, 0, RS - 1)
+        wslots = jnp.take_along_axis(batch.read_slots, wref, axis=1)
+        expected = jnp.take_along_axis(read_hdr, wref[:, :, None], axis=1)
+        req_slots_g = wslots.reshape(-1)
+        wloc, winside = _local_slots(req_slots_g, base, shard_records)
+        req_active = (batch.write_mask & txn_found[:, None]).reshape(-1)
+        mine = req_active & winside
+        prio = jnp.broadcast_to(
+            batch.tid.astype(jnp.uint32)[:, None], (T, WS)).reshape(-1)
+        res = cas.arbitrate(table.cur_hdr, jnp.where(winside, wloc, 0),
+                            expected.reshape(-1, 2), prio, mine)
+        table = table._replace(cur_hdr=res.new_hdr)
+
+        K = table.n_old
+        vpos = jnp.mod(table.next_write[jnp.where(mine, wloc, 0)], K)
+        victim = table.old_hdr[jnp.where(mine, wloc, 0), vpos]
+        effective = res.granted & hdr_ops.is_moved(victim)
+
+        # ---- global commit decision (psum of failures) --------------------
+        txn_of_req = jnp.broadcast_to(
+            jnp.arange(T, dtype=jnp.int32)[:, None], (T, WS)).reshape(-1)
+        failed_local = mine & ~effective
+        fails = jnp.zeros((T,), jnp.int32).at[txn_of_req].add(
+            failed_local.astype(jnp.int32))
+        fails = jax.lax.psum(fails, axis)
+        committed = (fails == 0) & txn_found
+
+        # ---- install / release on the owning shard ------------------------
+        do_install = effective & committed[txn_of_req]
+        inst = mvcc.install(table, wloc, new_hdr.reshape(-1, 2),
+                            new_data.reshape(-1, W), do_install)
+        table = inst.table
+        release_mask = res.granted & ~committed[txn_of_req]
+        table = table._replace(
+            cur_hdr=cas.release(table.cur_hdr, wloc, release_mask))
+
+        # ---- make visible (replicated vector update) -----------------------
+        vis_cts = jnp.where(committed, cts, jnp.uint32(0))
+        vec = vec.at[slot_ids].max(vis_cts)
+        return table, vec, committed, read_data
+
+    tbl_spec = VersionedTable(
+        cur_hdr=P(axis), cur_data=P(axis), old_hdr=P(axis), old_data=P(axis),
+        next_write=P(axis), ovf_hdr=P(axis), ovf_data=P(axis),
+        ovf_next=P(axis))
+    batch_spec = TxnBatch(tid=P(), read_slots=P(), read_mask=P(),
+                          write_ref=P(), write_mask=P())
+    fn = shard_map(local_round, mesh=mesh,
+                   in_specs=(tbl_spec, P(), batch_spec),
+                   out_specs=(tbl_spec, P(), P(), P()),
+                   check_vma=False)
+    return jax.jit(fn), n_shards
+
+
+def shard_table(mesh: Mesh, axis: str, table: VersionedTable):
+    """Place a replicated-host table with its record axis sharded."""
+    def put(x):
+        return jax.device_put(
+            x, NamedSharding(mesh, P(*([axis] + [None] * (x.ndim - 1)))))
+    return jax.tree.map(put, table)

@@ -1,0 +1,233 @@
+"""Timestamp oracles (paper §3.1 naive design and §4 scalable design).
+
+Four designs, matching the four lines of the paper's Figure 6:
+
+* :class:`GlobalCounterOracle` — the naive baseline: one globally-ordered
+  commit counter incremented with RDMA fetch-and-add, a ``ctsList`` bitmap of
+  completed transactions, and a management thread that advances the read
+  timestamp to the highest gap-free prefix (§3.1). It is the paper's
+  anti-pattern: a single serialization point.
+
+* :class:`VectorOracle` — the paper's contribution (§4.1): the read timestamp
+  is a vector ``T_R = ⟨t_1 … t_n⟩`` with one slot per transaction-execution
+  thread. Creating a commit timestamp is *local* (``t_i + 1``); making it
+  visible is a single unilateral write of slot ``i``; no atomics anywhere.
+
+* :class:`CompressedVectorOracle` — §4.2 "Compression of T_R": one slot per
+  *compute server*; the threads of one server share the slot through a local
+  (intra-server, hence cheap) fetch-and-add.
+
+* :class:`PartitionedVectorOracle` — §4.2 "Partitioning of T_R": the vector is
+  range-partitioned over several memory servers. Semantics are identical for
+  every single reader; strict cross-thread monotonicity is relaxed (GSI still
+  holds). The partitioning is realized with ``shard_map`` in
+  :mod:`repro.core.store` when the oracle lives on a mesh.
+
+All oracles are pure-functional: state in, state out, fully batched ("a round
+of R concurrent timestamp transactions" is one call), which is exactly the
+TPU-idiomatic rendering of the RNIC's request arbitration.
+
+The §4.2 "Dedicated Fetch Thread" optimization is modeled by
+:func:`staleness_window`: readers reuse a vector prefetched ``k`` rounds ago —
+admissible under Generalized SI (any committed snapshot may be read).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Naive global-counter oracle (paper §3.1)
+# --------------------------------------------------------------------------
+class GlobalCounterState(NamedTuple):
+    cts: jnp.ndarray          # uint32 [1] — the global commit counter
+    rts: jnp.ndarray          # uint32 [1] — the global read timestamp
+    bitmap: jnp.ndarray       # uint32 [capacity] — ctsList completion bits
+    offset: jnp.ndarray       # uint32 [1] — bitmap origin (timestamp - offset)
+
+
+class GlobalCounterOracle:
+    """The naive design: one RDMA fetch-and-add counter + ctsList scan."""
+
+    def __init__(self, capacity: int = 1 << 16):
+        self.capacity = capacity
+
+    def init(self) -> GlobalCounterState:
+        return GlobalCounterState(
+            cts=jnp.zeros((1,), jnp.uint32),
+            rts=jnp.zeros((1,), jnp.uint32),
+            bitmap=jnp.zeros((self.capacity,), jnp.uint32),
+            offset=jnp.ones((1,), jnp.uint32),  # timestamps start at 1
+        )
+
+    def read(self, state: GlobalCounterState) -> jnp.ndarray:
+        """RDMA read of the global read timestamp (scalar snapshot)."""
+        return state.rts[0]
+
+    def fetch_commit_ts(self, state, n: int):
+        """A round of ``n`` concurrent RDMA fetch-and-adds.
+
+        The NIC serializes them; each requester observes a distinct value.
+        Returns (new_state, cts[n]) with cts = counter+1 … counter+n.
+        """
+        base = state.cts[0]
+        ts = base + jnp.arange(1, n + 1, dtype=jnp.uint32)
+        return state._replace(cts=state.cts + jnp.uint32(n)), ts
+
+    def complete(self, state, cts, committed):
+        """Append outcomes to ctsList (unsignaled send → bitmap set)."""
+        idx = (cts - state.offset[0]).astype(jnp.int32)
+        idx = jnp.clip(idx, 0, self.capacity - 1)
+        # A completed transaction sets its bit whether committed or aborted —
+        # the bit means "outcome known", mirroring the paper's fixed-position
+        # single-bit scheme.
+        updates = jnp.ones_like(cts, dtype=jnp.uint32)
+        del committed  # outcome value irrelevant for rts advancement
+        return state._replace(bitmap=state.bitmap.at[idx].max(updates))
+
+    def advance(self, state):
+        """The timestamp-management thread: find the highest gap-free prefix.
+
+        rts := offset - 1 + (length of the all-ones prefix of the bitmap).
+        Holes (crashed/slow workers, §3.2 problem 3) stall this permanently —
+        reproduced faithfully.
+        """
+        prefix = jnp.cumprod(state.bitmap)  # 1 while gap-free, 0 after
+        n_done = jnp.sum(prefix).astype(jnp.uint32)
+        new_rts = state.offset[0] - jnp.uint32(1) + n_done
+        return state._replace(rts=jnp.maximum(state.rts, new_rts[None]))
+
+
+# --------------------------------------------------------------------------
+# Timestamp-vector oracles (paper §4)
+# --------------------------------------------------------------------------
+class VectorState(NamedTuple):
+    vec: jnp.ndarray  # uint32 [n_slots] — T_R
+
+
+class VectorOracle:
+    """One slot per transaction-execution thread (paper §4.1).
+
+    ``slot_of_thread`` is the identity; commit timestamps are created locally
+    and made visible with one remote write, no atomics.
+    """
+
+    def __init__(self, n_threads: int):
+        self.n_threads = n_threads
+        self.n_slots = n_threads
+
+    def init(self) -> VectorState:
+        return VectorState(vec=jnp.zeros((self.n_slots,), jnp.uint32))
+
+    def slot_of_thread(self, tid):
+        return tid
+
+    def read(self, state: VectorState) -> jnp.ndarray:
+        """One-sided read of the whole vector — the snapshot T_R."""
+        return state.vec
+
+    def next_commit_ts(self, state: VectorState, tid):
+        """Local, communication-free: each thread knows its last cts."""
+        return state.vec[self.slot_of_thread(tid)] + jnp.uint32(1)
+
+    def make_visible(self, state: VectorState, tid, cts, committed=None):
+        """Unilateral RDMA write of slot ``i`` (batched: one scatter).
+
+        ``committed`` masks the write for aborted transactions (they do not
+        publish a timestamp). Scatter-max is used only to combine the batch —
+        each thread owns its slot, so there are never cross-thread conflicts.
+        """
+        slot = self.slot_of_thread(tid)
+        cts = jnp.asarray(cts, jnp.uint32)
+        if committed is not None:
+            cts = jnp.where(committed, cts, jnp.uint32(0))
+        return state._replace(vec=state.vec.at[slot].max(cts))
+
+
+class CompressedVectorOracle(VectorOracle):
+    """§4.2 compression: one slot per compute server.
+
+    The threads of a server share slot ``server_of_thread(i)``. Within one
+    batched round, concurrent committers on the same server are assigned
+    distinct timestamps by an intra-server fetch-and-add, realized as a
+    rank-by-prefix-sum over the round's committers (deterministic and
+    contention-free — the TPU-idiomatic equivalent of a local F&A, whose
+    contention the paper already bounds by threads-per-server).
+    """
+
+    def __init__(self, n_threads: int, threads_per_server: int):
+        self.n_threads = n_threads
+        self.threads_per_server = threads_per_server
+        self.n_slots = max(1, n_threads // threads_per_server)
+
+    def slot_of_thread(self, tid):
+        return jnp.asarray(tid) // self.threads_per_server
+
+    def next_commit_ts_batch(self, state, tids, want):
+        """Assign distinct cts to every thread in ``tids`` with want=True.
+
+        Returns ``cts [R]`` such that committers sharing a server slot get
+        consecutive values above the slot's current timestamp.
+        """
+        slots = self.slot_of_thread(tids)
+        want = jnp.asarray(want)
+        # rank of each request among same-slot requests (stable order = NIC
+        # arbitration order within the round)
+        one_hot = (slots[:, None] == jnp.arange(self.n_slots)[None, :])
+        one_hot = one_hot & want[:, None]
+        rank = jnp.cumsum(one_hot, axis=0) - 1  # [R, n_slots]
+        my_rank = jnp.take_along_axis(rank, slots[:, None], axis=1)[:, 0]
+        base = state.vec[slots]
+        return base + jnp.uint32(1) + my_rank.astype(jnp.uint32)
+
+    def next_commit_ts(self, state, tid):
+        slot = self.slot_of_thread(tid)
+        return state.vec[slot] + jnp.uint32(1)
+
+
+class PartitionedVectorOracle(VectorOracle):
+    """§4.2 partitioning: T_R split over ``n_parts`` memory servers.
+
+    Functionally the vector semantics are unchanged for a single reader; the
+    cross-thread monotonicity caveat of the paper is a *distribution* effect
+    captured by reading parts at different staleness (see
+    :func:`read_partitioned`). ``part_of_slot`` drives bandwidth accounting in
+    the cost model and the shard layout in :mod:`repro.core.store`.
+    """
+
+    def __init__(self, n_threads: int, n_parts: int):
+        super().__init__(n_threads)
+        self.n_parts = n_parts
+        self.part_size = -(-n_threads // n_parts)
+
+    def part_of_slot(self, slot):
+        return jnp.asarray(slot) // self.part_size
+
+    def read_partitioned(self, states, round_of_part):
+        """Read each part at its own staleness (GSI-admissible).
+
+        ``states``: vec history ``uint32 [H, n_slots]`` (ring of recent
+        rounds); ``round_of_part``: ``int32 [n_parts]`` index into H per part.
+        Models that different partitions are fetched at different times.
+        """
+        slots = jnp.arange(self.n_slots)
+        part = self.part_of_slot(slots)
+        return states[round_of_part[part], slots]
+
+
+def staleness_window(vec_history: jnp.ndarray, k: int) -> jnp.ndarray:
+    """§4.2 dedicated-fetch-thread: use the vector prefetched ``k`` rounds ago.
+
+    ``vec_history`` is ``uint32 [H, n_slots]`` with row 0 = most recent.
+    Admissible under GSI: any committed snapshot may serve as read snapshot.
+    """
+    k = min(k, vec_history.shape[0] - 1)
+    return vec_history[k]
+
+
+def snapshot_summary(vec: jnp.ndarray) -> jnp.ndarray:
+    """A scalar summary used for logging/GC bookkeeping (sum of slots)."""
+    return jnp.sum(vec.astype(jnp.uint64) if vec.dtype == jnp.uint64 else vec)

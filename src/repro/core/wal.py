@@ -1,0 +1,148 @@
+"""Logging, recovery and failure handling (paper §6.2).
+
+Each transaction-execution thread writes a *private log journal* with RDMA
+writes to more than one memory server **before** installing its write-set.
+An entry is ``⟨T, S⟩``: the read timestamp vector the transaction used and
+the executed statement with all parameters (we log the physical write-set —
+slots, headers, payloads — which is the fully-bound statement).
+
+Recovery: after a memory-server failure the system halts, restores the last
+checkpoint, then one dedicated compute server replays the merged private
+journals *partially ordered by their logged read timestamps T*. We realize
+the partial order with the linear extension ``sort by (sum(T), thread)`` —
+``sum`` is strictly monotone w.r.t. vector dominance, so any T ≤ T' replays
+in order; concurrent entries (incomparable T) land in a deterministic but
+arbitrary order, which is exactly what GSI permits.
+
+Compute-server failures: servers are stateless; a *monitoring* compute server
+detects the failure and releases abandoned locks using the journal's intent
+records (slots + expected headers).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cas, header as hdr_ops, mvcc
+from repro.core.mvcc import VersionedTable
+
+
+class Journal(NamedTuple):
+    """Fixed-capacity ring per thread, replicated ``n_replicas`` times.
+
+    Replication is a leading axis: entry writes are broadcast (the paper's
+    "writes its journal to more than one memory server"); recovery reads any
+    surviving replica.
+    """
+    ts_vec: jnp.ndarray     # uint32 [Rep, Th, Cap, n_slots] — logged T
+    slots: jnp.ndarray      # int32  [Rep, Th, Cap, WS]
+    new_hdr: jnp.ndarray    # uint32 [Rep, Th, Cap, WS, 2]
+    new_data: jnp.ndarray   # int32  [Rep, Th, Cap, WS, W]
+    write_mask: jnp.ndarray  # bool  [Rep, Th, Cap, WS]
+    committed: jnp.ndarray  # bool   [Rep, Th, Cap]
+    used: jnp.ndarray       # int32  [Th]
+
+    @property
+    def capacity(self) -> int:
+        return self.ts_vec.shape[2]
+
+
+def init_journal(n_threads: int, capacity: int, n_slots: int, ws: int,
+                 width: int, n_replicas: int = 2) -> Journal:
+    R, T, C = n_replicas, n_threads, capacity
+    return Journal(
+        ts_vec=jnp.zeros((R, T, C, n_slots), jnp.uint32),
+        slots=jnp.full((R, T, C, ws), -1, jnp.int32),
+        new_hdr=jnp.zeros((R, T, C, ws, 2), jnp.uint32),
+        new_data=jnp.zeros((R, T, C, ws, width), jnp.int32),
+        write_mask=jnp.zeros((R, T, C, ws), bool),
+        committed=jnp.zeros((R, T, C), bool),
+        used=jnp.zeros((T,), jnp.int32),
+    )
+
+
+def append(j: Journal, tid, ts_vec, slots, new_hdr, new_data, write_mask,
+           committed) -> Journal:
+    """Log one round's entries for threads ``tid`` (before install).
+
+    ``committed`` is written after the decision (outcome record); replay only
+    applies committed entries — an entry without outcome is an *undetermined*
+    transaction whose locks the monitor must release (§3.2 problem 4).
+    """
+    pos = j.used[tid] % j.capacity
+    rep = jnp.arange(j.ts_vec.shape[0])
+
+    def put(field, val):
+        return field.at[rep[:, None], tid[None, :], pos[None, :]].set(
+            jnp.broadcast_to(val, (rep.shape[0],) + val.shape))
+
+    return Journal(
+        ts_vec=put(j.ts_vec, jnp.broadcast_to(ts_vec, (tid.shape[0],)
+                                              + ts_vec.shape)),
+        slots=put(j.slots, slots),
+        new_hdr=put(j.new_hdr, new_hdr),
+        new_data=put(j.new_data, new_data),
+        write_mask=put(j.write_mask, write_mask),
+        committed=put(j.committed, committed),
+        used=j.used.at[tid].add(1),
+    )
+
+
+def replay(j: Journal, table: VersionedTable, replica: int = 0,
+           survivors=None) -> VersionedTable:
+    """Rebuild ``table`` from a checkpoint by replaying the merged journals.
+
+    ``survivors``: optional bool [Rep] — which replicas survived; the first
+    surviving replica is used (they are identical by construction).
+    """
+    if survivors is not None:
+        replica = int(jnp.argmax(jnp.asarray(survivors)))
+    Th, Cap = j.ts_vec.shape[1], j.capacity
+    order_key = jnp.sum(j.ts_vec[replica], axis=-1)          # [Th, Cap]
+    flat_key = order_key.reshape(-1)
+    # never-used entries sort last
+    entry_idx = jnp.arange(Th * Cap)
+    used = (entry_idx % Cap)[None, :] < 0  # placeholder
+    valid = (jnp.arange(Cap)[None, :] < j.used[:, None]).reshape(-1)
+    com = j.committed[replica].reshape(-1) & valid
+    sort_key = jnp.where(com, flat_key, jnp.uint32(0xFFFFFFFF))
+    order = jnp.argsort(sort_key, stable=True)
+    slots = j.slots[replica].reshape(Th * Cap, -1)[order]
+    hdrs = j.new_hdr[replica].reshape(Th * Cap, -1, 2)[order]
+    data = j.new_data[replica].reshape(Th * Cap, -1,
+                                       j.new_data.shape[-1])[order]
+    wm = j.write_mask[replica].reshape(Th * Cap, -1)[order]
+    com = com[order]
+
+    def body(tbl, ent):
+        s, h, d, m, c = ent
+        out = mvcc.install(tbl, s, h, d, m & c)
+        # memory servers keep their version-mover threads running during
+        # recovery, so circular slots are continuously freed for the replay
+        return mvcc.version_mover(out.table), None
+
+    table, _ = jax.lax.scan(body, table, (slots, hdrs, data, wm, com))
+    del used
+    return table
+
+
+def release_abandoned_locks(j: Journal, table: VersionedTable, dead_tid: int,
+                            replica: int = 0) -> VersionedTable:
+    """Monitoring-compute-server path (§6.2): unlock what the dead server's
+    threads locked but never resolved.
+
+    A lock is released iff the record is locked AND its header (modulo the
+    lock bit) matches a header the dead thread was about to install *or* had
+    read — i.e. the dead thread is the only possible holder: had another
+    transaction held it, the installed version would differ.
+    """
+    last = (j.used[dead_tid] - 1) % j.capacity
+    slots = j.slots[replica, dead_tid, last]
+    mask = j.write_mask[replica, dead_tid, last]
+    resolved = j.committed[replica, dead_tid, last]
+    mask = mask & ~resolved
+    locked = hdr_ops.is_locked(table.cur_hdr[jnp.where(mask, slots, 0)])
+    return table._replace(
+        cur_hdr=cas.release(table.cur_hdr, slots, mask & locked))

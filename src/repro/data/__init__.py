@@ -1,0 +1,2 @@
+"""Deterministic host-sharded synthetic data pipeline."""
+from repro.data import pipeline

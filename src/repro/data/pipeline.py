@@ -1,0 +1,74 @@
+"""Deterministic synthetic token pipeline with host-sharded loading.
+
+Every (step, shard) pair maps to an independent PRNG stream, so:
+* any host can regenerate any other host's shard (work stealing / elastic
+  restart need no data-state handoff — the NAM "externalized state" rule
+  applied to the input pipeline);
+* restart at step ``t`` is bit-exact without checkpointing iterator state.
+
+Token streams are Markov-ish (mixture of a repeated-motif process and
+uniform noise), so models can actually *learn* in the end-to-end examples —
+loss decreases measurably within tens of steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    motif_len: int = 16
+    noise: float = 0.1
+    seed: int = 42
+
+
+def _fold(key, *ints):
+    for i in ints:
+        key = jax.random.fold_in(key, i)
+    return key
+
+
+def make_batch(cfg: DataConfig, step: int, shard: int = 0, n_shards: int = 1,
+               arch=None) -> Dict[str, jnp.ndarray]:
+    """Batch for (step, shard). Tokens repeat a per-sequence motif with noise
+    so next-token prediction is learnable; targets are tokens shifted by 1."""
+    assert cfg.global_batch % n_shards == 0
+    b = cfg.global_batch // n_shards
+    key = _fold(jax.random.PRNGKey(cfg.seed), step, shard)
+    k1, k2, k3 = jax.random.split(key, 3)
+    motif = jax.random.randint(k1, (b, cfg.motif_len), 0, cfg.vocab)
+    reps = -(-(cfg.seq_len + 1) // cfg.motif_len)
+    seq = jnp.tile(motif, (1, reps))[:, : cfg.seq_len + 1]
+    noise_tok = jax.random.randint(k2, seq.shape, 0, cfg.vocab)
+    flip = jax.random.uniform(k3, seq.shape) < cfg.noise
+    seq = jnp.where(flip, noise_tok, seq)
+    batch = {
+        "tokens": seq[:, :-1].astype(jnp.int32),
+        "targets": seq[:, 1:].astype(jnp.int32),
+        "mask": jnp.ones((b, cfg.seq_len), jnp.float32),
+    }
+    if arch is not None and arch.is_encdec:
+        kf = _fold(jax.random.PRNGKey(cfg.seed + 1), step, shard)
+        batch["frames"] = 0.1 * jax.random.normal(
+            kf, (b, arch.encoder_seq, arch.d_model), arch.param_dtype)
+    if arch is not None and arch.is_prefix_lm:
+        kp = _fold(jax.random.PRNGKey(cfg.seed + 2), step, shard)
+        batch["patches"] = 0.1 * jax.random.normal(
+            kp, (b, arch.prefix_len, arch.d_model), arch.param_dtype)
+    return batch
+
+
+def make_prompts(key, n: int, vocab: int, min_len: int = 4,
+                 max_len: int = 12):
+    """Random prompts for the serving examples/benchmarks."""
+    import numpy as np
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    lens = rng.integers(min_len, max_len + 1, size=n)
+    return [rng.integers(2, vocab, size=l).astype(np.int32) for l in lens]

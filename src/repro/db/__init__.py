@@ -1,0 +1,4 @@
+"""TPC-C benchmark substrate over the NAM store (paper section 7)."""
+from repro.db import tpcc, workload
+
+__all__ = ["tpcc", "workload"]

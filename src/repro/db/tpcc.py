@@ -1,0 +1,425 @@
+"""TPC-C over the NAM store (paper §7 evaluation substrate).
+
+Full five-transaction mix, vectorized: one *round* executes one transaction
+per execution thread through the SI protocol (`core/si.py`). The standard
+schema is kept (9 tables, secondary order index, 5..15 order lines); scale
+knobs (#warehouses, #items, customers/district) shrink it to CPU-test size
+without changing any access pattern.
+
+Encodings: every column is an int32 word in a fixed-width payload (§5.1
+fixed-length records; money in cents). Word maps are in the ``*_COL``
+constants below. Inserts use the §5.3 extend allocator: each execution thread
+owns a private extend per insert region, so inserts are conflict-free
+installs (no CAS), exactly as a compute server writes into memory it
+allocated. The contended hot spot is the district's ``d_next_o_id``, fought
+over via header CAS — TPC-C's classic conflict, left fully intact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import header as hdr_ops, mvcc, rangeindex as ri, si, store
+from repro.core.catalog import Catalog
+from repro.core.si import TxnBatch
+from repro.core.tsoracle import VectorOracle
+from repro.db import workload
+
+WIDTH = 8          # unified payload width (int32 words)
+MAX_OL = 15
+DISTRICTS = 10
+
+# column maps (int32 word index within the payload)
+W_COL = {"tax": 0, "ytd": 1}
+D_COL = {"tax": 0, "ytd": 1, "next_o_id": 2, "next_deliv": 3}
+C_COL = {"balance": 0, "ytd_payment": 1, "payment_cnt": 2, "delivery_cnt": 3}
+S_COL = {"quantity": 0, "ytd": 1, "order_cnt": 2, "remote_cnt": 3}
+I_COL = {"price": 0, "im_id": 1}
+O_COL = {"c_id": 0, "carrier": 1, "ol_cnt": 2, "entry_d": 3, "o_id": 4,
+         "d_key": 5}
+OL_COL = {"i_id": 0, "supply_w": 1, "quantity": 2, "amount": 3,
+          "delivery_d": 4}
+H_COL = {"amount": 0, "c_id": 1, "w_id": 2}
+
+MAX_O_PER_DISTRICT = 1 << 14  # o_id key-space per district for index keys
+
+
+@dataclasses.dataclass(frozen=True)
+class TPCCConfig:
+    n_warehouses: int = 4
+    customers_per_district: int = 32
+    n_items: int = 512
+    n_threads: int = 16
+    orders_per_thread: int = 128     # extend size for order inserts
+    dist_degree: float = 10.0        # % distributed new-orders (paper knob)
+    skew_alpha: Optional[float] = None
+    n_old_versions: int = 2
+    n_overflow: int = 2
+
+
+class TPCCLayout(NamedTuple):
+    catalog: Catalog
+    order_base: int
+    ol_base: int
+    no_base: int
+    hist_base: int
+
+
+class TPCCState(NamedTuple):
+    nam: store.NAMStore
+    order_index: ri.RangeIndex
+    hist_cursor: jnp.ndarray    # int32 [n_threads]
+
+
+def make_layout(cfg: TPCCConfig) -> TPCCLayout:
+    cat = Catalog(n_servers=cfg.n_warehouses)
+    cat.create_table("warehouse", cfg.n_warehouses, WIDTH, 2)
+    cat.create_table("district", cfg.n_warehouses * DISTRICTS, WIDTH, 4)
+    cat.create_table("customer", cfg.n_warehouses * DISTRICTS
+                     * cfg.customers_per_district, WIDTH, 4)
+    cat.create_table("stock", cfg.n_warehouses * cfg.n_items, WIDTH, 4)
+    cat.create_table("item", cfg.n_items, WIDTH, 2)
+    n_orders = cfg.n_threads * cfg.orders_per_thread
+    o = cat.create_table("orders", n_orders, WIDTH, 6)
+    ol = cat.create_table("order_line", n_orders * MAX_OL, WIDTH, 5)
+    no = cat.create_table("new_order", n_orders, WIDTH, 2)
+    h = cat.create_table("history", n_orders, WIDTH, 3)
+    return TPCCLayout(catalog=cat, order_base=o.base, ol_base=ol.base,
+                      no_base=no.base, hist_base=h.base)
+
+
+# ------------------------------------------------------------- slot math ----
+def w_slot(lay, w):
+    return lay.catalog["warehouse"].base + w
+
+
+def d_slot(lay, w, d):
+    return lay.catalog["district"].base + w * DISTRICTS + d
+
+
+def c_slot(lay, cfg, w, d, c):
+    return lay.catalog["customer"].base \
+        + (w * DISTRICTS + d) * cfg.customers_per_district + c
+
+
+def s_slot(lay, cfg, w, i):
+    return lay.catalog["stock"].base + w * cfg.n_items + i
+
+
+def i_slot(lay, i):
+    return lay.catalog["item"].base + i
+
+
+def order_key(w, d, o_id):
+    return ((w * DISTRICTS + d) * MAX_O_PER_DISTRICT + o_id).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------- loader ----
+def init_tpcc(cfg: TPCCConfig, oracle: VectorOracle,
+              key: jax.Array) -> Tuple[TPCCLayout, TPCCState]:
+    lay = make_layout(cfg)
+    nam = store.init_store(lay.catalog, oracle, n_old=cfg.n_old_versions,
+                           n_overflow=cfg.n_overflow, width=WIDTH,
+                           n_insert_regions=1)
+    tbl = nam.table
+    ks = jax.random.split(key, 6)
+    data = tbl.cur_data
+
+    wspec = lay.catalog["warehouse"]
+    data = data.at[wspec.base:wspec.end, W_COL["tax"]].set(
+        jax.random.randint(ks[0], (wspec.count,), 0, 2000))
+    dspec = lay.catalog["district"]
+    data = data.at[dspec.base:dspec.end, D_COL["tax"]].set(
+        jax.random.randint(ks[1], (dspec.count,), 0, 2000))
+    # d_next_o_id starts at 0; next_deliv at 0
+    ispec = lay.catalog["item"]
+    data = data.at[ispec.base:ispec.end, I_COL["price"]].set(
+        jax.random.randint(ks[2], (ispec.count,), 100, 10000))
+    sspec = lay.catalog["stock"]
+    data = data.at[sspec.base:sspec.end, S_COL["quantity"]].set(
+        jax.random.randint(ks[3], (sspec.count,), 10, 101))
+    tbl = tbl._replace(cur_data=data)
+    nam = nam._replace(table=tbl)
+
+    # insert regions start non-existent (deleted current versions)
+    for name in ("orders", "order_line", "new_order", "history"):
+        spec = lay.catalog[name]
+        nam = store.mark_region_deleted(nam, spec.base, spec.count)
+
+    idx = ri.build(jnp.zeros((0,), jnp.uint32), jnp.zeros((0,), jnp.int32),
+                   capacity=cfg.n_threads * cfg.orders_per_thread,
+                   delta_capacity=4 * cfg.n_threads)
+    return lay, TPCCState(nam=nam, order_index=idx,
+                          hist_cursor=jnp.zeros((cfg.n_threads,), jnp.int32))
+
+
+def _insert_install(tbl, slots, tid_slots, cts, data, mask):
+    """Conflict-free install into thread-private extends (inserts)."""
+    h = hdr_ops.pack(tid_slots.astype(jnp.uint32), cts)
+    out = mvcc.install(tbl, slots, h, data, mask)
+    return out.table
+
+
+# ------------------------------------------------------------- new-order ----
+class NewOrderResult(NamedTuple):
+    state: TPCCState
+    committed: jnp.ndarray
+    snapshot_miss: jnp.ndarray
+    o_id: jnp.ndarray
+    ops: si.OpCounts
+
+
+def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                   oracle: VectorOracle, inp: workload.NewOrderInputs,
+                   rts_vec=None, round_no=0) -> NewOrderResult:
+    """One vectorized round of new-order transactions through SI.
+
+    Read-set (RS=33): [district, warehouse, customer, item*15, stock*15];
+    write-set (WS=16): district (d_next_o_id++) + up to 15 stocks. Inserts
+    (order, new-order, 5..15 order-lines) go to thread-private extends and
+    the order secondary index, inside the transaction boundary (§6.1).
+    """
+    T = inp.w_id.shape[0]
+    line = jnp.arange(MAX_OL)[None, :]
+    line_mask = line < inp.ol_cnt[:, None]
+
+    dsl = d_slot(lay, inp.w_id, inp.d_id)
+    wsl = w_slot(lay, inp.w_id)
+    csl = c_slot(lay, cfg, inp.w_id, inp.d_id, inp.c_id)
+    isl = i_slot(lay, inp.item_ids)
+    ssl = s_slot(lay, cfg, inp.supply_w, inp.item_ids)
+    read_slots = jnp.concatenate(
+        [dsl[:, None], wsl[:, None], csl[:, None], isl, ssl], axis=1)
+    read_mask = jnp.concatenate(
+        [jnp.ones((T, 3), bool), line_mask, line_mask], axis=1)
+    write_ref = jnp.concatenate(
+        [jnp.zeros((T, 1), jnp.int32), 18 + jnp.broadcast_to(line, (T, MAX_OL))],
+        axis=1)
+    write_mask = jnp.concatenate([jnp.ones((T, 1), bool), line_mask], axis=1)
+    tids = jnp.arange(T, dtype=jnp.int32)
+    batch = TxnBatch(tid=tids, read_slots=read_slots, read_mask=read_mask,
+                     write_ref=write_ref, write_mask=write_mask)
+
+    def compute_fn(rh, rd, vec):
+        dist = rd[:, 0, :]
+        dist = dist.at[:, D_COL["next_o_id"]].add(1)
+        stocks = rd[:, 18:, :]
+        q = stocks[:, :, S_COL["quantity"]]
+        newq = jnp.where(q - inp.qty >= 10, q - inp.qty, q - inp.qty + 91)
+        stocks = stocks.at[:, :, S_COL["quantity"]].set(newq)
+        stocks = stocks.at[:, :, S_COL["ytd"]].add(inp.qty)
+        stocks = stocks.at[:, :, S_COL["order_cnt"]].add(1)
+        stocks = stocks.at[:, :, S_COL["remote_cnt"]].add(
+            inp.is_remote.astype(jnp.int32))
+        return jnp.concatenate([dist[:, None, :], stocks], axis=1)
+
+    out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
+                       compute_fn, rts_vec=rts_vec)
+    committed = out.committed
+    tbl, ostate = out.table, out.oracle_state
+
+    # ---- inserts, within the transaction boundary ------------------------
+    o_id = out.read_data[:, 0, D_COL["next_o_id"]]
+    slot_ids = oracle.slot_of_thread(tids)
+    cts = ostate.vec[slot_ids]                   # committed threads' new cts
+    cur = st.nam.extends.cursor[:, 0]
+    local = jnp.clip(cur, 0, cfg.orders_per_thread - 1)
+    oslot = lay.order_base + tids * cfg.orders_per_thread + local
+    noslot = lay.no_base + tids * cfg.orders_per_thread + local
+    olslot = lay.ol_base + (tids * cfg.orders_per_thread + local)[:, None] \
+        * MAX_OL + line
+    can_insert = committed & (cur < cfg.orders_per_thread)
+
+    odata = jnp.zeros((T, WIDTH), jnp.int32)
+    odata = odata.at[:, O_COL["c_id"]].set(inp.c_id)
+    odata = odata.at[:, O_COL["carrier"]].set(-1)
+    odata = odata.at[:, O_COL["ol_cnt"]].set(inp.ol_cnt)
+    odata = odata.at[:, O_COL["entry_d"]].set(round_no)
+    odata = odata.at[:, O_COL["o_id"]].set(o_id)
+    odata = odata.at[:, O_COL["d_key"]].set(inp.w_id * DISTRICTS + inp.d_id)
+    tbl = _insert_install(tbl, oslot, slot_ids, cts, odata, can_insert)
+
+    nodata = jnp.zeros((T, WIDTH), jnp.int32)
+    nodata = nodata.at[:, 0].set(o_id)
+    nodata = nodata.at[:, 1].set(inp.w_id * DISTRICTS + inp.d_id)
+    tbl = _insert_install(tbl, noslot, slot_ids, cts, nodata, can_insert)
+
+    price = out.read_data[:, 3:18, I_COL["price"]]
+    oldata = jnp.zeros((T, MAX_OL, WIDTH), jnp.int32)
+    oldata = oldata.at[:, :, OL_COL["i_id"]].set(inp.item_ids)
+    oldata = oldata.at[:, :, OL_COL["supply_w"]].set(inp.supply_w)
+    oldata = oldata.at[:, :, OL_COL["quantity"]].set(inp.qty)
+    oldata = oldata.at[:, :, OL_COL["amount"]].set(price * inp.qty)
+    oldata = oldata.at[:, :, OL_COL["delivery_d"]].set(-1)
+    tbl = _insert_install(
+        tbl, olslot.reshape(-1),
+        jnp.broadcast_to(slot_ids[:, None], (T, MAX_OL)).reshape(-1),
+        jnp.broadcast_to(cts[:, None], (T, MAX_OL)).reshape(-1),
+        oldata.reshape(-1, WIDTH),
+        (can_insert[:, None] & line_mask).reshape(-1))
+
+    okey = order_key(inp.w_id, inp.d_id, o_id)
+    idx = ri.insert(st.order_index, okey, oslot, mask=can_insert)
+
+    nam = st.nam._replace(
+        table=tbl, oracle_state=ostate,
+        extends=store.ExtendState(
+            cursor=st.nam.extends.cursor.at[:, 0].add(
+                can_insert.astype(jnp.int32))))
+    return NewOrderResult(
+        state=TPCCState(nam=nam, order_index=idx, hist_cursor=st.hist_cursor),
+        committed=committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
+        ops=out.ops)
+
+
+# --------------------------------------------------------------- payment ----
+def payment_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                  oracle: VectorOracle, inp: workload.PaymentInputs,
+                  rts_vec=None):
+    T = inp.w_id.shape[0]
+    read_slots = jnp.stack(
+        [w_slot(lay, inp.w_id), d_slot(lay, inp.w_id, inp.d_id),
+         c_slot(lay, cfg, inp.c_w_id, inp.d_id, inp.c_id)], axis=1)
+    batch = TxnBatch(
+        tid=jnp.arange(T, dtype=jnp.int32),
+        read_slots=read_slots, read_mask=jnp.ones((T, 3), bool),
+        write_ref=jnp.broadcast_to(jnp.arange(3)[None, :], (T, 3)).astype(
+            jnp.int32),
+        write_mask=jnp.ones((T, 3), bool))
+
+    def compute_fn(rh, rd, vec):
+        w = rd[:, 0, :].at[:, W_COL["ytd"]].add(inp.amount)
+        d = rd[:, 1, :].at[:, D_COL["ytd"]].add(inp.amount)
+        c = rd[:, 2, :]
+        c = c.at[:, C_COL["balance"]].add(-inp.amount)
+        c = c.at[:, C_COL["ytd_payment"]].add(inp.amount)
+        c = c.at[:, C_COL["payment_cnt"]].add(1)
+        return jnp.stack([w, d, c], axis=1)
+
+    out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
+                       compute_fn, rts_vec=rts_vec)
+    tbl = out.table
+    # history insert (thread-private extend)
+    tids = jnp.arange(T, dtype=jnp.int32)
+    slot_ids = oracle.slot_of_thread(tids)
+    cts = out.oracle_state.vec[slot_ids]
+    cur = st.hist_cursor
+    local = jnp.clip(cur, 0, cfg.orders_per_thread - 1)
+    hslot = lay.hist_base + tids * cfg.orders_per_thread + local
+    can = out.committed & (cur < cfg.orders_per_thread)
+    hdata = jnp.zeros((T, WIDTH), jnp.int32)
+    hdata = hdata.at[:, H_COL["amount"]].set(inp.amount)
+    hdata = hdata.at[:, H_COL["c_id"]].set(inp.c_id)
+    hdata = hdata.at[:, H_COL["w_id"]].set(inp.w_id)
+    tbl = _insert_install(tbl, hslot, slot_ids, cts, hdata, can)
+    nam = st.nam._replace(table=tbl, oracle_state=out.oracle_state)
+    new_st = TPCCState(nam=nam, order_index=st.order_index,
+                       hist_cursor=cur + can.astype(jnp.int32))
+    return new_st, out.committed, out.ops
+
+
+# ----------------------------------------------------- read-only queries ----
+def orderstatus(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                oracle: VectorOracle, w_id, d_id, c_id):
+    """Read-only: customer + their latest order + its order lines.
+
+    Under SI, read-only transactions never abort and never validate — the
+    paper's motivation for SI over serializability (§1.2).
+    """
+    vec = oracle.read(st.nam.oracle_state)
+    csl = c_slot(lay, cfg, w_id, d_id, c_id)
+    cust = mvcc.read_visible(st.nam.table, jnp.atleast_1d(csl), vec)
+    hi = order_key(w_id, d_id, jnp.asarray(MAX_O_PER_DISTRICT - 1))
+    k, oslot, found = ri.lookup_max_below(st.order_index,
+                                          jnp.atleast_1d(hi))
+    ordr = mvcc.read_visible(st.nam.table,
+                             jnp.where(found, oslot, 0), vec)
+    return cust, ordr, found
+
+
+def stocklevel(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+               oracle: VectorOracle, w_id, d_id, threshold: int,
+               last_n: int = 20):
+    """Read-only: distinct items in the last ``last_n`` orders' lines whose
+    stock is below ``threshold`` — exercised via index range scan + bulk
+    visible reads (the 'single RDMA request scans' of §5.1)."""
+    vec = oracle.read(st.nam.oracle_state)
+    dsl = d_slot(lay, w_id, d_id)
+    dist = mvcc.read_visible(st.nam.table, jnp.atleast_1d(dsl), vec)
+    next_o = dist.data[0, D_COL["next_o_id"]]
+    lo = order_key(w_id, d_id, jnp.maximum(next_o - last_n, 0))
+    hi = order_key(w_id, d_id, next_o)
+    k, oslots, n = ri.range_scan(st.order_index, lo[None], hi[None],
+                                 max_results=last_n)
+    oslots = jnp.where(oslots[0] >= 0, oslots[0], lay.order_base)
+    valid = (k[0] != ri.SENTINEL)
+    # order lines are contiguous with each order's extend slot
+    rel = oslots - lay.order_base
+    ol = (lay.ol_base + rel[:, None] * MAX_OL
+          + jnp.arange(MAX_OL)[None, :]).reshape(-1)
+    olr = mvcc.read_visible(st.nam.table, ol, vec)
+    items = olr.data[:, OL_COL["i_id"]]
+    ol_ok = olr.found & jnp.repeat(valid, MAX_OL)
+    ssl = s_slot(lay, cfg, jnp.broadcast_to(w_id, items.shape), items)
+    stk = mvcc.read_visible(st.nam.table, ssl, vec)
+    low = ol_ok & stk.found & (stk.data[:, S_COL["quantity"]] < threshold)
+    # distinct items: count unique item ids among low ones
+    marked = jnp.zeros((cfg.n_items,), jnp.int32).at[
+        jnp.where(low, items, cfg.n_items)].max(1, mode="drop")
+    return jnp.sum(marked)
+
+
+# -------------------------------------------------------------- delivery ----
+def delivery_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                   oracle: VectorOracle, w_id, d_id, carrier, round_no=0,
+                   rts_vec=None):
+    """Deliver the oldest undelivered order of (w,d): bump the district's
+    delivery cursor, stamp the order's carrier, credit the customer.
+
+    Dependent read (district → order slot) costs an extra round trip: a
+    snapshot pre-read locates the order, then the SI round validates the
+    district version — any race re-runs via abort, keeping atomicity.
+    """
+    T = w_id.shape[0]
+    vec = oracle.read(st.nam.oracle_state) if rts_vec is None else rts_vec
+    dsl = d_slot(lay, w_id, d_id)
+    pre = mvcc.read_visible(st.nam.table, dsl, vec)
+    deliv_o = pre.data[:, D_COL["next_deliv"]]
+    has_order = deliv_o < pre.data[:, D_COL["next_o_id"]]
+    okey = order_key(w_id, d_id, deliv_o)
+    k, oslot, idx_found = ri.lookup_max_below(st.order_index,
+                                              okey + jnp.uint32(1))
+    found = idx_found & (k == okey) & has_order
+    oslot = jnp.where(found, oslot, lay.order_base)
+    ordr = mvcc.read_visible(st.nam.table, oslot, vec)
+    c_id = ordr.data[:, O_COL["c_id"]]
+    csl = c_slot(lay, cfg, w_id, d_id, jnp.where(found, c_id, 0))
+
+    read_slots = jnp.stack([dsl, oslot, csl], axis=1)
+    write_mask = jnp.stack([found, found, found], axis=1)
+    batch = TxnBatch(
+        tid=jnp.arange(T, dtype=jnp.int32),
+        read_slots=read_slots,
+        read_mask=jnp.concatenate(
+            [jnp.ones((T, 1), bool), found[:, None], found[:, None]], 1),
+        write_ref=jnp.broadcast_to(jnp.arange(3)[None, :], (T, 3)).astype(
+            jnp.int32),
+        write_mask=write_mask)
+
+    def compute_fn(rh, rd, v):
+        d = rd[:, 0, :].at[:, D_COL["next_deliv"]].add(1)
+        o = rd[:, 1, :].at[:, O_COL["carrier"]].set(carrier)
+        c = rd[:, 2, :]
+        c = c.at[:, C_COL["balance"]].add(100)  # simplified OL amount credit
+        c = c.at[:, C_COL["delivery_cnt"]].add(1)
+        return jnp.stack([d, o, c], axis=1)
+
+    out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
+                       compute_fn, rts_vec=rts_vec)
+    nam = st.nam._replace(table=out.table, oracle_state=out.oracle_state)
+    return (TPCCState(nam=nam, order_index=st.order_index,
+                      hist_cursor=st.hist_cursor),
+            out.committed & found, out.ops)

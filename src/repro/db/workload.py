@@ -1,0 +1,108 @@
+"""TPC-C workload generation: skew, distribution degree, transaction mix.
+
+Knobs reproduce the paper's experiment axes:
+* ``dist_degree`` — probability (%) that a new-order sources at least one item
+  from a *remote* warehouse (paper default 10 %; Exp-3 sweeps 0→100 %).
+* ``skew_alpha`` — item popularity: uniform (None) or zipf(α) with the
+  paper's Exp-4 settings α ∈ {0.8, 0.9, 1.0, 2.0}.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# standard TPC-C mix (§7: new-order reported, "up to 45% of the benchmark")
+MIX = {"neworder": 0.45, "payment": 0.43, "orderstatus": 0.04,
+       "delivery": 0.04, "stocklevel": 0.04}
+
+
+def zipf_logits(n_items: int, alpha: Optional[float]) -> jnp.ndarray:
+    """Log-probabilities of item popularity (rank-ordered)."""
+    if alpha is None:
+        return jnp.zeros((n_items,), jnp.float32)
+    ranks = jnp.arange(1, n_items + 1, dtype=jnp.float32)
+    return -alpha * jnp.log(ranks)
+
+
+class NewOrderInputs(NamedTuple):
+    w_id: jnp.ndarray        # int32 [T] home warehouse
+    d_id: jnp.ndarray        # int32 [T] district 0..9
+    c_id: jnp.ndarray        # int32 [T] customer
+    ol_cnt: jnp.ndarray      # int32 [T] 5..15 items
+    item_ids: jnp.ndarray    # int32 [T, 15]
+    supply_w: jnp.ndarray    # int32 [T, 15] (== w_id unless remote)
+    qty: jnp.ndarray         # int32 [T, 15] 1..10
+    is_remote: jnp.ndarray   # bool  [T, 15]
+
+
+def gen_neworder(key, n_txns: int, n_warehouses: int, n_items: int,
+                 customers_per_district: int, home_w: Optional[jnp.ndarray],
+                 dist_degree: float, item_logits: jnp.ndarray,
+                 max_ol: int = 15) -> NewOrderInputs:
+    """Sample a batch of new-order transactions.
+
+    ``home_w``: fixed home warehouse per thread (locality routing) or None
+    for uniform. ``dist_degree`` in [0,100]: chance the order is a
+    *distributed* transaction; a distributed order draws every supply
+    warehouse uniformly from the remote ones (paper §7.3's knob).
+    """
+    ks = jax.random.split(key, 8)
+    if home_w is None:
+        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
+    else:
+        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
+    d_id = jax.random.randint(ks[1], (n_txns,), 0, 10)
+    c_id = jax.random.randint(ks[2], (n_txns,), 0, customers_per_district)
+    ol_cnt = jax.random.randint(ks[3], (n_txns,), 5, max_ol + 1)
+    # distinct items per order (TPC-C order lines), sampled without
+    # replacement via Gumbel top-k — skew across transactions is preserved,
+    # which is what drives Exp-4 contention
+    gumbel = jax.random.gumbel(ks[4], (n_txns, item_logits.shape[0]))
+    _, item_ids = jax.lax.top_k(item_logits[None, :] + gumbel, max_ol)
+    item_ids = item_ids.astype(jnp.int32)
+    is_dist = jax.random.uniform(ks[5], (n_txns,)) < dist_degree / 100.0
+    remote_w = jax.random.randint(ks[6], (n_txns, max_ol), 0,
+                                  jnp.maximum(n_warehouses - 1, 1))
+    remote_w = jnp.where(remote_w >= w_id[:, None], remote_w + 1, remote_w)
+    remote_w = jnp.clip(remote_w, 0, n_warehouses - 1)
+    # a distributed order sources each line remotely w.p. ~item (std: ≥1)
+    line_remote = jax.random.uniform(ks[7], (n_txns, max_ol)) < 0.5
+    line_remote = line_remote.at[:, 0].set(True)   # guarantee ≥1 remote line
+    is_remote = is_dist[:, None] & line_remote & (n_warehouses > 1)
+    supply_w = jnp.where(is_remote, remote_w, w_id[:, None])
+    qty = jax.random.randint(ks[3], (n_txns, max_ol), 1, 11)
+    return NewOrderInputs(w_id=w_id.astype(jnp.int32), d_id=d_id, c_id=c_id,
+                          ol_cnt=ol_cnt, item_ids=item_ids,
+                          supply_w=supply_w.astype(jnp.int32), qty=qty,
+                          is_remote=is_remote)
+
+
+class PaymentInputs(NamedTuple):
+    w_id: jnp.ndarray
+    d_id: jnp.ndarray
+    c_id: jnp.ndarray
+    c_w_id: jnp.ndarray     # customer's warehouse (15 % remote per spec)
+    amount: jnp.ndarray     # int32 (cents)
+
+
+def gen_payment(key, n_txns: int, n_warehouses: int,
+                customers_per_district: int,
+                home_w: Optional[jnp.ndarray] = None) -> PaymentInputs:
+    ks = jax.random.split(key, 5)
+    if home_w is None:
+        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
+    else:
+        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
+    d_id = jax.random.randint(ks[1], (n_txns,), 0, 10)
+    c_id = jax.random.randint(ks[2], (n_txns,), 0, customers_per_district)
+    remote = (jax.random.uniform(ks[3], (n_txns,)) < 0.15) \
+        & (n_warehouses > 1)
+    rw = jax.random.randint(ks[3], (n_txns,), 0,
+                            jnp.maximum(n_warehouses - 1, 1))
+    rw = jnp.where(rw >= w_id, rw + 1, rw)
+    c_w_id = jnp.where(remote, jnp.clip(rw, 0, n_warehouses - 1), w_id)
+    amount = jax.random.randint(ks[4], (n_txns,), 100, 500000)
+    return PaymentInputs(w_id=w_id.astype(jnp.int32), d_id=d_id, c_id=c_id,
+                         c_w_id=c_w_id.astype(jnp.int32), amount=amount)

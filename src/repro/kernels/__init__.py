@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package: kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper, backend auto-select), ref.py
+(pure-jnp oracle — the exact code the model/DB stack runs, so kernels are
+validated against production numerics). Validation runs in interpret mode on
+CPU (tests/test_kernels.py sweeps shapes and dtypes).
+"""

@@ -1,0 +1,132 @@
+"""Flash attention Pallas TPU kernel: GQA + sliding window + logit softcap.
+
+TPU-native design (not a CUDA port): the grid is
+``(batch·q_heads, q_blocks, k_blocks)`` with the trailing k dimension
+sequential, so the online-softmax accumulators live in VMEM scratch and
+persist across k steps — the MXU sees back-to-back ``[bq, d] × [d, bk]``
+matmuls from VMEM while the next K/V blocks stream HBM→VMEM behind them
+(Pallas double-buffers blocked operands automatically). GQA is zero-copy:
+the K/V BlockSpec index_map folds the head group (``bh // g``), so grouped
+query heads read the same K/V blocks straight from HBM. Causal and
+sliding-window structure is exploited by ``@pl.when``-guarding whole k
+blocks, so out-of-window blocks never touch the compute units.
+
+Block shapes are MXU/VPU aligned: bq, bk multiples of 128 (the systolic
+array's native tile), d = head_dim lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, bq: int, bk: int, n_k: int, causal: bool,
+                  window, softcap, seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level reachability: skip k blocks no q row can see
+    conds = []
+    if causal:
+        conds.append(k_start <= q_start + bq - 1)
+    if window is not None:
+        conds.append(k_start + bk - 1 >= q_start - window + 1)
+    needed = functools.reduce(jnp.logical_and, conds) if conds \
+        else (ki == ki)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                    # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                  # [bq]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_folded(q, k, v, *, g: int = 1, causal: bool = True,
+                           window=None, softcap=None, bq: int = 128,
+                           bk: int = 128, scale=None,
+                           interpret: bool = False):
+    """q: [B·Hq, Sq, D]; k, v: [B·Hkv, Sk, D]; g = Hq // Hkv (GQA group).
+
+    Head bh of q attends K/V head bh // g — realized purely in the K/V
+    BlockSpec index_map (no repeat/copy). Returns [B·Hq, Sq, D].
+    """
+    BHq, Sq, D = q.shape
+    BHkv, Sk, _ = k.shape
+    assert BHq == BHkv * g, (BHq, BHkv, g)
+    scale = D ** -0.5 if scale is None else scale
+    bq = min(bq, max(Sq, 8))
+    bk = min(bk, Sk)
+    n_q = -(-Sq // bq)
+    n_k = -(-Sk // bk)
+    pad_q = n_q * bq - Sq
+    pad_k = n_k * bk - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, bq=bq, bk=bk, n_k=n_k, causal=causal,
+        window=window, softcap=softcap, seq_q=Sq, seq_k=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(BHq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHq, n_q * bq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,33 @@
+"""Jit'd public wrapper: [B, S, H, D] layout in, GQA folding, backend pick.
+
+``interpret=None`` auto-selects: compiled kernel on TPU, interpret mode
+elsewhere (CPU validation). The wrapper is shard_map-friendly: it sees only
+the local shard of heads/batch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_folded
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    bq=128, bk=128, interpret=None):
+    """q: [B, Sq, Hq, D]; k, v: [B, Sk, Hkv, D] → [B, Sq, Hq, D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    of = flash_attention_folded(qf, kf, vf, g=g, causal=causal,
+                                window=window, softcap=softcap, bq=bq,
+                                bk=bk, interpret=interpret)
+    return of.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

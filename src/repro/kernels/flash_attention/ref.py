@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Delegates to models.common.chunked_attention — the same code the model stack
+uses — so the kernel is validated against production numerics, not a
+separate re-implementation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """q: [B, Sq, Hq, D]; k, v: [B, Sk, Hkv, D] → [B, Sq, Hq, D]."""
+    B, Sq = q.shape[0], q.shape[1]
+    Sk = k.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    pos_k = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+    return common.chunked_attention(
+        q, k, v, positions_q=pos_q, positions_k=pos_k, causal=causal,
+        window=window, attn_cap=softcap, scale=scale,
+        chunk=min(512, Sk))

@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the hash-probe + visibility kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.hash_probe.kernel import hash_probe as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes", "bq",
+                                             "interpret"))
+def hash_probe(table_keys, table_vals, hdr_meta, hdr_cts, ts_vec, queries,
+               *, max_probes=16, bq=256, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(table_keys, table_vals, hdr_meta, hdr_cts, ts_vec,
+                   queries, max_probes=max_probes, bq=bq,
+                   interpret=interpret)

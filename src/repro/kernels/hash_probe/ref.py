@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: hashtable.lookup + header visibility (production code)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashtable as ht, header as hdr_ops
+
+
+def hash_probe_ref(table_keys, table_vals, hdr_meta, hdr_cts, ts_vec,
+                   queries, *, max_probes: int = 16):
+    table = ht.HashTable(keys=table_keys, vals=table_vals)
+    keys1 = queries + jnp.uint32(1)
+    base = ht._hash(queries, table.n_buckets)
+    B = table.n_buckets
+
+    def body(p, carry):
+        vals, found, done = carry
+        idx = jnp.mod(base + p, B)
+        k = table.keys[idx]
+        key_hit = ~done & (k == keys1)
+        hdr = jnp.stack([hdr_meta[idx], hdr_cts[idx]], axis=-1)
+        visible = hdr_ops.visible(hdr, ts_vec) & ~hdr_ops.is_deleted(hdr)
+        hit = key_hit & visible
+        empty = ~done & (k == jnp.uint32(0))
+        vals = jnp.where(hit, table.vals[idx], vals)
+        found = found | hit
+        done = done | hit | empty | key_hit
+        return vals, found, done
+
+    vals = jnp.full(queries.shape, -1, jnp.int32)
+    found = jnp.zeros(queries.shape, bool)
+    done = jnp.zeros(queries.shape, bool)
+    vals, found, _ = jax.lax.fori_loop(0, max_probes, body,
+                                       (vals, found, done))
+    return vals, found

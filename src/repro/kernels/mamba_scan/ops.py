@@ -1,0 +1,26 @@
+"""Jit'd wrapper for the chunked selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def mamba_scan(dt, x, Bm, Cm, A_log, D_skip, *, bd=256, chunk=16,
+               interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, Di = x.shape
+    pad = (-S) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y = _kernel(dt, x, Bm, Cm, A_log, D_skip, bd=bd, chunk=chunk,
+                interpret=interpret)
+    return y[:, :S]

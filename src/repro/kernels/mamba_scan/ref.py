@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: the same discretization + linear_rnn used by the model
+stack (models.recurrent._mamba_core math, post-projection slice)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.recurrent import linear_rnn
+
+
+def mamba_scan_ref(dt, x, Bm, Cm, A_log, D_skip):
+    B, S, Di = x.shape
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None, None])
+    b = (dt * x).astype(jnp.float32)[..., None] \
+        * Bm.astype(jnp.float32)[:, :, None, :]
+    h0 = jnp.zeros((B, Di, A.shape[1]), jnp.float32)
+    hs, _ = linear_rnn(a, b, h0, chunk=16)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm.astype(jnp.float32))
+    return (y + D_skip[None, None] * x).astype(x.dtype)

@@ -1,0 +1,91 @@
+"""Grouped expert matmul (MoE FFN) Pallas TPU kernel.
+
+Computes ``out[e] = act(x[e] @ w_gate[e]) * (x[e] @ w_in[e]) @ w_out[e]`` —
+the whole gated expert FFN fused in one kernel so the [C, F] intermediate
+never round-trips to HBM. Grid ``(E, C/bc, F/bf)`` with the trailing F
+dimension sequential: each step computes a [bc, bf] tile of both gate and up
+projections on the MXU, applies the activation on the VPU, multiplies into
+w_out's [bf, D] tile, and accumulates the output [bc, D] in VMEM scratch —
+the classic K-blocked matmul, with K = d_ff.
+
+Block shapes default to MXU-native 128 multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, wg_ref, wi_ref, wo_ref, o_ref, acc_scr, *,
+                n_f: int, activation: str):
+    fi = pl.program_id(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)                 # [bc, D]
+    wg = wg_ref[0].astype(jnp.float32)               # [D, bf]
+    wi = wi_ref[0].astype(jnp.float32)
+    wo = wo_ref[0].astype(jnp.float32)               # [bf, D]
+    g = jax.lax.dot_general(x, wg, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = jax.lax.dot_general(x, wi, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if activation == "silu":
+        a = g * jax.nn.sigmoid(g)
+    elif activation == "gelu":
+        a = jax.nn.gelu(g)
+    else:  # sq_relu
+        r = jnp.maximum(h, 0.0)
+        a = jnp.ones_like(g)
+        h = r * r
+    acc_scr[...] += jax.lax.dot_general(a * h, wo,
+                                        (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+
+    @pl.when(fi == n_f - 1)
+    def _finalize():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_gmm(x, w_gate, w_in, w_out, *, activation: str = "silu",
+            bc: int = 128, bf: int = 512, interpret: bool = False):
+    """x: [E, C, D]; w_gate/w_in: [E, D, F]; w_out: [E, F, D] → [E, C, D]."""
+    E, C, D = x.shape
+    F = w_in.shape[2]
+    bc = min(bc, C)
+    bf = min(bf, F)
+    n_c = -(-C // bc)
+    n_f = -(-F // bf)
+    pad_c = n_c * bc - C
+    pad_f = n_f * bf - F
+    if pad_c:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, 0)))
+    if pad_f:
+        # zero-padded FFN columns contribute act(0)·0 = 0 for all supported
+        # activations, so the accumulated output is unchanged
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, pad_f)))
+        w_in = jnp.pad(w_in, ((0, 0), (0, 0), (0, pad_f)))
+        w_out = jnp.pad(w_out, ((0, 0), (0, pad_f), (0, 0)))
+
+    kernel = functools.partial(_gmm_kernel, n_f=n_f, activation=activation)
+    out = pl.pallas_call(
+        kernel,
+        grid=(E, n_c, n_f),
+        in_specs=[
+            pl.BlockSpec((1, bc, D), lambda e, ci, fi: (e, ci, 0)),
+            pl.BlockSpec((1, D, bf), lambda e, ci, fi: (e, 0, fi)),
+            pl.BlockSpec((1, D, bf), lambda e, ci, fi: (e, 0, fi)),
+            pl.BlockSpec((1, bf, D), lambda e, ci, fi: (e, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, D), lambda e, ci, fi: (e, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, n_c * bc, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, D), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_in, w_out)
+    return out[:, :C]

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the grouped expert FFN kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gmm.kernel import moe_gmm as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bc", "bf",
+                                             "interpret"))
+def moe_gmm(x, w_gate, w_in, w_out, *, activation="silu", bc=128, bf=512,
+            interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(x, w_gate, w_in, w_out, activation=activation, bc=bc,
+                   bf=bf, interpret=interpret)

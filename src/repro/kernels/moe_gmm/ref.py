@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the grouped expert FFN (same math as models.moe)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(x, w_gate, w_in, w_out, *, activation: str = "silu"):
+    g = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w_gate.astype(jnp.float32))
+    h = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w_in.astype(jnp.float32))
+    if activation == "silu":
+        a = jax.nn.silu(g)
+    elif activation == "gelu":
+        a = jax.nn.gelu(g)
+    else:
+        r = jnp.maximum(h, 0.0)
+        h = r * r
+        a = jnp.ones_like(h)
+    out = jnp.einsum("ecf,efd->ecd", a * h, w_out.astype(jnp.float32))
+    return out.astype(x.dtype)

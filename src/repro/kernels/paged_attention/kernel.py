@@ -1,0 +1,120 @@
+"""Paged decode attention Pallas TPU kernel.
+
+Decode-time attention where K/V live in the NAM page pool: the kernel walks
+the sequence's page table *in-kernel* via scalar prefetch — the page table
+and kv lengths are SMEM-prefetched so each grid step's K/V block is DMA'd
+straight from the right page (``index_map`` reads the page id), no gather
+materialization in HBM (the pure-jnp oracle does the gather; see ref.py).
+
+Grid: ``(batch, kv_heads, n_pages)`` — trailing page dimension sequential,
+online-softmax accumulators in VMEM scratch (the flash pattern at page
+granularity). GQA: all g grouped query heads ride in the q block ([g, D] per
+(b, h)), so the MXU computes ``[g, D] × [D, ps]`` per page.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, ps: int, n_pages: int,
+                  window, softcap):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[b]
+    page_mapped = pt_ref[b, pi] >= 0
+    first_tok = pi * ps
+    in_range = first_tok < kv_len
+    if window is not None:
+        in_range &= first_tok + ps - 1 >= kv_len - 1 - window + 1
+
+    @pl.when(page_mapped & in_range)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [g, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)             # [ps, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = first_tok + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
+        if window is not None:
+            mask &= (kv_len - 1) - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pool, v_pool, page_table, kv_len, *, window=None,
+                    softcap=None, scale=None, interpret: bool = False):
+    """q: [B, Hq, D]; k/v_pool: [P, ps, Hkv, D]; page_table: [B, n_pages]
+    int32 (-1 = unmapped); kv_len: [B]. Returns [B, Hq, D].
+
+    kv_len counts tokens ALREADY in the pool (the current token's K/V must
+    be written first — engine.write_token does exactly that).
+    """
+    B, Hq, D = q.shape
+    P, ps, Hkv, _ = k_pool.shape
+    n_pages = page_table.shape[1]
+    g = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qf = q.reshape(B, Hkv, g, D)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, ps=ps,
+                               n_pages=n_pages, window=window,
+                               softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, pi, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, pi, pt, ln: (
+                             jnp.maximum(pt[b, pi], 0), 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, pi, pt, ln: (
+                             jnp.maximum(pt[b, pi], 0), 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D),
+                               lambda b, h, pi, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        interpret=interpret,
+    )(page_table, kv_len, qf, k_pool, v_pool)
+    return out.reshape(B, Hq, D)

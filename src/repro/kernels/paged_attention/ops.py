@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the paged decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "interpret"))
+def paged_attention(q, k_pool, v_pool, page_table, kv_len, *, window=None,
+                    softcap=None, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k_pool, v_pool, page_table, kv_len, window=window,
+                   softcap=softcap, interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for paged decode attention: materializing gather +
+models.common.decode_attention (production numerics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.serve import kvcache as kvc
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, kv_len, *,
+                        window=None, softcap=None, scale=None):
+    B = q.shape[0]
+    n_pages = page_table.shape[1]
+    ps = k_pool.shape[1]
+    data = kvc.PageData(k=k_pool, v=v_pool)
+    table = kvc.SeqTable(page_table=page_table, kv_len=kv_len,
+                         active=jnp.ones((B,), bool))
+    kc, vc = kvc.gather_kv(data, table, jnp.arange(B), n_pages * ps)
+    return common.decode_attention(q, kc, vc, kv_len, window=window,
+                                   attn_cap=softcap, scale=scale)

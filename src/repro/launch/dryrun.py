@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the REAL step function (train_step with
+AdamW + remat + microbatching, or prefill/serve step), lowers it with
+ShapeDtypeStruct inputs (no allocation), compiles it for the production mesh,
+and records:
+
+  * memory_analysis()  — per-device bytes (proves it fits),
+  * cost_analysis()    — HLO FLOPs / bytes (roofline compute & memory terms),
+  * collective bytes   — parsed from the partitioned HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute operand+result sizes),
+  * the three roofline terms for TPU v5e constants.
+
+Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` and feed
+EXPERIMENTS.md §Dry-run/§Roofline via benchmarks/roofline_table.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.configs.base import SHAPES, shape_applies
+from repro.launch import hlostats
+from repro.launch import sharding as shp
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+from repro.train import optimizer as opt
+from repro.train.trainstep import make_train_step
+
+# TPU v5e roofline constants (target hardware; CPU is only the lowering host)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (≈ per-chip injection, 1 link)
+
+def _input_structs(model, arch, shape, mesh, n_micro):
+    """(args tuple of ShapeDtypeStruct trees, in_shardings tree, fn)."""
+    params = model.param_shapes()
+    pspec = shp.param_pspecs(params, mesh)
+    if shape.kind == "train":
+        ocfg = opt.AdamWConfig()
+        ostate = jax.eval_shape(opt.init, params)
+        ospec = shp.opt_pspecs(pspec)
+        batch = model.input_specs(shape)
+        bspec = shp.batch_pspecs(arch, shape, mesh)
+        fn = make_train_step(model, ocfg, n_microbatches=n_micro,
+                             grad_specs=pspec)
+        return (params, ostate, batch), (pspec, ospec, bspec), fn
+    if shape.kind == "prefill":
+        batch = model.input_specs(shape)
+        bspec = shp.batch_pspecs(arch, shape, mesh)
+
+        def fn(params, batch):
+            return model.prefill(params, batch, max_len=shape.seq_len)
+        return (params, batch), (pspec, bspec), fn
+    # decode / long_decode
+    cache = model.cache_specs(shape)
+    cspec = shp.cache_pspecs(arch, cache, shape, mesh)
+    tok = model.input_specs(shape)["token"]
+    tspec = shp.batch_pspecs(arch, shape, mesh)["token"]
+
+    def fn(params, cache, token):
+        return model.decode_step(params, cache, token)
+    return (params, cache, tok), (pspec, cspec, tspec), fn
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             n_micro: int = 4, out_dir: str = "experiments/dryrun",
+             policy_name: str = "baseline"):
+    from repro import policy as perf
+    perf.set_policy(policy_name)
+    arch = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applies(arch, shape)
+    mesh_name = "multipod" if multi_pod else "pod"
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "policy": policy_name, "status": "skip", "reason": reason}
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch_id}__{shape_name}__"
+                                     f"{mesh_name}.json")
+    if not ok:
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] {arch_id} × {shape_name} × {mesh_name}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    model = build(arch)
+    t0 = time.time()
+    args, specs, fn = _input_structs(model, arch, shape, mesh, n_micro)
+    with mesh:
+        shardings = shp.to_shardings(specs, mesh)
+        jitted = jax.jit(fn, in_shardings=shardings)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_rec = {"error": str(e)}
+    hlo = compiled.as_text()
+    # trip-count-aware static profile (cost_analysis counts scan bodies once)
+    st = hlostats.analyze(hlo)
+
+    # --- roofline terms (per chip; FLOPs/bytes from the partitioned HLO are
+    # per-program = per-device post-SPMD) ------------------------------------
+    t_compute = st.flops / PEAK_FLOPS
+    t_memory = st.hbm_bytes / HBM_BW
+    t_coll = st.wire_bytes / ICI_BW
+    model_flops = 6 * arch.n_active_params() * shape.seq_len \
+        * shape.global_batch
+    if shape.kind in ("decode", "long_decode"):
+        model_flops = 2 * arch.n_active_params() * shape.global_batch
+    rec.update({
+        "status": "ok", "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops": st.flops, "hlo_bytes": st.hbm_bytes,
+        "raw_cost_analysis": {"flops": flops, "bytes": bytes_acc},
+        "collectives": {k: v for k, v in st.coll.items() if v},
+        "top_collectives": hlostats.top_collectives(st),
+        "memory": mem_rec,
+        "roofline": {
+            "compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll,
+            "dominant": max(
+                [("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_coll)], key=lambda kv: kv[1])[0],
+        },
+        "model_flops_total": model_flops,
+        "useful_flops_ratio":
+            model_flops / max(st.flops * n_chips, 1.0),
+        # roofline fraction: useful model FLOP-time vs the step's bound
+        "roofline_fraction":
+            (model_flops / (n_chips * PEAK_FLOPS))
+            / max(t_compute, t_memory, t_coll, 1e-30),
+    })
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    r = rec["roofline"]
+    print(f"[dryrun] {arch_id} × {shape_name} × {mesh_name}: OK "
+          f"compile={t_compile:.0f}s compute={r['compute_s']:.3f}s "
+          f"mem={r['memory_s']:.3f}s coll={r['collective_s']:.3f}s "
+          f"dominant={r['dominant']} useful={rec['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--micro", type=int, default=4)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--policy", default="baseline",
+                    help="PerfPolicy name from repro.policy.POLICIES")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch_id in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch_id, shape_name, mp, n_micro=args.micro,
+                             out_dir=args.out, policy_name=args.policy)
+                except Exception:
+                    failures.append((arch_id, shape_name, mp))
+                    print(f"[dryrun] FAIL {arch_id} × {shape_name} × "
+                          f"{'multipod' if mp else 'pod'}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"dry-run failures: {failures}")
+    print("[dryrun] ALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production meshes (a FUNCTION, never module-level — importing this module
+must not touch jax device state).
+
+Single pod: 16×16 = 256 chips, axes ("data", "model") — ICI everywhere.
+Multi-pod: 2×16×16 = 512 chips, axes ("pod", "data", "model") — the pod axis
+crosses DCN; weights replicate across pods, gradients reduce over it (with
+optional int8 compression, train/compression.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    assert len(devices) == n, (
+        f"need {n} devices (dryrun.py sets "
+        f"xla_force_host_platform_device_count=512), got "
+        f"{len(jax.devices())}")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate mesh over whatever devices exist (tests/examples)."""
+    import numpy as np
+    devs = jax.devices()
+    d = len(devs) // model_axis
+    return jax.sharding.Mesh(
+        np.asarray(devs[: d * model_axis]).reshape(d, model_axis),
+        ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod rides with data when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,187 @@
+"""Sharding policies: parameter/batch/cache PartitionSpecs per shape kind.
+
+The baseline policy (hillclimbed in EXPERIMENTS.md §Perf):
+
+* **weights** — 2-D sharded: the "feature" dim over ``model`` (tensor
+  parallelism) and the other large dim over ``data`` (FSDP-style storage;
+  GSPMD all-gathers on use). Weights REPLICATE across ``pod`` — cross-pod
+  DCN carries only gradient reductions.
+* **train/prefill activations** — batch over (pod, data); heads/ffn land on
+  ``model`` via the weight shardings.
+* **decode KV caches** — batch over (pod, data), cache *sequence* over
+  ``model`` (uniform across archs — kv-head counts don't always divide the
+  model axis; sequence always does). Attention over the sharded axis becomes
+  partial-softmax + all-reduce, GSPMD-generated.
+* **long_500k** — batch=1: KV sequence over ("data","model") jointly;
+  recurrent state feature dims over ``model``.
+
+Leaf-name pattern → spec. Patterns are matched against
+``jax.tree_util.keystr`` paths of the parameter tree (leading ``n_units``
+stacking axis gets None).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+# (regex on keystr path, PartitionSpec WITHOUT the stacked-unit axis)
+_PARAM_RULES = [
+    (r"\['embed'\]$", P("model", "data")),          # [V, D] vocab→model
+    (r"\['(final_ln|ln1|ln2|ln)'\]$", P()),
+    (r"\['attn'\]\['wq'\]$", P("data", "model")),
+    (r"\['attn'\]\['wk'\]$", P("data", "model")),
+    (r"\['attn'\]\['wv'\]$", P("data", "model")),
+    (r"\['attn'\]\['wo'\]$", P("model", "data")),
+    (r"\['mlp'\]\['w_(in|gate)'\]$", P("data", "model")),
+    (r"\['mlp'\]\['w_out'\]$", P("model", "data")),
+    (r"\['moe'\]\['router'\]$", P("data", None)),
+    (r"\['moe'\]\['w_(in|gate)'\]$", P(None, "data", "model")),
+    (r"\['moe'\]\['w_out'\]$", P(None, "model", "data")),
+    (r"\['mamba'\]\['in_proj'\]$", P("data", "model")),
+    (r"\['mamba'\]\['conv_w'\]$", P(None, "model")),
+    (r"\['mamba'\]\['x_proj'\]$", P("model", None)),
+    (r"\['mamba'\]\['dt_proj'\]$", P(None, "model")),
+    (r"\['mamba'\]\['dt_bias'\]$", P("model")),
+    (r"\['mamba'\]\['A_log'\]$", P("model", None)),
+    (r"\['mamba'\]\['D_skip'\]$", P("model")),
+    (r"\['mamba'\]\['out_proj'\]$", P("model", "data")),
+    (r"\['mlstm'\]\['(wq|wk|wv|w_o)'\]$", P("data", "model")),
+    (r"\['mlstm'\]\['out'\]$", P("model", "data")),
+    (r"\['mlstm'\]\['w_if'\]$", P("data", None)),
+    (r"\['slstm'\]\['w_in'\]$", P("data", "model")),
+    (r"\['slstm'\]\['r'\]$", P(None, None, None)),
+    (r"\['slstm'\]\['bias'\]$", P(None)),
+    (r"\['slstm'\]\['out'\]$", P("data", "model")),
+    (r"\['cross'\].*\['w(q|k|v)'\]$", P("data", "model")),
+    (r"\['cross'\].*\['wo'\]$", P("model", "data")),
+    (r"\['encoder'\].*\['w(q|k|v)'\]$", P("data", "model")),
+    (r"\['encoder'\].*\['wo'\]$", P("model", "data")),
+    (r"\['encoder'\].*\['w_(in|gate)'\]$", P("data", "model")),
+    (r"\['encoder'\].*\['w_out'\]$", P("model", "data")),
+]
+
+
+def _spec_for_path(path: str, ndim: int, stacked: bool) -> P:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            dims = list(spec)
+            if stacked:
+                dims = [None] + dims
+            # pad/trim to rank (scalars / extra dims replicate)
+            dims = (dims + [None] * ndim)[:ndim]
+            return P(*dims)
+    return P(*([None] * ndim))
+
+
+def _divisible(shape, spec: P, mesh) -> P:
+    """Drop axis assignments that don't divide the dimension (e.g. 8 kv
+    heads on a 16-way model axis) — replicate that dim instead."""
+    dims = []
+    for size, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            dims.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        dims.append(ax if size % n == 0 else None)
+    return P(*dims)
+
+
+def param_pspecs(params_tree, mesh, *, stacked_prefixes=("u",)) -> Any:
+    """PartitionSpec tree for a parameter pytree (shapes or arrays)."""
+    from repro import policy
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        stacked = bool(re.match(r"\['(u\d+|cross)'\]", key)) \
+            and not key.endswith("['embed']")
+        # encoder layers are vmap-stacked too
+        if re.match(r"\['encoder'\]\['layers'\]", key):
+            stacked = True
+        if key.endswith("['embed']") \
+                and policy.current().embed_lookup_model_sharded:
+            # §Perf opt-embed: [V, D] with D→model so the token gather is
+            # local (vocab-replicated); the CE head reshards separately.
+            spec = P(None, "model")
+        else:
+            spec = _spec_for_path(key, len(leaf.shape), stacked)
+        specs.append(_divisible(leaf.shape, spec, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Any:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": P(dp, None)}
+        if shape.kind == "train":
+            specs["targets"] = P(dp, None)
+            specs["mask"] = P(dp, None)
+        if cfg.is_encdec:
+            specs["frames"] = P(dp, None, None)
+        if cfg.is_prefix_lm:
+            specs["patches"] = P(dp, None, None)
+        return specs
+    # decode shapes: one token per sequence
+    if shape.global_batch == 1:
+        return {"token": P(None)}
+    return {"token": P(dp)}
+
+
+def cache_pspecs(cfg: ArchConfig, cache_struct, shape: ShapeConfig, mesh):
+    """Spec tree matching a DecodeCache ShapeDtypeStruct tree."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    long = shape.global_batch == 1
+    bspec = None if long else dp
+    seq_axes = ("data", "model") if long else "model"
+
+    def leaf_spec(path, leaf):
+        key = jax.tree_util.keystr(path)
+        nd = len(leaf.shape)
+        if re.search(r"\.slots\[\d+\]\.(k|v)$", key):
+            # [n_units, B, S, Hkv, Dh] — sequence-sharded attention cache
+            return _divisible(leaf.shape,
+                              P(None, bspec, seq_axes, None, None), mesh)
+        if ".mamba.conv" in key:        # [n_units, B, dc-1, Di]
+            return _divisible(leaf.shape, P(None, bspec, None, "model"),
+                              mesh)
+        if ".mamba.ssm" in key:         # [n_units, B, Di, N]
+            return _divisible(leaf.shape, P(None, bspec, "model", None),
+                              mesh)
+        if ".mlstm.C" in key:           # [n_units, B, H, Dh, Dh]
+            return _divisible(leaf.shape,
+                              P(None, bspec, None, "model", None), mesh)
+        if ".mlstm.n" in key:
+            return _divisible(leaf.shape, P(None, bspec, None, "model"),
+                              mesh)
+        if ".mlstm.m" in key:
+            return _divisible(leaf.shape, P(None, bspec, None), mesh)
+        if ".slstm." in key:            # [n_units, B, D]
+            return _divisible(leaf.shape, P(None, bspec, "model"), mesh)
+        if ".kv_len" in key:
+            return _divisible(leaf.shape, P(bspec), mesh)
+        if ".enc_kv" in key:            # [B, Se, D]
+            return _divisible(leaf.shape, P(bspec, None, None), mesh)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_struct)
+
+
+def opt_pspecs(param_specs):
+    """AdamW state inherits parameter shardings (m, v like params)."""
+    from repro.train.optimizer import AdamWState
+    return AdamWState(step=P(), m=param_specs,
+                      v=jax.tree.map(lambda s: s, param_specs))
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+"""Model zoo: all 10 assigned architectures from one pattern-unit LM core."""
+from repro.models import api, blocks, common, moe, recurrent, transformer
+from repro.models.api import Model, build
+
+__all__ = ["api", "blocks", "common", "moe", "recurrent", "transformer",
+           "Model", "build"]

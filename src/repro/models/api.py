@@ -1,0 +1,90 @@
+"""Public model API: build(arch) → Model with init/train/serve entry points
+and ShapeDtypeStruct input specs for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- parameters ------------------------------------------------------
+    def init(self, key, dtype=None):
+        return transformer.init_params(self.cfg, key, dtype)
+
+    def param_shapes(self, dtype=None):
+        """Shape-only parameter tree (for dry-run in_shardings / memory)."""
+        return jax.eval_shape(
+            lambda k: transformer.init_params(self.cfg, k, dtype),
+            jax.random.PRNGKey(0))
+
+    # ---- steps -----------------------------------------------------------
+    def train_loss(self, params, batch):
+        return transformer.train_loss(self.cfg, params, batch)
+
+    def prefill(self, params, batch, max_len: int):
+        return transformer.prefill(self.cfg, params, batch, max_len)
+
+    def decode_step(self, params, cache, token):
+        return transformer.decode_step(self.cfg, params, cache, token)
+
+    # ---- dry-run input specs (ShapeDtypeStruct, never allocated) ---------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "targets": jax.ShapeDtypeStruct((B, S), i32),
+                "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+            }
+            if cfg.is_encdec:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), cfg.param_dtype)
+            if cfg.is_prefix_lm:
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.prefix_len, cfg.d_model), cfg.param_dtype)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.is_encdec:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), cfg.param_dtype)
+            if cfg.is_prefix_lm:
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.prefix_len, cfg.d_model), cfg.param_dtype)
+            return specs
+        # decode / long_decode: one new token against a cache of S tokens
+        return {"token": jax.ShapeDtypeStruct((B,), i32)}
+
+    def cache_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct tree of a DecodeCache holding ``seq_len`` keys."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+
+        def build(key):
+            batch = {"tokens": jnp.zeros((B, 4), jnp.int32)}
+            if cfg.is_encdec:
+                batch["frames"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
+                                            cfg.param_dtype)
+            if cfg.is_prefix_lm:
+                batch["patches"] = jnp.zeros((B, cfg.prefix_len, cfg.d_model),
+                                             cfg.param_dtype)
+            params = transformer.init_params(cfg, key)
+            _, cache = transformer.prefill(cfg, params, batch, max_len=S)
+            return cache
+        return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg)

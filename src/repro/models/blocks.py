@@ -1,0 +1,205 @@
+"""Per-layer blocks: GQA attention (all flavours), MLPs, cross-attention.
+
+Parameter layout conventions (leaf names drive the sharding policy in
+launch/sharding.py):
+  wq [D, Hq*Dh]   wk/wv [D, Hkv*Dh]   wo [Hq*Dh, D]
+  mlp: w_gate/w_in [D, F], w_out [F, D]   (sq_relu: no w_gate)
+  moe: router [D, E], w_gate/w_in [E, D, F], w_out [E, F, D]
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import common, moe as moe_mod, recurrent
+
+
+# ----------------------------------------------------------- attention ----
+def init_attn(key, cfg: ArchConfig, dtype):
+    D, Dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 4)
+    s = D ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (D, cfg.n_heads * Dh)) * s
+               ).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (D, cfg.n_kv_heads * Dh)) * s
+               ).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (D, cfg.n_kv_heads * Dh)) * s
+               ).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (cfg.n_heads * Dh, D))
+               * (cfg.n_heads * Dh) ** -0.5).astype(dtype),
+    }
+
+
+def attn_forward(p, x, positions, cfg: ArchConfig, *, window, causal=True,
+                 prefix_len=None, kv_override=None, chunk=512):
+    """Full-sequence attention (train / prefill). Returns (y, (k, v))."""
+    B, S, D = x.shape
+    Dh = cfg.d_head
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, Dh)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, Dh)
+        v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, Dh)
+        k = common.rope(k, positions, cfg.rope_theta)
+        pos_k = positions
+    else:  # cross-attention: precomputed encoder memory
+        k, v, pos_k = kv_override
+    q = common.rope(q, positions, cfg.rope_theta)
+    o = common.chunked_attention(
+        q, k, v, positions_q=positions, positions_k=pos_k, causal=causal,
+        window=window, prefix_len=prefix_len, attn_cap=cfg.attn_softcap,
+        chunk=min(chunk, k.shape[1]))
+    y = o.reshape(B, S, cfg.n_heads * Dh) @ p["wo"]
+    return y, (k, v)
+
+
+def attn_decode(p, x, k_cache, v_cache, kv_len, cfg: ArchConfig, *, window):
+    """One-token decode. x: [B, 1, D]; caches [B, S, Hkv, Dh]; kv_len [B].
+
+    Writes the new K/V at position kv_len (per sequence) then attends.
+    """
+    B, _, D = x.shape
+    Dh = cfg.d_head
+    pos = kv_len.astype(jnp.int32)
+    q = (x @ p["wq"]).reshape(B, cfg.n_heads, Dh)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, Dh)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, Dh)
+    k = common.rope(k, pos[:, None], cfg.rope_theta)[:, 0]
+    q = common.rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k_cache, v_cache = common.kv_cache_update(k_cache, v_cache, k, v[:, 0],
+                                              pos)
+    o = common.decode_attention(q, k_cache, v_cache, kv_len + 1,
+                                window=window, attn_cap=cfg.attn_softcap)
+    y = o.reshape(B, 1, cfg.n_heads * Dh) @ p["wo"]
+    return y, (k_cache, v_cache)
+
+
+def init_cross_attn(key, cfg: ArchConfig, dtype):
+    return init_attn(key, cfg, dtype)
+
+
+# ----------------------------------------------------------------- MLP ----
+def init_mlp(key, cfg: ArchConfig, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": (jax.random.normal(ks[0], (D, F)) * D ** -0.5).astype(dtype),
+        "w_out": (jax.random.normal(ks[1], (F, D)) * F ** -0.5).astype(dtype),
+    }
+    if cfg.activation != "sq_relu":
+        p["w_gate"] = (jax.random.normal(ks[2], (D, F)) * D ** -0.5
+                       ).astype(dtype)
+    return p
+
+
+def mlp_forward(p, x, cfg: ArchConfig):
+    h = x @ p["w_in"]
+    if cfg.activation == "sq_relu":
+        h = common.activate(h, "sq_relu")
+    else:
+        h = common.activate(x @ p["w_gate"], cfg.activation) * h
+    return h @ p["w_out"]
+
+
+# --------------------------------------------------------- one layer ------
+def init_layer(key, cfg: ArchConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if spec.kind == "attn":
+        p["attn"] = init_attn(ks[0], cfg, dtype)
+    elif spec.kind == "mamba":
+        p["mamba"] = recurrent.init_mamba(ks[0], cfg.d_model, dtype=dtype)
+    elif spec.kind == "mlstm":
+        p["mlstm"] = recurrent.init_mlstm(ks[0], cfg.d_model, cfg.n_heads,
+                                          dtype)
+    elif spec.kind == "slstm":
+        p["slstm"] = recurrent.init_slstm(ks[0], cfg.d_model, cfg.n_heads,
+                                          dtype)
+    if spec.mlp == "dense":
+        p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mlp"] = init_mlp(ks[1], cfg, dtype)
+    elif spec.mlp == "moe":
+        p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                    cfg.n_experts, dtype)
+    return p
+
+
+class LayerCacheSlot(NamedTuple):
+    """Decode-time cache for ONE layer position in the pattern unit, stacked
+    over units by the caller. Unused fields are () placeholders."""
+    k: object = ()
+    v: object = ()
+    mamba: object = ()
+    mlstm: object = ()
+    slstm: object = ()
+
+
+def layer_forward(p, x, positions, cfg: ArchConfig, spec: LayerSpec, *,
+                  prefix_len=None, causal=True):
+    """Train/prefill forward of one layer. Returns (x, cache_slot)."""
+    h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+    slot = LayerCacheSlot()
+    if spec.kind == "attn":
+        y, (k, v) = attn_forward(p["attn"], h, positions, cfg,
+                                 window=spec.window, causal=causal,
+                                 prefix_len=prefix_len)
+        slot = slot._replace(k=k, v=v)
+    elif spec.kind == "mamba":
+        y, mc = recurrent.apply_mamba(p["mamba"], h)
+        slot = slot._replace(mamba=mc)
+    elif spec.kind == "mlstm":
+        y, mc = recurrent.apply_mlstm(p["mlstm"], h, n_heads=cfg.n_heads)
+        slot = slot._replace(mlstm=mc)
+    elif spec.kind == "slstm":
+        y, sc = recurrent.apply_slstm(p["slstm"], h, n_heads=cfg.n_heads)
+        slot = slot._replace(slstm=sc)
+    x = x + common.name_for_remat(y, "block_out")
+    if spec.mlp == "dense":
+        x = x + common.name_for_remat(
+            mlp_forward(p["mlp"], common.rms_norm(x, p["ln2"],
+                                                  cfg.norm_eps), cfg),
+            "block_out")
+    elif spec.mlp == "moe":
+        B, S, D = x.shape
+        h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps).reshape(B * S, D)
+        y2, _ = moe_mod.apply_moe(p["moe"], h2, top_k=cfg.top_k,
+                                  capacity_factor=cfg.capacity_factor)
+        x = x + common.name_for_remat(y2.reshape(B, S, D), "block_out")
+    return x, slot
+
+
+def layer_decode(p, x, cache: LayerCacheSlot, kv_len, cfg: ArchConfig,
+                 spec: LayerSpec):
+    """One-token decode of one layer. Returns (x, new_cache_slot)."""
+    h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        y, (k, v) = attn_decode(p["attn"], h, cache.k, cache.v, kv_len, cfg,
+                                window=spec.window)
+        cache = cache._replace(k=k, v=v)
+    elif spec.kind == "mamba":
+        y, mc = recurrent.apply_mamba(p["mamba"], h, cache.mamba)
+        cache = cache._replace(mamba=mc)
+    elif spec.kind == "mlstm":
+        y, mc = recurrent.apply_mlstm(p["mlstm"], h, cache.mlstm,
+                                      n_heads=cfg.n_heads, chunk=1)
+        cache = cache._replace(mlstm=mc)
+    elif spec.kind == "slstm":
+        y, sc = recurrent.apply_slstm(p["slstm"], h, cache.slstm,
+                                      n_heads=cfg.n_heads)
+        cache = cache._replace(slstm=sc)
+    x = x + y
+    if spec.mlp == "dense":
+        x = x + mlp_forward(p["mlp"], common.rms_norm(x, p["ln2"],
+                                                      cfg.norm_eps), cfg)
+    elif spec.mlp == "moe":
+        B, S, D = x.shape
+        h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps).reshape(B * S, D)
+        y2, _ = moe_mod.apply_moe(p["moe"], h2, top_k=cfg.top_k,
+                                  capacity_factor=max(2.0,
+                                                      cfg.capacity_factor))
+        x = x + y2.reshape(B, S, D)
+    return x, cache

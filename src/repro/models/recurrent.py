@@ -1,0 +1,319 @@
+"""Recurrent blocks: Mamba selective SSM (Jamba) and xLSTM (mLSTM + sLSTM).
+
+All sequence mixing is *chunked*: within a chunk the recurrence is computed
+in closed parallel form, across chunks a small carried state flows through
+``lax.scan`` — O(S/chunk) steps with O(chunk²) or O(chunk) work each, never
+materializing [B, S, d_inner, d_state]. Decode is the exact O(1) recurrent
+step on the carried state — which is what makes these architectures eligible
+for the long_500k shape (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# chunked linear recurrence h_t = a_t ⊙ h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+def linear_rnn(a, b, h0, chunk: int = 16):
+    """a, b: [B, S, ...]; h0: [B, ...]. Returns (outputs [B,S,...], h_last).
+
+    Within a chunk the ``chunk`` steps are unrolled (elementwise FMAs on the
+    VPU); across chunks ``lax.scan`` carries the state.
+    """
+    B, S = a.shape[0], a.shape[1]
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    ap = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                 constant_values=1.0)
+    bp = jnp.pad(b, ((0, 0), (0, pad)) + ((0, 0),) * (b.ndim - 2))
+    ap = ap.reshape((B, n, chunk) + a.shape[2:]).swapaxes(0, 1)
+    bp = bp.reshape((B, n, chunk) + b.shape[2:]).swapaxes(0, 1)
+
+    def body(h, inp):
+        ac, bc = inp
+        outs = []
+        for i in range(chunk):
+            h = ac[:, i] * h + bc[:, i]
+            outs.append(h)
+        return h, jnp.stack(outs, axis=1)
+
+    h_last, outs = jax.lax.scan(body, h0, (ap, bp))
+    outs = outs.swapaxes(0, 1).reshape((B, n * chunk) + a.shape[2:])
+    return outs[:, :S], h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — Jamba's sequence mixer
+# ---------------------------------------------------------------------------
+def init_mamba(key, d_model: int, *, expand: int = 2, d_state: int = 16,
+               d_conv: int = 4, dt_rank: int | None = None, dtype=jnp.bfloat16):
+    di = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d_model, 2 * di)) * s
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, di)) * 0.2).astype(dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, dt_rank + 2 * d_state))
+                   * di ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, di)) * dt_rank ** -0.5
+                    ).astype(dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)
+                                  [None, :], (di, 1))),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d_model)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray   # [B, d_conv-1, Di] — trailing inputs for the conv
+    ssm: jnp.ndarray    # [B, Di, N] — SSM hidden state
+
+
+def mamba_init_cache(batch: int, p, dtype=jnp.float32) -> MambaCache:
+    di = p["dt_proj"].shape[1]
+    n = p["A_log"].shape[1]
+    dc = p["conv_w"].shape[0]
+    return MambaCache(conv=jnp.zeros((batch, dc - 1, di), dtype),
+                      ssm=jnp.zeros((batch, di, n), jnp.float32))
+
+
+def _mamba_core(p, xz, conv_state, ssm_state, chunk: int):
+    """Shared train/decode core. xz: [B, S, 2*Di]."""
+    B, S, _ = xz.shape
+    di = p["dt_proj"].shape[1]
+    x, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv (width 4) with carried state
+    dc = p["conv_w"].shape[0]
+    xc = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    new_conv = xc[:, -(dc - 1):, :]
+    x = sum(xc[:, i:i + S, :] * p["conv_w"][i][None, None, :]
+            for i in range(dc))
+    x = jax.nn.silu(x)
+
+    proj = x @ p["x_proj"]                              # [B,S,R+2N]
+    n_state = p["A_log"].shape[1]
+    dt_r = proj[..., : -2 * n_state]
+    Bm = proj[..., -2 * n_state: -n_state]              # [B,S,N]
+    Cm = proj[..., -n_state:]
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"]
+                         + p["dt_bias"][None, None, :])  # [B,S,Di]
+    A = -jnp.exp(p["A_log"])                            # [Di,N]
+    # discretize: a = exp(dt·A)  b = dt·B·x   (ZOH approx on B)
+    a = jnp.exp(dt[..., None] * A[None, None])          # [B,S,Di,N]
+    b = (dt * x)[..., None] * Bm[:, :, None, :]         # [B,S,Di,N]
+    hs, h_last = linear_rnn(a, b, ssm_state, chunk=chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm) + p["D_skip"][None, None] * x
+    y = y * jax.nn.silu(z)
+    return (y @ p["out_proj"]).astype(xz.dtype), MambaCache(new_conv, h_last)
+
+
+def apply_mamba(p, x, cache: MambaCache | None = None, *, chunk: int = 16):
+    """x: [B, S, D] → (y [B, S, D], new_cache)."""
+    B = x.shape[0]
+    if cache is None:
+        cache = mamba_init_cache(B, p)
+    xz = x @ p["in_proj"]
+    return _mamba_core(p, xz, cache.conv, cache.ssm, chunk)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM's matrix-memory cell), chunked parallel form
+# ---------------------------------------------------------------------------
+def init_mlstm(key, d_model: int, n_heads: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d_model, d_model)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, d_model)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+        "w_if": (jax.random.normal(ks[3], (d_model, 2 * n_heads)) * s
+                 ).astype(jnp.float32),
+        "w_o": (jax.random.normal(ks[4], (d_model, d_model)) * s).astype(dtype),
+        "out": (jax.random.normal(ks[5], (d_model, d_model)) * s).astype(dtype),
+        "ln": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+class MLSTMCache(NamedTuple):
+    C: jnp.ndarray   # [B, H, Dh, Dh] matrix memory
+    n: jnp.ndarray   # [B, H, Dh] normalizer
+    m: jnp.ndarray   # [B, H] gate stabilizer (log-space)
+
+
+def mlstm_init_cache(batch, n_heads, d_head) -> MLSTMCache:
+    return MLSTMCache(C=jnp.zeros((batch, n_heads, d_head, d_head),
+                                  jnp.float32),
+                      n=jnp.zeros((batch, n_heads, d_head), jnp.float32),
+                      m=jnp.full((batch, n_heads), -30.0, jnp.float32))
+
+
+def apply_mlstm(p, x, cache: MLSTMCache | None = None, *, n_heads: int,
+                chunk: int = 64):
+    """Chunked mLSTM with exponential gating + log-space stabilization.
+
+    Within a chunk: quadratic decay-masked attention (exact); across chunks:
+    the (C, n, m) state is carried. Decode (S == 1) is the exact recurrence.
+    """
+    B, S, D = x.shape
+    H = n_heads
+    Dh = D // H
+    if cache is None:
+        cache = mlstm_init_cache(B, H, Dh)
+    q = (x @ p["wq"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3) * Dh ** -0.5
+    v = (x @ p["wv"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+    gates = (x.astype(jnp.float32) @ p["w_if"]).reshape(B, S, H, 2)
+    log_i = -jax.nn.softplus(-gates[..., 0]).transpose(0, 2, 1)  # [B,H,S]
+    log_f = -jax.nn.softplus(-gates[..., 1]).transpose(0, 2, 1)
+
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    lip = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)), constant_values=-30.0)
+    lfp = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+
+    def to_chunks(t):
+        return t.reshape((B, H, n_chunks, chunk) + t.shape[3:]).swapaxes(0, 2) \
+            .swapaxes(1, 2)  # [n_chunks, B, H, chunk, ...]
+
+    def body(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, li, lf = inp                     # [B,H,c,(Dh)]
+        csum_f = jnp.cumsum(lf, axis=-1)             # Σ log f within chunk
+        # decay from state to position t: csum_f[t]; between s<t:
+        # csum_f[t]-csum_f[s] + log_i[s]
+        d_state = csum_f + m[..., None]              # [B,H,c] log scale
+        d_intra = csum_f[..., :, None] - csum_f[..., None, :] \
+            + li[..., None, :]                       # [B,H,c(t),c(s)]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        d_intra = jnp.where(causal[None, None], d_intra, -jnp.inf)
+        m_new = jnp.maximum(jnp.max(d_intra, axis=-1), d_state)  # [B,H,c]
+        m_new = jnp.maximum(m_new, -30.0)
+        w_intra = jnp.exp(d_intra - m_new[..., None])            # [B,H,c,c]
+        w_state = jnp.exp(d_state - m_new)                       # [B,H,c]
+
+        s_qk = jnp.einsum("bhtd,bhsd->bhts", qc.astype(jnp.float32),
+                          kc.astype(jnp.float32))
+        num_intra = jnp.einsum("bhts,bhsd->bhtd", s_qk * w_intra,
+                               vc.astype(jnp.float32))
+        num_state = jnp.einsum("bhtd,bhde->bhte", qc.astype(jnp.float32), C) \
+            * w_state[..., None]
+        den_intra = jnp.einsum("bhts,bhsd->bhtd", s_qk * w_intra,
+                               jnp.ones_like(kc, jnp.float32))
+        den = jnp.einsum("bhtd,bhd->bht", qc.astype(jnp.float32), n) \
+            * w_state + jnp.einsum("bhts->bht", s_qk * w_intra)
+        h = (num_intra + num_state) / jnp.maximum(
+            jnp.abs(den)[..., None], 1.0)
+        del den_intra
+        # ---- state update to end of chunk ---------------------------------
+        tot_f = csum_f[..., -1]                                  # [B,H]
+        m_end = jnp.maximum(tot_f + m, jnp.max(
+            tot_f[..., None] - csum_f + li, axis=-1))
+        m_end = jnp.maximum(m_end, -30.0)
+        w_c = jnp.exp(tot_f + m - m_end)                         # old C scale
+        w_k = jnp.exp(tot_f[..., None] - csum_f + li - m_end[..., None])
+        C_new = C * w_c[..., None, None] + jnp.einsum(
+            "bhsd,bhse->bhde", kc.astype(jnp.float32) * w_k[..., None],
+            vc.astype(jnp.float32))
+        n_new = n * w_c[..., None] + jnp.einsum(
+            "bhsd->bhd", kc.astype(jnp.float32) * w_k[..., None])
+        return (C_new, n_new, m_end), h
+
+    (C, n, m), hs = jax.lax.scan(
+        body, (cache.C, cache.n, cache.m),
+        (to_chunks(qp), to_chunks(kp), to_chunks(vp),
+         lip.reshape(B, H, n_chunks, chunk).transpose(2, 0, 1, 3),
+         lfp.reshape(B, H, n_chunks, chunk).transpose(2, 0, 1, 3)))
+    h = hs.swapaxes(0, 2).swapaxes(0, 1)       # [B,H,n_chunks,chunk,Dh]
+    h = h.reshape(B, H, n_chunks * chunk, Dh)[:, :, :S]
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, D)
+    o = jax.nn.sigmoid(x @ p["w_o"])
+    y = (h.astype(x.dtype) * o) @ p["out"]
+    return y, MLSTMCache(C=C, n=n, m=m)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory cell with recurrent gate connections)
+# ---------------------------------------------------------------------------
+def init_slstm(key, d_model: int, n_heads: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    s = d_model ** -0.5
+    dh = d_model // n_heads
+    return {
+        "w_in": (jax.random.normal(ks[0], (d_model, 4 * d_model)) * s
+                 ).astype(dtype),
+        # block-diagonal recurrent weights: per head [Dh, 4*Dh]
+        "r": (jax.random.normal(ks[1], (n_heads, dh, 4 * dh)) * dh ** -0.5
+              ).astype(jnp.float32),
+        "bias": jnp.zeros((4 * d_model,), jnp.float32),
+        "out": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+    }
+
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray   # [B, D]
+    n: jnp.ndarray   # [B, D]
+    h: jnp.ndarray   # [B, D]
+    m: jnp.ndarray   # [B, D] stabilizer
+
+
+def slstm_init_cache(batch, d_model) -> SLSTMCache:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=z, m=z - 30.0)
+
+
+def apply_slstm(p, x, cache: SLSTMCache | None = None, *, n_heads: int):
+    """Strictly sequential scan (recurrent gate connections), exp gating with
+    the xLSTM stabilizer. x: [B, S, D]."""
+    B, S, D = x.shape
+    H = n_heads
+    Dh = D // H
+    if cache is None:
+        cache = slstm_init_cache(B, D)
+    pre_all = x @ p["w_in"] + p["bias"][None, None]      # [B,S,4D]
+
+    # §Perf iter X2: the time scan is strictly sequential — any feature
+    # sharding turns each of the S steps into an all-reduce. Reshard ONCE so
+    # the scan is embarrassingly parallel over batch on (data, model), then
+    # let the output projection reshard back.
+    from repro import policy as _perf
+    from repro.models import common as _c
+    if _perf.current().recurrent_local:
+        axes = _c._mesh_axes()
+        if axes and "model" in axes:
+            dpm = tuple(a for a in ("pod", "data") if a in axes) + ("model",)
+            if B % _c._axis_size(dpm) == 0:
+                P = jax.sharding.PartitionSpec
+                pre_all = jax.lax.with_sharding_constraint(
+                    pre_all, P(dpm, None, None))
+
+    def step(carry, pre):
+        c, n, h, m = carry
+        hr = h.reshape(B, H, Dh)
+        rec = jnp.einsum("bhd,hdk->bhk", hr, p["r"]).reshape(B, 4 * D)
+        z_, i_, f_, o_ = jnp.split(pre.astype(jnp.float32) + rec, 4, axis=-1)
+        z = jnp.tanh(z_)
+        o = jax.nn.sigmoid(o_)
+        m_new = jnp.maximum(f_ + m, i_)
+        i = jnp.exp(i_ - m_new)
+        f = jnp.exp(f_ + m - m_new)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (cache.c, cache.n, cache.h, cache.m),
+        pre_all.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype) @ p["out"]
+    return y, SLSTMCache(c=c, n=n, h=h, m=m)

@@ -1,0 +1,307 @@
+"""The LM assembled from pattern units, scanned over the layer stack.
+
+The layer stack is ``n_units`` repetitions of the config's pattern unit
+(``cfg.unit()``). Per-unit parameters are stacked on a leading axis and the
+forward pass is one ``lax.scan`` over units — one compiled unit body
+regardless of depth, which keeps 512-device dry-run compiles tractable and is
+also how remat (one policy per unit) is applied.
+
+Entry points:
+  init_params  → parameter pytree
+  train_loss   → scalar loss (chunked CE; never materializes [B,S,V])
+  prefill      → (last_hidden, DecodeCache) — also the encoder pass for
+                 enc-dec and the prefix pass for prefix-LM
+  decode_step  → one-token serve step against a DecodeCache
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks, common, recurrent
+
+
+class DecodeCache(NamedTuple):
+    """Per-unit-position stacked caches + current lengths.
+
+    ``slots[p]`` is a LayerCacheSlot whose arrays carry a leading
+    ``n_units`` axis. ``kv_len``: [B] tokens already in the cache.
+    ``enc_kv``: optional tuple (k, v, pos) per cross-attn position (whisper).
+    """
+    slots: tuple
+    kv_len: jnp.ndarray
+    enc_kv: tuple = ()
+
+
+def init_params(cfg: ArchConfig, key, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    unit = cfg.unit()
+    n_units = cfg.n_units
+    keys = jax.random.split(key, len(unit) + 3)
+    params = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    for pidx, spec in enumerate(unit):
+        def one(k):
+            return blocks.init_layer(k, cfg, spec, dtype)
+        params[f"u{pidx}"] = jax.vmap(one)(
+            jax.random.split(keys[pidx], n_units))
+    if cfg.is_encdec:
+        params["encoder"] = _init_encoder(cfg, keys[-2], dtype)
+        def one_cross(k):
+            ks = jax.random.split(k, 2)
+            return {"ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                    "attn": blocks.init_cross_attn(ks[0], cfg, dtype)}
+        params["cross"] = jax.vmap(one_cross)(
+            jax.random.split(keys[-3], n_units * len(unit)))
+    return params
+
+
+def _init_encoder(cfg: ArchConfig, key, dtype):
+    def one(k):
+        ks = jax.random.split(k, 2)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": blocks.init_attn(ks[0], cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mlp": blocks.init_mlp(ks[1], cfg, dtype),
+        }
+    return {
+        "layers": jax.vmap(one)(jax.random.split(key, cfg.encoder_layers)),
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """Encoder pass (whisper): frames [B, Se, D] — precomputed stub
+    embeddings (the conv frontend is out of scope per the brief)."""
+    B, Se, D = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+
+    def body(x, p):
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, _ = blocks.attn_forward(p["attn"], h, positions, cfg,
+                                   window=None, causal=False)
+        x = x + y
+        h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + blocks.mlp_forward(p["mlp"], h, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, frames, params["encoder"]["layers"])
+    return common.rms_norm(x, params["encoder"]["final_ln"], cfg.norm_eps)
+
+
+def _unit_forward(cfg: ArchConfig, unit, x, positions, unit_params, *,
+                  prefix_len, causal):
+    slots = []
+    for pidx, spec in enumerate(unit):
+        x, slot = blocks.layer_forward(unit_params[pidx], x, positions, cfg,
+                                       spec, prefix_len=prefix_len,
+                                       causal=causal)
+        slots.append(slot)
+    return x, tuple(slots)
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens_or_embeds, *,
+                   prefix_len=None, enc_out=None, causal=True,
+                   collect_cache=False):
+    """Full-sequence forward to final hidden states.
+
+    tokens_or_embeds: int tokens [B, S] or embeddings [B, S, D] (stub
+    frontends feed embeddings directly for the prefix part).
+    Returns (hidden [B,S,D], slots-or-None).
+    """
+    if tokens_or_embeds.ndim == 2:
+        x = common.embed_lookup(params["embed"], tokens_or_embeds)
+    else:
+        x = tokens_or_embeds
+    x = common.pin_batch(x)     # §Perf: undo gather-induced sharding decay
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    unit = cfg.unit()
+
+    def body(x, xs):
+        unit_params, cross_p = xs
+        if cfg.is_encdec:
+            x, slots = _unit_forward_encdec(cfg, unit, x, positions,
+                                            unit_params, cross_p, enc_out,
+                                            prefix_len, causal)
+        else:
+            x, slots = _unit_forward(cfg, unit, x, positions, unit_params,
+                                     prefix_len=prefix_len, causal=causal)
+        return x, slots if collect_cache else None
+
+    unit_params = tuple(params[f"u{p}"] for p in range(len(unit)))
+    if cfg.is_encdec:
+        cross = params["cross"]
+        cross_r = jax.tree.map(
+            lambda a: a.reshape((cfg.n_units, len(unit)) + a.shape[1:]),
+            cross)
+        xs = (unit_params, cross_r)
+    else:
+        xs = (unit_params, None)
+    from repro import policy as perf
+    if perf.current().remat_unit:
+        # §Perf iter 4: remat per scanned unit — backward recomputes the
+        # unit from its [B,S,D] carry instead of saving every intermediate
+        # (at mixtral scale the saved MoE buckets alone are ~TB/device).
+        # §Perf iter 5: additionally save the named block outputs — they are
+        # carry-sized but let the recompute skip attention/MoE (and the
+        # MoE's TP psum, otherwise executed a third time).
+        if perf.current().remat_save_block_out:
+            pol = jax.checkpoint_policies.save_only_these_names("block_out")
+        else:
+            pol = jax.checkpoint_policies.nothing_saveable
+        body = jax.checkpoint(body, policy=pol)
+    x, slots = jax.lax.scan(body, x, xs)
+    x = common.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, slots
+
+
+def _unit_forward_encdec(cfg, unit, x, positions, unit_params, cross_p,
+                         enc_out, prefix_len, causal):
+    slots = []
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1])[None], enc_out.shape[:2])
+    for pidx, spec in enumerate(unit):
+        x, slot = blocks.layer_forward(unit_params[pidx], x, positions, cfg,
+                                       spec, prefix_len=prefix_len,
+                                       causal=causal)
+        cp = jax.tree.map(lambda a: a[pidx], cross_p)
+        h = common.rms_norm(x, cp["ln"], cfg.norm_eps)
+        Bq, Se, D = enc_out.shape
+        k = (enc_out @ cp["attn"]["wk"]).reshape(Bq, Se, cfg.n_kv_heads,
+                                                 cfg.d_head)
+        v = (enc_out @ cp["attn"]["wv"]).reshape(Bq, Se, cfg.n_kv_heads,
+                                                 cfg.d_head)
+        y, _ = blocks.attn_forward(cp["attn"], h, positions, cfg,
+                                   window=None, causal=False,
+                                   kv_override=(k, v, enc_pos))
+        x = x + y
+        slots.append(slot)
+    return x, tuple(slots)
+
+
+def train_loss(cfg: ArchConfig, params, batch) -> jnp.ndarray:
+    """batch: dict with tokens [B,S], targets [B,S], mask [B,S] and optional
+    'frames'/'patches' [B,P,D] stub-frontend embeddings."""
+    enc_out = None
+    prefix_len = None
+    inputs = batch["tokens"]
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["frames"])
+    if cfg.is_prefix_lm:
+        x_tok = common.embed_lookup(params["embed"], batch["tokens"])
+        x = jnp.concatenate([batch["patches"].astype(x_tok.dtype), x_tok], 1)
+        prefix_len = jnp.full((x.shape[0],), cfg.prefix_len, jnp.int32)
+        inputs = x
+    hidden, _ = forward_hidden(cfg, params, inputs, prefix_len=prefix_len,
+                               enc_out=enc_out)
+    if cfg.is_prefix_lm:
+        hidden = hidden[:, cfg.prefix_len:]
+    loss, _ = common.chunked_cross_entropy(
+        hidden, params["embed"], batch["targets"], batch["mask"],
+        logit_cap=cfg.logit_softcap)
+    return loss
+
+
+def _stack_unit_caches(slots):
+    """scan ys: slots is a tuple (per unit position) with leading n_units."""
+    return slots
+
+
+def prefill(cfg: ArchConfig, params, batch, max_len: int):
+    """Run the prompt, build a DecodeCache padded to ``max_len``."""
+    enc_out = None
+    prefix_len = None
+    inputs = batch["tokens"]
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["frames"])
+    if cfg.is_prefix_lm:
+        x_tok = common.embed_lookup(params["embed"], batch["tokens"])
+        x = jnp.concatenate([batch["patches"].astype(x_tok.dtype), x_tok], 1)
+        prefix_len = jnp.full((x.shape[0],), cfg.prefix_len, jnp.int32)
+        inputs = x
+    hidden, slots = forward_hidden(cfg, params, inputs,
+                                   prefix_len=prefix_len, enc_out=enc_out,
+                                   collect_cache=True)
+    B = hidden.shape[0]
+    S = inputs.shape[1]
+    # prefix-LM inputs include the patch prefix; always leave ≥1 decode slot
+    max_len = max(max_len, S + 1)
+    unit = cfg.unit()
+
+    def pad_cache(slot, spec):
+        upd = {}
+        if spec.kind == "attn":
+            k, v = slot.k, slot.v   # [n_units, B, S, Hkv, Dh]
+            pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+            upd = dict(k=jnp.pad(k, pad), v=jnp.pad(v, pad))
+        elif spec.kind == "mamba":
+            upd = dict(mamba=slot.mamba)
+        elif spec.kind == "mlstm":
+            upd = dict(mlstm=slot.mlstm)
+        elif spec.kind == "slstm":
+            upd = dict(slstm=slot.slstm)
+        return slot._replace(**upd)
+
+    slots = tuple(pad_cache(s, spec) for s, spec in zip(slots, unit))
+    enc_kv = ()
+    if cfg.is_encdec:
+        enc_kv = (enc_out,)
+    kv_len = jnp.full((B,), S, jnp.int32)
+    return hidden[:, -1], DecodeCache(slots=slots, kv_len=kv_len,
+                                      enc_kv=enc_kv)
+
+
+def decode_step(cfg: ArchConfig, params, cache: DecodeCache, token):
+    """token [B] int32 → (logits [B, V], new cache). One serve step."""
+    x = common.pin_batch(
+        common.embed_lookup(params["embed"], token)[:, None, :])  # [B,1,D]
+    unit = cfg.unit()
+    unit_params = tuple(params[f"u{p}"] for p in range(len(unit)))
+    if cfg.is_encdec:
+        cross = jax.tree.map(
+            lambda a: a.reshape((cfg.n_units, len(unit)) + a.shape[1:]),
+            params["cross"])
+        enc_out = cache.enc_kv[0]
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1])[None], enc_out.shape[:2])
+
+    def body(x, xs):
+        unit_params, unit_cache, cross_p = xs
+        new_slots = []
+        for pidx, spec in enumerate(unit):
+            slot = jax.tree.map(lambda a: a, unit_cache[pidx])
+            x, slot = blocks.layer_decode(unit_params[pidx], x, slot,
+                                          cache.kv_len, cfg, spec)
+            if cfg.is_encdec:
+                cp = jax.tree.map(lambda a: a[pidx], cross_p)
+                h = common.rms_norm(x, cp["ln"], cfg.norm_eps)
+                B, Se, D = enc_out.shape
+                k = (enc_out @ cp["attn"]["wk"]).reshape(
+                    B, Se, cfg.n_kv_heads, cfg.d_head)
+                v = (enc_out @ cp["attn"]["wv"]).reshape(
+                    B, Se, cfg.n_kv_heads, cfg.d_head)
+                pos_q = cache.kv_len[:, None]
+                y, _ = blocks.attn_forward(cp["attn"], h, pos_q, cfg,
+                                           window=None, causal=False,
+                                           kv_override=(k, v, enc_pos))
+                x = x + y
+            new_slots.append(slot)
+        return x, tuple(new_slots)
+
+    xs = (unit_params, cache.slots,
+          cross if cfg.is_encdec else None)
+    x, new_slots = jax.lax.scan(body, x, xs)
+    x = common.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    logits = common.softcap(logits, cfg.logit_softcap)
+    return logits, cache._replace(slots=new_slots,
+                                  kv_len=cache.kv_len + 1)

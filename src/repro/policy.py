@@ -1,0 +1,134 @@
+"""Perf policy — the hillclimb knobs (EXPERIMENTS.md §Perf).
+
+Every optimization found during the roofline hillclimb is a *named policy
+field* so the paper-faithful baseline and each optimized variant stay
+reproducible side by side:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+        --shape train_4k --policy opt
+
+Fields (each maps to one §Perf hypothesis):
+
+  * ``embed_lookup_model_sharded`` — store the embedding D-sharded over
+    ``model`` for the lookup path (baseline: (vocab→model, D→data), which
+    GSPMD cannot partition a gather against — it replicates the table AND
+    the gather output, destroying the activations' batch sharding for the
+    rest of the step: the "poisoned batch" pathology).
+  * ``constrain_activations`` — re-pin activations to (batch→data,
+    D→model-free) right after the embedding lookup and between blocks,
+    stopping any residual sharding decay.
+  * ``ce_vocab_sharded`` — reshard the tied head to (vocab→model) once per
+    step and compute chunked CE with vocab-sharded logits (all-reduces two
+    [B,chunk] f32 scalars per chunk instead of a [B,chunk,V] tensor).
+  * ``ar_dtype_bf16`` — cast tensor-parallel partial sums to bf16 before
+    the all-reduce (half the dominant wire bytes; accumulate locally f32).
+  * ``remat`` — activation checkpoint policy for the train step.
+  * ``n_microbatches`` — grad-accum depth: 1 gathers weights once per step;
+    4 bounds activation memory at 4x weight re-gather cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfPolicy:
+    name: str = "baseline"
+    embed_lookup_model_sharded: bool = False
+    constrain_activations: bool = False
+    ce_vocab_sharded: bool = False
+    ar_dtype_bf16: bool = False
+    remat: str = "nothing_saveable"
+    n_microbatches: Optional[int] = None    # None → driver default
+    # §Perf iter 4: checkpoint the scanned unit body. Without it the unit
+    # scan saves EVERY intermediate (incl. [E,C,D] MoE buckets) for the
+    # backward pass — at mixtral scale 1.15 TB/device of saved residuals.
+    remat_unit: bool = False
+    # §Perf iter 5: with remat_unit, also save named block outputs so the
+    # backward recompute skips re-running attention/MoE bodies (and their
+    # collectives). Costs 2 carry-sized saves per unit.
+    remat_save_block_out: bool = False
+    # §Perf iter 7: constrain weight grads to the parameter sharding inside
+    # the accumulation loop (reduce-scatter, not all-reduce + full buffer).
+    pin_grads: bool = False
+    # §Perf iter D1: decode KV write via shard_map (owner-shard local row
+    # update) instead of a GSPMD-rewritten replicated f32 scatter.
+    kv_local_update: bool = False
+    # §Perf iter X2 (xlstm): pin the sLSTM time-scan carry to batch over
+    # (data, model) jointly — one reshard per layer replaces a [B,4D]
+    # all-reduce per TIMESTEP (4096/step). (X1 — replicating the recurrent
+    # params over model — was REFUTED: duplicate compute + f32 gathers.)
+    recurrent_local: bool = False
+
+
+POLICIES = {
+    "baseline": PerfPolicy(),
+    # incremental steps of the hillclimb (§Perf iteration log)
+    "opt-embed": PerfPolicy(name="opt-embed",
+                            embed_lookup_model_sharded=True,
+                            constrain_activations=True),
+    "opt-remat-unit": PerfPolicy(name="opt-remat-unit",
+                                 embed_lookup_model_sharded=True,
+                                 constrain_activations=True,
+                                 ce_vocab_sharded=True,
+                                 ar_dtype_bf16=True,
+                                 n_microbatches=1,
+                                 remat_unit=True),
+    "opt-ce": PerfPolicy(name="opt-ce",
+                         embed_lookup_model_sharded=True,
+                         constrain_activations=True,
+                         ce_vocab_sharded=True),
+    "opt-bf16": PerfPolicy(name="opt-bf16",
+                           embed_lookup_model_sharded=True,
+                           constrain_activations=True,
+                           ce_vocab_sharded=True,
+                           ar_dtype_bf16=True),
+    # §Perf iteration 3 decomposition
+    "opt-micro1": PerfPolicy(name="opt-micro1",
+                             embed_lookup_model_sharded=True,
+                             constrain_activations=True,
+                             ce_vocab_sharded=True,
+                             ar_dtype_bf16=True,
+                             n_microbatches=1),
+    "opt-dots": PerfPolicy(name="opt-dots",
+                           embed_lookup_model_sharded=True,
+                           constrain_activations=True,
+                           ce_vocab_sharded=True,
+                           ar_dtype_bf16=True,
+                           remat="dots_saveable"),
+    # the full beyond-paper-baseline variant (== opt-micro1: dots_saveable
+    # was REFUTED in §Perf iter 3b — saved dot outputs cost more HBM traffic
+    # than the remat recompute they avoid at these shapes)
+    "opt": PerfPolicy(name="opt",
+                      embed_lookup_model_sharded=True,
+                      constrain_activations=True,
+                      ce_vocab_sharded=True,
+                      ar_dtype_bf16=True,
+                      remat="nothing_saveable",
+                      n_microbatches=1,
+                      remat_unit=True,
+                      remat_save_block_out=True,
+                      pin_grads=True,
+                      kv_local_update=True,
+                      recurrent_local=False),  # X1+X2 both REFUTED (§Perf)
+    # §Perf iter D2: decode/long_decode want the opposite trade — weights
+    # stay fully sharded (the activations are ONE token, so AR-ing them is
+    # nearly free, while re-gathering weights per step is not). Only the
+    # owner-shard KV write stays on.
+    "opt-decode": PerfPolicy(name="opt-decode", kv_local_update=True),
+}
+
+_CURRENT = POLICIES["baseline"]
+
+
+def set_policy(p) -> PerfPolicy:
+    global _CURRENT
+    if isinstance(p, str):
+        p = POLICIES[p]
+    _CURRENT = p
+    return p
+
+
+def current() -> PerfPolicy:
+    return _CURRENT

@@ -1,0 +1,2 @@
+"""Serving substrate: NAM paged KV cache + continuous-batching engine."""
+from repro.serve import engine, kvcache

@@ -1,0 +1,232 @@
+"""Continuous-batching serving engine over the NAM page pool.
+
+The engine is a "compute server": stateless decode logic over externalized
+state (page meta + per-layer page data + sequence table), so any engine
+replica can serve any sequence — work stealing and elastic scale-out fall
+out of the NAM design (DESIGN.md §3.1). Page IDs form ONE shared space:
+:class:`~repro.serve.kvcache.PageMeta` governs allocation, every layer
+position stores its K/V at the same ids (vLLM-style, but with NAM-DB's
+versioned headers + tournament allocation instead of a host-locked free
+list).
+
+Driver-level simplifications (documented): single-host Python loop, greedy
+sampling, attention-pattern architectures (SSM archs serve through
+models/api with O(1) state — pages are attention-specific).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common, moe as moe_mod, transformer
+from repro.models.blocks import mlp_forward
+from repro.serve import kvcache as kvc
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_seqs: int = 8
+    page_size: int = 16
+    n_pages: int = 256
+    max_len: int = 256
+    eos: int = 1
+
+
+class EngineState(NamedTuple):
+    meta: kvc.PageMeta
+    data: tuple             # per unit-position: PageData stacked [n_units, …]
+    table: kvc.SeqTable
+    tokens: jnp.ndarray     # int32 [max_seqs] — last emitted token
+    done: jnp.ndarray       # bool  [max_seqs]
+    epoch: jnp.ndarray      # uint32 allocation epoch (page header cts)
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig):
+        unit = cfg.unit()
+        assert all(s.kind == "attn" for s in unit), \
+            "paged engine serves attention archs; SSM archs use models/api"
+        self.cfg, self.ecfg, self.params = cfg, ecfg, params
+        self.unit = unit
+        self.n_units = cfg.n_units
+
+    def init_state(self) -> EngineState:
+        cfg, e = self.cfg, self.ecfg
+        data = tuple(
+            jax.vmap(lambda _: kvc.init_data(
+                e.n_pages, e.page_size, cfg.n_kv_heads, cfg.d_head))(
+                jnp.arange(self.n_units))
+            for _ in self.unit)
+        return EngineState(
+            meta=kvc.init_meta(e.n_pages),
+            data=data,
+            table=kvc.init_seq_table(e.max_seqs, e.max_len // e.page_size),
+            tokens=jnp.zeros((e.max_seqs,), jnp.int32),
+            done=jnp.ones((e.max_seqs,), bool),
+            epoch=jnp.zeros((), jnp.uint32))
+
+    # ------------------------------------------------------------ admit ----
+    def admit(self, state: EngineState, prompts: List[np.ndarray]
+              ) -> EngineState:
+        """Admit requests into free slots: tournament page allocation, model
+        prefill, bulk page writes, first-token sample."""
+        e, cfg = self.ecfg, self.cfg
+        free_slots = np.flatnonzero(~np.asarray(state.table.active))
+        prompts = prompts[: len(free_slots)]
+        if not prompts:
+            return state
+        B = len(prompts)
+        S = max(len(p) for p in prompts)
+        S = -(-S // e.page_size) * e.page_size
+        toks = np.zeros((B, S), np.int32)
+        lens = np.array([len(p) for p in prompts], np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+        seq_ids = jnp.asarray(free_slots[:B], jnp.int32)
+        want = jnp.asarray(-(-lens // e.page_size), jnp.int32)
+        epoch = state.epoch + 1
+
+        meta, pages, ok = kvc.alloc_pages(state.meta, want, seq_ids, epoch)
+        assert bool(np.asarray(ok).all()), "page pool exhausted"
+        table = kvc.map_pages(state.table, seq_ids, pages,
+                              jnp.zeros((B,), jnp.int32))
+        table = table._replace(
+            kv_len=table.kv_len.at[seq_ids].set(jnp.asarray(lens)),
+            active=table.active.at[seq_ids].set(True))
+
+        hidden, slots = transformer.forward_hidden(
+            cfg, self.params, jnp.asarray(toks), collect_cache=True)
+        data = []
+        for pidx in range(len(self.unit)):
+            k, v = slots[pidx].k, slots[pidx].v  # [n_units, B, S, Hkv, Dh]
+            data.append(jax.vmap(
+                lambda d, kk, vv: kvc.write_prefill(
+                    d, table, seq_ids, kk, vv, jnp.asarray(lens))
+            )(state.data[pidx], k, v))
+
+        idx = jnp.asarray(lens) - 1
+        last_h = hidden[jnp.arange(B), idx]
+        logits = last_h.astype(jnp.float32) @ self.params["embed"].T
+        logits = common.softcap(logits, cfg.logit_softcap)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return EngineState(
+            meta=meta, data=tuple(data), table=table,
+            tokens=state.tokens.at[seq_ids].set(first),
+            done=state.done.at[seq_ids].set(False), epoch=epoch)
+
+    # ----------------------------------------------------------- decode ----
+    def ensure_capacity(self, state: EngineState) -> EngineState:
+        """Allocate a fresh page for any active sequence whose next token
+        would cross into an unmapped page (transactional, batched)."""
+        e = self.ecfg
+        table = state.table
+        kv_len = np.asarray(table.kv_len)
+        # a sequence at max_len is out of cache room: force-finish it
+        at_cap = jnp.asarray(kv_len >= e.max_len) & table.active
+        if bool(np.asarray(at_cap).any()):
+            state = state._replace(done=state.done | at_cap)
+        active = np.asarray(table.active & ~state.done)
+        pt = np.asarray(table.page_table)
+        need = [s for s in np.flatnonzero(active)
+                if pt[s, kv_len[s] // e.page_size] < 0]
+        if not need:
+            return state
+        seq_ids = jnp.asarray(need, jnp.int32)
+        want = jnp.ones((len(need),), jnp.int32)
+        epoch = state.epoch + 1
+        meta, pages, ok = kvc.alloc_pages(state.meta, want, seq_ids, epoch)
+        assert bool(np.asarray(ok).all()), "page pool exhausted mid-decode"
+        start = jnp.asarray(kv_len[need] // e.page_size, jnp.int32)
+        table = kvc.map_pages(table, seq_ids, pages, start)
+        return state._replace(meta=meta, table=table, epoch=epoch)
+
+    def decode_step(self, state: EngineState) -> EngineState:
+        """One token for every active sequence (the batched serve step)."""
+        cfg, e = self.cfg, self.ecfg
+        state = self.ensure_capacity(state)
+        table = state.table
+        B = e.max_seqs
+        seq_ids = jnp.arange(B, dtype=jnp.int32)
+        active = table.active & ~state.done
+        x = self.params["embed"][state.tokens][:, None, :]
+        pos = table.kv_len
+        data = list(state.data)
+
+        for pidx, spec in enumerate(self.unit):
+            unit_p = self.params[f"u{pidx}"]
+
+            def unit_body(x, xs):
+                p, d = xs
+                h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+                q = (h @ p["attn"]["wq"]).reshape(B, cfg.n_heads, cfg.d_head)
+                k = (h @ p["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads,
+                                                  cfg.d_head)
+                v = (h @ p["attn"]["wv"]).reshape(B, cfg.n_kv_heads,
+                                                  cfg.d_head)
+                k = common.rope(k, pos[:, None], cfg.rope_theta)[:, 0]
+                q = common.rope(q[:, None], pos[:, None],
+                                cfg.rope_theta)[:, 0]
+                d = kvc.write_token(d, table, seq_ids, k, v)
+                kc, vc = kvc.gather_kv(d, table, seq_ids, e.max_len)
+                o = common.decode_attention(q, kc, vc, pos + 1,
+                                            window=spec.window,
+                                            attn_cap=cfg.attn_softcap)
+                y = o.reshape(B, 1, cfg.n_heads * cfg.d_head) @ p["attn"]["wo"]
+                x2 = x + y
+                if spec.mlp == "dense":
+                    h2 = common.rms_norm(x2, p["ln2"], cfg.norm_eps)
+                    x2 = x2 + mlp_forward(p["mlp"], h2, cfg)
+                elif spec.mlp == "moe":
+                    h2 = common.rms_norm(x2, p["ln2"], cfg.norm_eps)
+                    y2, _ = moe_mod.apply_moe(
+                        p["moe"], h2.reshape(B, cfg.d_model),
+                        top_k=cfg.top_k,
+                        capacity_factor=max(2.0, cfg.capacity_factor))
+                    x2 = x2 + y2.reshape(B, 1, cfg.d_model)
+                return x2, d
+
+            x, data[pidx] = jax.lax.scan(unit_body, x,
+                                         (unit_p, data[pidx]))
+
+        x = common.rms_norm(x, self.params["final_ln"], cfg.norm_eps)
+        logits = x[:, 0].astype(jnp.float32) @ self.params["embed"].T
+        logits = common.softcap(logits, cfg.logit_softcap)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, state.tokens)
+        done = state.done | (active & (nxt == e.eos))
+        table = table._replace(
+            kv_len=jnp.where(active, table.kv_len + 1, table.kv_len))
+        return state._replace(data=tuple(data), table=table, tokens=nxt,
+                              done=done)
+
+    # ---------------------------------------------------------- release ----
+    def release_finished(self, state: EngineState) -> EngineState:
+        finished = np.flatnonzero(
+            np.asarray(state.table.active & state.done))
+        if len(finished) == 0:
+            return state
+        meta, table = kvc.release_seqs(
+            state.meta, state.table, jnp.asarray(finished, jnp.int32))
+        return state._replace(meta=meta, table=table)
+
+    def serve(self, prompts: List[np.ndarray], max_new: int = 16):
+        """Convenience driver: admit → decode until done → harvest."""
+        state = self.init_state()
+        state = self.admit(state, prompts)
+        outs = [[] for _ in prompts]
+        for i, _ in enumerate(prompts):
+            outs[i].append(int(state.tokens[i]))
+        for _ in range(max_new - 1):
+            if bool(np.asarray(state.done[: len(prompts)]).all()):
+                break
+            state = self.decode_step(state)
+            for i in range(len(prompts)):
+                if not bool(state.done[i]):
+                    outs[i].append(int(state.tokens[i]))
+        state = self.release_finished(state)
+        return outs, state

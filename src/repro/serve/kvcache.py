@@ -1,0 +1,217 @@
+"""NAMKVCache: the paged KV cache as a network-attached-memory pool
+(DESIGN.md §3.1 — the paper's architecture applied to LM serving).
+
+Mapping of NAM-DB concepts:
+
+* **memory pool**   → a shared page-ID space: one :class:`PageMeta`
+  (8-byte versioned headers + refcounts) governs allocation; per-layer
+  :class:`PageData` arrays store K/V at those page ids, sharded over the
+  mesh. Compute workers address any page — locality is a toggle.
+* **record header** → one header per page (``core.header``): thread-id =
+  allocating worker, cts = allocation epoch, deleted-bit = freed.
+* **extend allocator / CAS** → allocation is a *batched deterministic
+  tournament* (prefix-sum arbitration over the free list): many scheduler
+  threads claim pages concurrently, no two winners collide, no global lock.
+* **MVCC / snapshot reads** → prefix sharing: shared pages are refcounted;
+  release sets the deleted-bit only at refcount 0, so concurrent readers
+  finish their snapshot safely (GSI semantics).
+* **GC** → deleted pages re-enter the free list (version-mover discipline).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import header as hdr_ops
+
+MAX_PAGES_PER_ALLOC = 64  # static bound on pages claimed per request
+
+
+class PageMeta(NamedTuple):
+    """Allocation state over the shared page-ID space."""
+    hdr: jnp.ndarray        # uint32 [P, 2] — page version headers
+    refcount: jnp.ndarray   # int32 [P]
+
+    @property
+    def n_pages(self) -> int:
+        return self.hdr.shape[0]
+
+
+class PageData(NamedTuple):
+    """K/V payload of one layer position (callers stack over units)."""
+    k: jnp.ndarray          # [P, page, Hkv, Dh]
+    v: jnp.ndarray
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
+class SeqTable(NamedTuple):
+    page_table: jnp.ndarray   # int32 [max_seqs, max_pages] (-1 = unmapped)
+    kv_len: jnp.ndarray       # int32 [max_seqs]
+    active: jnp.ndarray       # bool  [max_seqs]
+
+
+def init_meta(n_pages: int) -> PageMeta:
+    return PageMeta(
+        hdr=hdr_ops.pack(jnp.zeros((n_pages,), jnp.uint32),
+                         jnp.zeros((n_pages,), jnp.uint32),
+                         deleted=jnp.ones((n_pages,), bool)),
+        refcount=jnp.zeros((n_pages,), jnp.int32))
+
+
+def init_data(n_pages: int, page_size: int, n_kv: int, d_head: int,
+              dtype=jnp.bfloat16) -> PageData:
+    return PageData(
+        k=jnp.zeros((n_pages, page_size, n_kv, d_head), dtype),
+        v=jnp.zeros((n_pages, page_size, n_kv, d_head), dtype))
+
+
+def init_seq_table(max_seqs: int, max_pages: int) -> SeqTable:
+    return SeqTable(
+        page_table=jnp.full((max_seqs, max_pages), -1, jnp.int32),
+        kv_len=jnp.zeros((max_seqs,), jnp.int32),
+        active=jnp.zeros((max_seqs,), bool))
+
+
+# ------------------------------------------------------------ allocation ----
+def alloc_pages(meta: PageMeta, want, tid, epoch
+                ) -> Tuple[PageMeta, jnp.ndarray, jnp.ndarray]:
+    """Transactionally claim pages for a batch of requesters.
+
+    want: int32 [R] pages needed; tid: int32 [R] worker ids. Free pages
+    (deleted, refcount 0) are assigned by prefix-sum arbitration — the
+    vectorized equivalent of per-page CAS claims with a deterministic winner.
+    Returns (meta', pages int32 [R, MAX_PAGES_PER_ALLOC] (-1 padded), ok[R]).
+    """
+    R = want.shape[0]
+    P = meta.n_pages
+    free = hdr_ops.is_deleted(meta.hdr) & (meta.refcount == 0)
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+    n_free = jnp.sum(free.astype(jnp.int32))
+    offsets = jnp.cumsum(want) - want
+    ok = (offsets + want) <= n_free
+    free_idx = jnp.full((P,), -1, jnp.int32)
+    free_idx = free_idx.at[jnp.where(free, free_rank, P)].set(
+        jnp.arange(P, dtype=jnp.int32), mode="drop")
+    j = jnp.arange(MAX_PAGES_PER_ALLOC)
+    take = (j[None, :] < want[:, None]) & ok[:, None]
+    slot = jnp.where(take, offsets[:, None] + j[None, :], P - 1)
+    pages = jnp.where(take, free_idx[jnp.clip(slot, 0, P - 1)], -1)
+    flat = pages.reshape(-1)
+    claim = flat >= 0
+    idx = jnp.where(claim, flat, P)
+    new_hdr = hdr_ops.pack(
+        jnp.broadcast_to(tid.astype(jnp.uint32)[:, None],
+                         (R, MAX_PAGES_PER_ALLOC)).reshape(-1),
+        jnp.broadcast_to(jnp.asarray(epoch, jnp.uint32),
+                         (R * MAX_PAGES_PER_ALLOC,)))
+    hdr = meta.hdr.at[idx].set(new_hdr, mode="drop")
+    ref = meta.refcount.at[idx].add(jnp.where(claim, 1, 0), mode="drop")
+    return PageMeta(hdr=hdr, refcount=ref), pages, ok
+
+
+def map_pages(table: SeqTable, seq_ids, pages, start_page) -> SeqTable:
+    """Install allocated pages into sequences' page tables."""
+    R, W = pages.shape
+    maxP = table.page_table.shape[1]
+    j = jnp.arange(W)
+    valid = pages >= 0
+    col = jnp.where(valid, start_page[:, None] + j[None, :], maxP)
+    row = jnp.broadcast_to(seq_ids[:, None], (R, W))
+    pt = table.page_table.at[
+        jnp.where(valid, row, table.page_table.shape[0]), col
+    ].set(pages, mode="drop")
+    return table._replace(page_table=pt)
+
+
+def release_seqs(meta: PageMeta, table: SeqTable, seq_ids
+                 ) -> Tuple[PageMeta, SeqTable]:
+    """Free sequences: decref their pages; refcount 0 ⇒ deleted (reusable).
+    Shared prefix pages survive until their last reader releases."""
+    pt = table.page_table[seq_ids]
+    valid = pt >= 0
+    idx = jnp.where(valid, pt, meta.n_pages)
+    ref = meta.refcount.at[idx.reshape(-1)].add(
+        jnp.where(valid.reshape(-1), -1, 0), mode="drop")
+    freed = ref <= 0
+    hdr = hdr_ops.with_deleted(meta.hdr,
+                               freed | hdr_ops.is_deleted(meta.hdr))
+    table = table._replace(
+        page_table=table.page_table.at[seq_ids].set(-1),
+        active=table.active.at[seq_ids].set(False),
+        kv_len=table.kv_len.at[seq_ids].set(0))
+    return PageMeta(hdr=hdr, refcount=jnp.maximum(ref, 0)), table
+
+
+def share_prefix(meta: PageMeta, table: SeqTable, src_seq, dst_seq,
+                 n_pages_shared) -> Tuple[PageMeta, SeqTable]:
+    """Prefix caching: dst reuses src's first n pages (MVCC snapshot read —
+    zero copy; refcounts pin the shared pages)."""
+    maxP = table.page_table.shape[1]
+    j = jnp.arange(maxP)
+    src_pages = table.page_table[src_seq]
+    share = (j < n_pages_shared) & (src_pages >= 0)
+    pt = table.page_table.at[dst_seq].set(
+        jnp.where(share, src_pages, table.page_table[dst_seq]))
+    idx = jnp.where(share, src_pages, meta.n_pages)
+    ref = meta.refcount.at[idx].add(jnp.where(share, 1, 0), mode="drop")
+    return meta._replace(refcount=ref), table._replace(page_table=pt)
+
+
+# ------------------------------------------------------------- data path ----
+def write_token(data: PageData, table: SeqTable, seq_ids, k_new, v_new
+                ) -> PageData:
+    """Append one token's K/V per sequence at position kv_len."""
+    ps = data.page_size
+    P = data.k.shape[0]
+    pos = table.kv_len[seq_ids]
+    page_of = table.page_table[seq_ids, pos // ps]
+    off = pos % ps
+    ok = page_of >= 0
+    idx = jnp.where(ok, page_of, P)
+    k = data.k.at[idx, off].set(k_new.astype(data.k.dtype), mode="drop")
+    v = data.v.at[idx, off].set(v_new.astype(data.v.dtype), mode="drop")
+    return PageData(k=k, v=v)
+
+
+def write_prefill(data: PageData, table: SeqTable, seq_ids, k_seq, v_seq,
+                  lens) -> PageData:
+    """Bulk-write prompt K/V ([B, S, Hkv, Dh]) into mapped pages."""
+    B, S, Hkv, Dh = k_seq.shape
+    ps = data.page_size
+    P = data.k.shape[0]
+    pos = jnp.arange(S)[None, :]
+    page_of = table.page_table[seq_ids[:, None], pos // ps]
+    ok = (pos < lens[:, None]) & (page_of >= 0)
+    idx = jnp.where(ok, page_of, P).reshape(-1)
+    off = jnp.broadcast_to(pos % ps, (B, S)).reshape(-1)
+    k = data.k.at[idx, off].set(
+        k_seq.reshape(-1, Hkv, Dh).astype(data.k.dtype), mode="drop")
+    v = data.v.at[idx, off].set(
+        v_seq.reshape(-1, Hkv, Dh).astype(data.v.dtype), mode="drop")
+    return PageData(k=k, v=v)
+
+
+def gather_kv(data: PageData, table: SeqTable, seq_ids, max_len: int):
+    """Materialize [B, max_len, Hkv, Dh] views (pure-jnp oracle path; the
+    Pallas paged_attention kernel walks the page table in-kernel instead)."""
+    ps = data.page_size
+    n_pages = max_len // ps
+    pt = table.page_table[seq_ids, :n_pages]
+    ok = pt >= 0
+    idx = jnp.where(ok, pt, 0)
+    k = jnp.where(ok[:, :, None, None, None], data.k[idx], 0)
+    v = jnp.where(ok[:, :, None, None, None], data.v[idx], 0)
+    B = pt.shape[0]
+    return (k.reshape(B, n_pages * ps, *k.shape[3:]),
+            v.reshape(B, n_pages * ps, *v.shape[3:]))
+
+
+def fragmentation(meta: PageMeta) -> jnp.ndarray:
+    """Telemetry: fraction of pages in use."""
+    used = ~hdr_ops.is_deleted(meta.hdr)
+    return jnp.mean(used.astype(jnp.float32))

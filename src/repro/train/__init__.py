@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, train step, async commit, compression."""
+from repro.train import async_commit, compression, optimizer, trainstep

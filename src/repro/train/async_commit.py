@@ -1,0 +1,88 @@
+"""Timestamp-vector asynchronous data parallelism (the paper's §4 technique
+applied to training — DESIGN.md §3.3).
+
+NAM-DB's key scalability insight is that a GLOBAL commit point (the single
+timestamp counter) serializes everyone, while a per-writer slot vector lets
+each writer publish independently and readers assemble any consistent
+snapshot. Mapped to data-parallel training at 1000+ nodes:
+
+* the **parameter store** is versioned: worker group ``i`` commits gradient
+  updates tagged ``⟨i, t_i⟩`` by bumping slot ``i`` of a commit vector — no
+  global barrier (the classic synchronous all-reduce is exactly the "global
+  timestamp" anti-pattern when stragglers/failures are frequent);
+* a worker reads the freshest *complete-enough* snapshot: it proceeds when
+  at most ``staleness_bound`` commits are missing from any slot —
+  bounded-staleness SGD with the paper's straggler property: a slow worker
+  cannot stall the read frontier;
+* checkpoints read a *dedicated* snapshot vector (paper §6.2) — consistent
+  without pausing anyone (see checkpoint/snapshot.py).
+
+This module implements the single-program simulation used by tests and the
+per-shard ops used inside ``shard_map`` by the launcher: each DP group owns
+slot ``i``; ``psum`` over the ICI-local axis builds the group gradient, the
+cross-pod combine applies compressed deltas from any slots that advanced.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CommitVectorState(NamedTuple):
+    vec: jnp.ndarray        # uint32 [n_groups] — per-group commit counters
+    deltas: object          # pytree: last committed update per group (stacked)
+
+
+def init(n_groups: int, param_tree) -> CommitVectorState:
+    return CommitVectorState(
+        vec=jnp.zeros((n_groups,), jnp.uint32),
+        deltas=jax.tree.map(
+            lambda p: jnp.zeros((n_groups,) + p.shape, jnp.float32),
+            param_tree))
+
+
+def commit(state: CommitVectorState, group: int, update) -> CommitVectorState:
+    """Group ``i`` publishes its update and bumps its own slot — one
+    unilateral write, no atomics, no barrier (paper §4.1)."""
+    deltas = jax.tree.map(lambda d, u: d.at[group].set(u.astype(jnp.float32)),
+                          state.deltas, update)
+    return CommitVectorState(vec=state.vec.at[group].add(1), deltas=deltas)
+
+
+def read_frontier(state: CommitVectorState, my_count) -> jnp.ndarray:
+    """How far each slot lags my own commit count (staleness per group)."""
+    return my_count.astype(jnp.int32) - state.vec.astype(jnp.int32)
+
+
+def can_proceed(state: CommitVectorState, my_count,
+                staleness_bound: int) -> jnp.ndarray:
+    """Bounded staleness: proceed iff no slot lags more than the bound.
+    With bound=0 this degenerates to synchronous DP; with bound=∞ to fully
+    async. Stragglers beyond the bound trigger the elastic path (drop/replace
+    the group — see checkpoint/snapshot.py restore_reshard)."""
+    lag = read_frontier(state, my_count)
+    return jnp.max(lag) <= staleness_bound
+
+
+def snapshot_combine(state: CommitVectorState, base_params, weights=None):
+    """Assemble parameters from the snapshot: base + mean of group deltas.
+
+    The read is GSI-consistent: any committed slot values form a valid
+    snapshot (monotone per slot). ``weights`` can down-weight stale groups
+    (staleness-aware averaging, à la async-SGD with delay compensation).
+    """
+    n = state.vec.shape[0]
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32) / n
+    def combine(p, d):
+        avg = jnp.tensordot(weights, d, axes=1)
+        return (p.astype(jnp.float32) + avg).astype(p.dtype)
+    return jax.tree.map(combine, base_params, state.deltas)
+
+
+def straggler_mask(state: CommitVectorState, my_count, bound: int):
+    """Groups currently beyond the staleness bound (candidates for
+    eviction/work-stealing — the paper's compute-server monitoring)."""
+    return read_frontier(state, my_count) > bound

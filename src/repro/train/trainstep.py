@@ -1,0 +1,91 @@
+"""The train step: remat, microbatched gradient accumulation, pjit-ready.
+
+``make_train_step`` returns a pure ``step(params, opt_state, batch, key)``
+suitable for ``jax.jit`` with ``in_shardings`` from launch/sharding.py. The
+global batch is split into ``n_microbatches`` and accumulated with a
+``lax.scan`` (bounds activation memory; overlaps the backward all-reduce of
+microbatch i with the forward of i+1 under XLA's async collectives).
+Remat wraps the loss at microbatch granularity on top of the model's own
+scan-over-units checkpointing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.api import Model
+from repro.train import optimizer as opt
+
+
+def _split_microbatches(batch, n_micro: int):
+    def split(x):
+        B = x.shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        return x.reshape((n_micro, B // n_micro) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model: Model, opt_cfg: opt.AdamWConfig,
+                    n_microbatches: int = 1,
+                    remat_policy: Optional[str] = None,
+                    donate: bool = True,
+                    grad_specs=None) -> Callable:
+    """Build the jittable train step for one architecture.
+
+    ``remat_policy``/``n_microbatches`` default from the active PerfPolicy
+    (repro.policy) so the §Perf variants drive the same code path.
+    """
+    from repro import policy as perf
+    if remat_policy is None:
+        remat_policy = perf.current().remat
+    if perf.current().n_microbatches is not None:
+        n_microbatches = perf.current().n_microbatches
+    policy = {
+        "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+        "dots_saveable": jax.checkpoint_policies.dots_saveable,
+        "dots_with_no_batch_dims":
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[remat_policy]
+
+    loss_fn = jax.checkpoint(model.train_loss, policy=policy)
+
+    def step(params, opt_state, batch):
+        micro = _split_microbatches(batch, n_microbatches)
+
+        def accum(carry, mb):
+            gsum, lsum = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            if grad_specs is not None and perf.current().pin_grads:
+                # §Perf iter 7: land each weight grad directly in its
+                # parameter's sharding — XLA then reduce-scatters the
+                # batch-partial dW (1x wire) instead of all-reducing a
+                # replicated dW (2x wire) and accumulating it full-size.
+                grads = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    grads, grad_specs)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return (gsum, lsum + loss), None
+
+        gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (gsum, lsum), _ = jax.lax.scan(
+            accum, (gzero, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+        loss = lsum / n_microbatches
+        params, opt_state, metrics = opt.apply(opt_cfg, params, grads,
+                                               opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def step(params, batch):
+        return model.train_loss(params, batch)
+    return step

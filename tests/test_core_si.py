@@ -1,0 +1,263 @@
+"""Unit tests for the NAM-DB core: headers, CAS arbitration, MVCC, SI rounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cas, header as hdr, mvcc, si
+from repro.core.tsoracle import (CompressedVectorOracle, GlobalCounterOracle,
+                                 VectorOracle, staleness_window)
+
+
+# ---------------------------------------------------------------- header ----
+def test_header_roundtrip():
+    h = hdr.pack(jnp.uint32(12345), jnp.uint32(67), moved=True, locked=True)
+    assert int(hdr.thread_id(h)) == 12345
+    assert int(hdr.commit_ts(h)) == 67
+    assert bool(hdr.is_moved(h)) and bool(hdr.is_locked(h))
+    assert not bool(hdr.is_deleted(h))
+    h2 = hdr.with_lock(h, False)
+    assert not bool(hdr.is_locked(h2))
+    assert int(hdr.thread_id(h2)) == 12345
+
+
+def test_header_visibility():
+    ts_vec = jnp.array([5, 3, 0], jnp.uint32)
+    h = hdr.pack(jnp.array([0, 1, 1, 2], jnp.uint32),
+                 jnp.array([5, 3, 4, 1], jnp.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(hdr.visible(h, ts_vec)), [True, True, False, False])
+
+
+# ------------------------------------------------------------------- cas ----
+def test_cas_single_winner_per_slot():
+    hdrs = hdr.pack(jnp.zeros(4, jnp.uint32), jnp.zeros(4, jnp.uint32))
+    slots = jnp.array([2, 2, 1], jnp.int32)
+    expected = hdrs[slots]
+    prio = jnp.array([7, 3, 9], jnp.uint32)
+    res = cas.arbitrate(hdrs, slots, expected, prio,
+                        jnp.array([True, True, True]))
+    np.testing.assert_array_equal(np.asarray(res.granted),
+                                  [False, True, True])
+    assert bool(hdr.is_locked(res.new_hdr[2]))
+    assert bool(hdr.is_locked(res.new_hdr[1]))
+    assert not bool(hdr.is_locked(res.new_hdr[0]))
+
+
+def test_cas_version_mismatch_fails():
+    hdrs = hdr.pack(jnp.zeros(2, jnp.uint32),
+                    jnp.array([9, 0], jnp.uint32))  # slot0 at version 9
+    stale = hdr.pack(jnp.uint32(0), jnp.uint32(3))  # reader saw version 3
+    res = cas.arbitrate(hdrs, jnp.array([0]), stale[None],
+                        jnp.array([1], jnp.uint32), jnp.array([True]))
+    assert not bool(res.granted[0])
+    assert not bool(hdr.is_locked(res.new_hdr[0]))
+
+
+def test_cas_locked_record_fails():
+    hdrs = hdr.pack(jnp.zeros(1, jnp.uint32), jnp.zeros(1, jnp.uint32),
+                    locked=jnp.array([True]))
+    expect_unlocked = hdr.pack(jnp.uint32(0), jnp.uint32(0))
+    res = cas.arbitrate(hdrs, jnp.array([0]), expect_unlocked[None],
+                        jnp.array([1], jnp.uint32), jnp.array([True]))
+    assert not bool(res.granted[0])
+
+
+def test_cas_release():
+    hdrs = hdr.pack(jnp.zeros(3, jnp.uint32), jnp.zeros(3, jnp.uint32),
+                    locked=jnp.array([True, True, False]))
+    out = cas.release(hdrs, jnp.array([0]), jnp.array([True]))
+    assert not bool(hdr.is_locked(out[0]))
+    assert bool(hdr.is_locked(out[1]))  # untouched
+
+
+# ------------------------------------------------------------------ mvcc ----
+def test_read_current_and_install():
+    tbl = mvcc.init_table(8, payload_width=4, n_old=2, n_overflow=2)
+    slots = jnp.array([3], jnp.int32)
+    nh = hdr.pack(jnp.uint32(1), jnp.uint32(1))
+    nd = jnp.full((1, 4), 42, jnp.int32)
+    out = mvcc.install(tbl, slots, nh[None], nd, jnp.array([True]))
+    assert bool(out.installed[0])
+    h, d = mvcc.read_current(out.table, slots)
+    assert int(hdr.commit_ts(h[0])) == 1
+    np.testing.assert_array_equal(np.asarray(d[0]), [42] * 4)
+
+
+def test_read_visible_falls_back_to_old_version():
+    tbl = mvcc.init_table(4, payload_width=2, n_old=2, n_overflow=2)
+    s = jnp.array([0], jnp.int32)
+    # install v1 by thread 1, then v2 by thread 1
+    for v, val in [(1, 10), (2, 20)]:
+        nh = hdr.pack(jnp.uint32(1), jnp.uint32(v))
+        out = mvcc.install(tbl, s, nh[None],
+                           jnp.full((1, 2), val, jnp.int32),
+                           jnp.array([True]))
+        tbl = out.table
+    # snapshot where thread1 committed only v1
+    ts_vec = jnp.array([0, 1], jnp.uint32)
+    vr = mvcc.read_visible(tbl, s, ts_vec)
+    assert bool(vr.found[0])
+    assert int(hdr.commit_ts(vr.hdr[0])) == 1
+    np.testing.assert_array_equal(np.asarray(vr.data[0]), [10, 10])
+    # newest snapshot sees v2 from the in-place current version
+    ts_vec2 = jnp.array([0, 2], jnp.uint32)
+    vr2 = mvcc.read_visible(tbl, s, ts_vec2)
+    assert bool(vr2.from_current[0])
+    np.testing.assert_array_equal(np.asarray(vr2.data[0]), [20, 20])
+
+
+def test_version_mover_frees_slots():
+    tbl = mvcc.init_table(2, payload_width=2, n_old=2, n_overflow=4)
+    s = jnp.array([0], jnp.int32)
+    for v in range(1, 4):  # 3 installs > n_old capacity
+        nh = hdr.pack(jnp.uint32(1), jnp.uint32(v))
+        out = mvcc.install(tbl, s, nh[None],
+                           jnp.full((1, 2), v, jnp.int32), jnp.array([True]))
+        tbl = out.table
+        tbl = mvcc.version_mover(tbl)
+    # oldest version must now live in the overflow region & still be readable
+    ts_vec = jnp.array([0, 1], jnp.uint32)
+    vr = mvcc.read_visible(tbl, s, ts_vec)
+    assert bool(vr.found[0])
+    assert int(hdr.commit_ts(vr.hdr[0])) == 1
+
+
+# --------------------------------------------------------------- oracles ----
+def test_global_counter_oracle_holes_stall_rts():
+    o = GlobalCounterOracle(capacity=64)
+    st = o.init()
+    st, ts = o.fetch_commit_ts(st, 4)
+    np.testing.assert_array_equal(np.asarray(ts), [1, 2, 3, 4])
+    # txn with ts=2 never completes (crashed compute server → hole)
+    st = o.complete(st, jnp.array([1, 3, 4], jnp.uint32),
+                    jnp.array([True, True, True]))
+    st = o.advance(st)
+    assert int(o.read(st)) == 1  # stuck behind the hole
+    st = o.complete(st, jnp.array([2], jnp.uint32), jnp.array([True]))
+    st = o.advance(st)
+    assert int(o.read(st)) == 4
+
+
+def test_vector_oracle_no_stall_from_stragglers():
+    o = VectorOracle(n_threads=4)
+    st = o.init()
+    # threads 0,1,3 commit; thread 2 is a straggler and never does
+    for tid in [0, 1, 3]:
+        cts = o.next_commit_ts(st, tid)
+        st = o.make_visible(st, jnp.array([tid]), jnp.array([cts]),
+                            jnp.array([True]))
+    vec = o.read(st)
+    np.testing.assert_array_equal(np.asarray(vec), [1, 1, 0, 1])
+    # snapshot advances for everyone regardless of thread 2
+
+
+def test_compressed_oracle_distinct_ts_within_server():
+    o = CompressedVectorOracle(n_threads=4, threads_per_server=2)
+    st = o.init()
+    tids = jnp.array([0, 1, 2, 3], jnp.int32)
+    want = jnp.array([True, True, True, False])
+    cts = o.next_commit_ts_batch(st, tids, want)
+    # threads 0,1 share slot 0 → get 1,2 ; thread 2 alone on slot 1 → 1
+    assert int(cts[0]) == 1 and int(cts[1]) == 2 and int(cts[2]) == 1
+
+
+def test_staleness_window():
+    hist = jnp.array([[5, 5], [4, 4], [3, 3]], jnp.uint32)
+    np.testing.assert_array_equal(np.asarray(staleness_window(hist, 2)), [3, 3])
+    np.testing.assert_array_equal(np.asarray(staleness_window(hist, 9)), [3, 3])
+
+
+# ----------------------------------------------------------------- si -------
+def _mk_batch(tids, read_slots, write_ref, write_mask=None):
+    read_slots = jnp.asarray(read_slots, jnp.int32)
+    T, RS = read_slots.shape
+    write_ref = jnp.asarray(write_ref, jnp.int32)
+    if write_mask is None:
+        write_mask = jnp.ones(write_ref.shape, bool)
+    return si.TxnBatch(
+        tid=jnp.asarray(tids, jnp.int32),
+        read_slots=read_slots,
+        read_mask=jnp.ones((T, RS), bool),
+        write_ref=write_ref,
+        write_mask=jnp.asarray(write_mask, bool),
+    )
+
+
+def _inc_first_col(read_hdr, read_data, rts):
+    """Write-set = read-set[write_ref] with col0 incremented."""
+    return read_data.at[..., 0].add(1)[:, : read_data.shape[1], :]
+
+
+def test_si_round_commit_and_conflict():
+    tbl = mvcc.init_table(16, payload_width=4, n_old=2, n_overflow=2)
+    o = VectorOracle(n_threads=3)
+    st = o.init()
+    # txn0 and txn1 both write slot 5 → exactly one commits; txn2 writes 9
+    batch = _mk_batch([0, 1, 2], [[5], [5], [9]], [[0], [0], [0]])
+
+    def fn(rh, rd, rts):
+        return rd.at[..., 0].add(1)
+
+    out = si.run_round(tbl, o, st, batch, fn)
+    c = np.asarray(out.committed)
+    assert c.sum() == 2 and c[2]
+    assert c[0] != c[1]
+    # winner's value is installed, header tagged with winner's slot
+    h, d = mvcc.read_current(out.table, jnp.array([5]))
+    assert int(d[0, 0]) == 1
+    assert int(hdr.commit_ts(h[0])) == 1
+    assert not bool(hdr.is_locked(h[0]))  # no lock leaked
+    # oracle advanced only for committers
+    vec = np.asarray(out.oracle_state.vec)
+    assert vec[2] == 1 and vec[int(np.argmax(c[:2]))] == 1
+
+
+def test_si_serial_rounds_are_serializable_counter():
+    """R rounds of 'increment slot 0' — final value == #commits (lost-update
+    freedom: SI forbids write-write clobbering)."""
+    tbl = mvcc.init_table(4, payload_width=2, n_old=2, n_overflow=2)
+    o = VectorOracle(n_threads=4)
+    st = o.init()
+
+    def fn(rh, rd, rts):
+        return rd.at[..., 0].add(1)
+
+    total_commits = 0
+    for r in range(8):
+        batch = _mk_batch([0, 1, 2, 3], [[0]] * 4, [[0]] * 4)
+        out = si.run_round(tbl, o, st, batch, fn)
+        tbl, st = out.table, out.oracle_state
+        tbl = mvcc.version_mover(tbl)
+        total_commits += int(np.asarray(out.committed).sum())
+    _, d = mvcc.read_current(tbl, jnp.array([0]))
+    assert int(d[0, 0]) == total_commits
+    assert total_commits >= 8  # at least one winner per round
+
+
+def test_si_read_only_txn_always_commits():
+    tbl = mvcc.init_table(4, payload_width=2, n_old=2, n_overflow=2)
+    o = VectorOracle(n_threads=2)
+    st = o.init()
+    batch = _mk_batch([0, 1], [[1], [1]], [[0], [0]],
+                      write_mask=[[False], [False]])
+
+    def fn(rh, rd, rts):
+        return rd
+
+    out = si.run_round(tbl, o, st, batch, fn)
+    assert bool(out.committed.all())
+
+
+def test_si_jit_compatible():
+    tbl = mvcc.init_table(8, payload_width=2, n_old=2, n_overflow=2)
+    o = VectorOracle(n_threads=2)
+    st = o.init()
+    batch = _mk_batch([0, 1], [[1], [2]], [[0], [0]])
+
+    def fn(rh, rd, rts):
+        return rd.at[..., 0].add(1)
+
+    run = jax.jit(lambda t, s, b: si.run_round(t, o, s, b, fn))
+    out = run(tbl, st, batch)
+    assert bool(out.committed.all())

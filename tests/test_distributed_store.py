@@ -1,0 +1,24 @@
+"""Distributed (shard_map) store must be semantics-identical to single-device.
+
+Runs in a subprocess so the 8 placeholder host devices never leak into this
+test process (smoke tests and benches must see 1 device — see dryrun rules).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_distributed_round_matches_single_device():
+    script = os.path.join(os.path.dirname(__file__),
+                          "_distributed_store_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "DISTRIBUTED_OK" in out.stdout

@@ -1,0 +1,170 @@
+"""Unit tests for the static HLO roofline profiler (launch/hlostats.py).
+
+Hand-written miniature HLO modules with known flops/bytes/collective
+ground truth — including while-loop trip multiplication, fusion byte
+accounting, and the TPU-dtype rules R1/R2.
+"""
+import textwrap
+
+from repro.launch import hlostats
+
+
+def _analyze(s):
+    return hlostats.analyze(textwrap.dedent(s))
+
+
+def test_dot_flops_and_bytes():
+    st = _analyze("""
+    ENTRY %main (a: f32[8,16], b: f32[16,32]) -> f32[8,32] {
+      %a = f32[8,16]{1,0} parameter(0)
+      %b = f32[16,32]{1,0} parameter(1)
+      ROOT %dot.1 = f32[8,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+    """)
+    assert st.flops == 2 * 8 * 32 * 16
+    # bytes: result 8*32*4 + operands (8*16 + 16*32)*4
+    assert st.hbm_bytes == 4 * (8 * 32 + 8 * 16 + 16 * 32)
+
+
+def test_while_trip_count_multiplies():
+    st = _analyze("""
+    %body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+      %p = (s32[], f32[4,4]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      %y = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %t = (s32[], f32[4,4]) tuple(%i2, %y)
+    }
+    %cond (p: (s32[], f32[4,4])) -> pred[] {
+      %p = (s32[], f32[4,4]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(7)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+    ENTRY %main (x: f32[4,4]) -> (s32[], f32[4,4]) {
+      %x = f32[4,4]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[4,4]) tuple(%zero, %x)
+      ROOT %w = (s32[], f32[4,4]) while(%init), condition=%cond, body=%w_b
+    }
+    """.replace("%w_b", "%body"))
+    assert st.flops == 7 * 2 * 4 * 4 * 4        # trip=7
+
+
+def test_collective_wire_factors():
+    st = _analyze("""
+    ENTRY %main (x: bf16[64,128]) -> bf16[64,128] {
+      %x = bf16[64,128]{1,0} parameter(0)
+      %ar = bf16[64,128]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+      ROOT %ag = bf16[64,128]{1,0} all-gather(%ar), replica_groups=[64,4]<=[256], dimensions={0}
+    }
+    """)
+    b = 64 * 128 * 2
+    want_ar = 2.0 * (15 / 16) * b
+    want_ag = (3 / 4) * b
+    assert abs(st.coll["all-reduce"] - want_ar) < 1
+    assert abs(st.coll["all-gather"] - want_ag) < 1
+    assert abs(st.wire_bytes - (want_ar + want_ag)) < 1
+
+
+def test_fusion_slice_params_not_full_read():
+    """A fusion that dynamic-slices a big stacked param reads slice bytes."""
+    st = _analyze("""
+    %fused (p0: f32[24,128,128], p1: s32[]) -> f32[128,128] {
+      %p0 = f32[24,128,128]{2,1,0} parameter(0)
+      %p1 = s32[] parameter(1)
+      %z = s32[] constant(0)
+      ROOT %ds = f32[128,128]{1,0} dynamic-slice(%p0, %p1, %z, %z), dynamic_slice_sizes={1,128,128}
+    }
+    ENTRY %main (w: f32[24,128,128], i: s32[]) -> f32[128,128] {
+      %w = f32[24,128,128]{2,1,0} parameter(0)
+      %i = s32[] parameter(1)
+      ROOT %f = f32[128,128]{1,0} fusion(%w, %i), kind=kLoop, calls=%fused
+    }
+    """)
+    slice_b = 128 * 128 * 4
+    # read slice + write root; NOT the 24x full buffer
+    assert st.hbm_bytes <= 2 * slice_b + 16
+
+
+def test_r1_convert_dus_convert_roundtrip():
+    """R1: convert(DUS(convert(bf16buf), update)) counts the window only."""
+    st = _analyze("""
+    %fused (p0: s32[], p1: bf16[8,64,64], p2: f32[64,64]) -> bf16[8,64,64] {
+      %p1 = bf16[8,64,64]{2,1,0} parameter(1)
+      %c1 = f32[8,64,64]{2,1,0} convert(%p1)
+      %p2 = f32[64,64]{1,0} parameter(2)
+      %b = f32[1,64,64]{2,1,0} bitcast(%p2)
+      %p0 = s32[] parameter(0)
+      %z = s32[] constant(0)
+      %dus = f32[8,64,64]{2,1,0} dynamic-update-slice(%c1, %b, %p0, %z, %z)
+      ROOT %c2 = bf16[8,64,64]{2,1,0} convert(%dus)
+    }
+    ENTRY %main (buf: bf16[8,64,64], u: f32[64,64], i: s32[]) -> bf16[8,64,64] {
+      %buf = bf16[8,64,64]{2,1,0} parameter(0)
+      %u = f32[64,64]{1,0} parameter(1)
+      %i = s32[] parameter(2)
+      ROOT %f = bf16[8,64,64]{2,1,0} fusion(%buf, %u, %i), kind=kLoop, calls=%fused
+    }
+    """)
+    window_bf16 = 64 * 64 * 2
+    assert st.hbm_bytes == 2 * window_bf16      # read+write window, narrow
+
+
+def test_r2_pure_cast_fusions():
+    # bitcast-only: free
+    st = _analyze("""
+    %fused (p0: f32[1,8,16]) -> f32[8,16] {
+      %p0 = f32[1,8,16]{2,1,0} parameter(0)
+      ROOT %b = f32[8,16]{1,0} bitcast(%p0)
+    }
+    ENTRY %main (x: f32[1,8,16]) -> f32[8,16] {
+      %x = f32[1,8,16]{2,1,0} parameter(0)
+      ROOT %f = f32[8,16]{1,0} fusion(%x), kind=kLoop, calls=%fused
+    }
+    """)
+    assert st.hbm_bytes == 0.0
+    # convert: narrow side once
+    st = _analyze("""
+    %fused (p0: bf16[8,16]) -> f32[8,16] {
+      %p0 = bf16[8,16]{1,0} parameter(0)
+      ROOT %c = f32[8,16]{1,0} convert(%p0)
+    }
+    ENTRY %main (x: bf16[8,16]) -> f32[8,16] {
+      %x = bf16[8,16]{1,0} parameter(0)
+      ROOT %f = f32[8,16]{1,0} fusion(%x), kind=kLoop, calls=%fused
+    }
+    """)
+    assert st.hbm_bytes == 8 * 16 * 2
+
+
+def test_collective_inside_while_multiplied():
+    st = _analyze("""
+    %body (p: (s32[], f32[32])) -> (s32[], f32[32]) {
+      %p = (s32[], f32[32]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[32]{0} get-tuple-element(%p), index=1
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      %ar = f32[32]{0} all-reduce(%x), replica_groups=[1,4]<=[4], to_apply=%add
+      ROOT %t = (s32[], f32[32]) tuple(%i2, %ar)
+    }
+    %cond (p: (s32[], f32[32])) -> pred[] {
+      %p = (s32[], f32[32]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+    ENTRY %main (x: f32[32]) -> (s32[], f32[32]) {
+      %x = f32[32]{0} parameter(0)
+      %z = s32[] constant(0)
+      %init = (s32[], f32[32]) tuple(%z, %x)
+      ROOT %w = (s32[], f32[32]) while(%init), condition=%cond, body=%body
+    }
+    """)
+    want = 5 * 2.0 * (3 / 4) * 32 * 4
+    assert abs(st.coll["all-reduce"] - want) < 1
+    top = hlostats.top_collectives(st)
+    assert top and top[0]["bytes"] == st.coll["all-reduce"]

@@ -1,0 +1,146 @@
+"""Per-kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.hash_probe.ops import hash_probe
+from repro.kernels.hash_probe.ref import hash_probe_ref
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.moe_gmm.ops import moe_gmm
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- flash -------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,Hq,Hkv,D,causal,window,softcap",
+    [
+        (1, 64, 64, 2, 2, 32, True, None, None),
+        (2, 100, 100, 4, 2, 32, True, None, None),     # GQA, ragged seq
+        (2, 96, 96, 4, 1, 64, True, 33, None),         # MQA + window
+        (1, 64, 128, 2, 2, 32, False, None, None),     # cross-attn shape
+        (1, 80, 80, 2, 2, 32, True, None, 25.0),       # softcap (gemma2)
+    ])
+def test_flash_attention_sweep(B, Sq, Sk, Hq, Hkv, D, causal, window,
+                               softcap, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, Sq, Hq, D)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, Sk, Hkv, D)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, Sk, Hkv, D)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, bq=32, bk=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ------------------------------------------------------------- paged -------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Hq,Hkv,ps,window", [(4, 2, 8, None), (8, 8, 16, 9),
+                                              (4, 1, 8, None)])
+def test_paged_attention_sweep(Hq, Hkv, ps, window, dtype):
+    key = jax.random.PRNGKey(1)
+    B, D, P = 3, 32, 40
+    n_pages = 5
+    q = jax.random.normal(key, (B, Hq, D)).astype(dtype)
+    kp = jax.random.normal(jax.random.fold_in(key, 1),
+                           (P, ps, Hkv, D)).astype(dtype)
+    vp = jax.random.normal(jax.random.fold_in(key, 2),
+                           (P, ps, Hkv, D)).astype(dtype)
+    pt = jnp.array([[3, 7, 11, -1, -1], [0, 1, 2, 4, 5],
+                    [20, 21, -1, -1, -1]], jnp.int32)
+    kv_len = jnp.array([2 * ps + 3, 5 * ps, ps + 1], jnp.int32)
+    out = paged_attention(q, kp, vp, pt, kv_len, window=window,
+                          interpret=True)
+    ref = paged_attention_ref(q, kp, vp, pt, kv_len, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# --------------------------------------------------------------- gmm -------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F,act",
+                         [(2, 16, 16, 32, "silu"), (3, 20, 16, 40, "gelu"),
+                          (1, 8, 32, 24, "sq_relu")])
+def test_moe_gmm_sweep(E, C, D, F, act, dtype):
+    key = jax.random.PRNGKey(2)
+    x = (jax.random.normal(key, (E, C, D)) * 0.5).astype(dtype)
+    wg = (jax.random.normal(jax.random.fold_in(key, 1), (E, D, F)) * 0.2
+          ).astype(dtype)
+    wi = (jax.random.normal(jax.random.fold_in(key, 2), (E, D, F)) * 0.2
+          ).astype(dtype)
+    wo = (jax.random.normal(jax.random.fold_in(key, 3), (E, F, D)) * 0.2
+          ).astype(dtype)
+    out = moe_gmm(x, wg, wi, wo, activation=act, bc=8, bf=16,
+                  interpret=True)
+    ref = moe_gmm_ref(x, wg, wi, wo, activation=act)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ------------------------------------------------------------- probe -------
+@pytest.mark.parametrize("n_buckets,n_keys,bq", [(64, 29, 8), (256, 100, 32)])
+def test_hash_probe_sweep(n_buckets, n_keys, bq):
+    from repro.core import hashtable as ht, header as hdr
+    t = ht.init(n_buckets)
+    keys = (jnp.arange(1, n_keys + 1, dtype=jnp.uint32) * 7919)
+    t, _ = ht.insert(t, keys, jnp.arange(n_keys, dtype=jnp.int32),
+                     max_probes=n_buckets)
+    # headers: half the records stamped by thread 1 at cts 5 (visibility)
+    meta = hdr.pack(
+        jnp.where(jnp.arange(n_buckets) % 2 == 0, 0, 1).astype(jnp.uint32),
+        jnp.where(jnp.arange(n_buckets) % 2 == 0, 0, 5).astype(jnp.uint32))
+    hm, hc = meta[:, 0], meta[:, 1]
+    for tsvec in (jnp.array([9, 9], jnp.uint32),    # all visible
+                  jnp.array([9, 0], jnp.uint32)):   # thread-1 versions hidden
+        qs = jnp.concatenate([keys[: n_keys // 2],
+                              jnp.array([3, 12345], jnp.uint32)])
+        v1, f1 = hash_probe(t.keys, t.vals, hm, hc, tsvec, qs, bq=bq,
+                            max_probes=n_buckets, interpret=True)
+        v2, f2 = hash_probe_ref(t.keys, t.vals, hm, hc, tsvec, qs,
+                                max_probes=n_buckets)
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+
+# -------------------------------------------------------------- mamba ------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Di,N,bd,chunk",
+                         [(2, 40, 24, 8, 8, 8), (1, 64, 16, 16, 16, 16),
+                          (2, 33, 8, 4, 8, 8)])   # ragged S (padded)
+def test_mamba_scan_sweep(B, S, Di, N, bd, chunk, dtype):
+    key = jax.random.PRNGKey(3)
+    dt = jax.nn.softplus(jax.random.normal(key, (B, S, Di))).astype(dtype)
+    x = jax.random.normal(jax.random.fold_in(key, 4),
+                          (B, S, Di)).astype(dtype)
+    Bm = (jax.random.normal(jax.random.fold_in(key, 5), (B, S, N)) * 0.3
+          ).astype(dtype)
+    Cm = (jax.random.normal(jax.random.fold_in(key, 6), (B, S, N)) * 0.3
+          ).astype(dtype)
+    A_log = jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)[None]
+                    * (1.0 + 0.1 * jnp.arange(Di)[:, None]))
+    D_skip = jnp.linspace(0.5, 1.5, Di).astype(jnp.float32)
+    out = mamba_scan(dt, x, Bm, Cm, A_log, D_skip, bd=bd, chunk=chunk,
+                     interpret=True)
+    ref = mamba_scan_ref(dt.astype(jnp.float32), x.astype(jnp.float32),
+                         Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                         A_log, D_skip)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)

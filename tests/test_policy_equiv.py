@@ -1,0 +1,23 @@
+"""The §Perf opt policy must not change model semantics.
+
+Runs tests/_policy_equiv_check.py in a subprocess (it needs 16 placeholder
+devices, which must not leak into this process's jax).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_policy_equivalence_16dev():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(root, "tests",
+                                      "_policy_equiv_check.py")],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "POLICY-EQUIV-ALL-OK" in out.stdout

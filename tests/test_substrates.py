@@ -1,0 +1,227 @@
+"""Tests: optimizer, train step, data pipeline, checkpointing, async commit,
+compression, paged KV cache + serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import snapshot
+from repro.configs import get_arch, reduced
+from repro.data.pipeline import DataConfig, make_batch, make_prompts
+from repro.models import build, transformer
+from repro.serve import kvcache as kvc
+from repro.serve.engine import Engine, EngineConfig
+from repro.train import async_commit, compression
+from repro.train import optimizer as opt
+from repro.train.trainstep import make_train_step
+
+
+def _tiny():
+    cfg = reduced(get_arch("h2o-danube-3-4b"), n_layers=2, d_model=64,
+                  d_ff=128, vocab=128, sliding_window=32)
+    return cfg, build(cfg)
+
+
+# --------------------------------------------------------------- training ----
+def test_train_loop_loss_decreases():
+    cfg, m = _tiny()
+    params = m.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(m, ocfg, n_microbatches=2))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    losses = []
+    for i in range(30):
+        batch = make_batch(dcfg, i)
+        params, state, metrics = step(params, state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses[::6]
+    assert np.isfinite(losses).all()
+
+
+def test_microbatching_equals_full_batch():
+    """Gradient accumulation must match the one-shot gradient."""
+    cfg, m = _tiny()
+    params = m.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8)
+    batch = make_batch(dcfg, 0)
+    g_full = jax.grad(m.train_loss)(params, batch)
+    from repro.train.trainstep import _split_microbatches
+    micro = _split_microbatches(batch, 4)
+    g_sum = jax.tree.map(jnp.zeros_like, g_full)
+    for i in range(4):
+        mb = jax.tree.map(lambda x: x[i], micro)
+        g = jax.grad(m.train_loss)(params, mb)
+        g_sum = jax.tree.map(lambda a, b: a + b / 4, g_sum, g)
+    flat_a = jax.tree.leaves(g_full)
+    flat_b = jax.tree.leaves(g_sum)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_data_pipeline_deterministic_and_sharded():
+    dcfg = DataConfig(vocab=100, seq_len=16, global_batch=8)
+    a = make_batch(dcfg, 3, shard=1, n_shards=2)
+    b = make_batch(dcfg, 3, shard=1, n_shards=2)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = make_batch(dcfg, 3, shard=0, n_shards=2)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+    np.testing.assert_array_equal(np.asarray(a["targets"][:, :-1]),
+                                  np.asarray(a["tokens"][:, 1:]))
+
+
+# ------------------------------------------------------------- checkpoint ----
+def test_checkpoint_roundtrip_and_async(tmp_path):
+    cfg, m = _tiny()
+    params = m.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    state = opt.init(params)
+    t = snapshot.save_async(str(tmp_path / "ck"), params, state, step=7)
+    t.join()
+    p2, s2, manifest = snapshot.restore(str(tmp_path / "ck"), params, state)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(state.m), jax.tree.leaves(s2.m)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_si_consistency_under_concurrent_commits(tmp_path):
+    """The §6.2 property: a checkpoint taken at a captured commit vector is
+    unaffected by commits that land while it is being written."""
+    base = {"w": jnp.zeros((4,), jnp.float32)}
+    st = async_commit.init(n_groups=3, param_tree=base)
+    st = async_commit.commit(st, 0, {"w": jnp.ones((4,))})
+    st = async_commit.commit(st, 1, {"w": 2 * jnp.ones((4,))})
+    captured_vec = st.vec                      # dedicated read timestamp
+    snap = async_commit.snapshot_combine(st, base)
+    # concurrent commits AFTER capture
+    st2 = async_commit.commit(st, 2, {"w": 100 * jnp.ones((4,))})
+    snapshot.save(str(tmp_path / "ck"), snap, step=1,
+                  commit_vector=captured_vec)
+    p2, _, man = snapshot.restore(str(tmp_path / "ck"), snap)
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               np.asarray(snap["w"]))
+    assert man["commit_vector"] == [1, 1, 0]
+    del st2
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Checkpoint written once restores under a different logical sharding
+    (here: same arrays, different device placement request)."""
+    params = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    snapshot.save(str(tmp_path / "ck"), params, step=1)
+    p2, _, _ = snapshot.restore(str(tmp_path / "ck"), params)
+    np.testing.assert_array_equal(np.asarray(p2["w"]),
+                                  np.asarray(params["w"]))
+
+
+# ------------------------------------------------------------ async commit ----
+def test_async_commit_straggler_does_not_block():
+    base = {"w": jnp.zeros((2,), jnp.float32)}
+    st = async_commit.init(4, base)
+    for r in range(3):
+        for g in (0, 1, 2):                   # group 3 is a straggler
+            st = async_commit.commit(st, g, {"w": jnp.ones((2,))})
+    my = jnp.asarray(3, jnp.uint32)
+    assert bool(async_commit.can_proceed(st, my, staleness_bound=3))
+    assert not bool(async_commit.can_proceed(st, my, staleness_bound=2))
+    mask = async_commit.straggler_mask(st, my, bound=2)
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [False, False, False, True])
+
+
+def test_compression_unbiased_and_bounded_error():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256,)) * 3
+    qs, scale = compression.int8_compress(x, key)
+    y = compression.int8_decompress(qs, scale)
+    err = np.asarray(y - x)
+    assert np.abs(err).max() <= float(scale) * 1.01   # ≤1 quantum
+    # error feedback drives the running residual's effect to zero-mean
+    ef = compression.ef_init({"w": x})
+    tot = jnp.zeros_like(x)
+    for i in range(8):
+        qs, sc, ef = compression.ef_apply({"w": x}, ef,
+                                          jax.random.fold_in(key, i))
+        tot = tot + compression.int8_decompress(qs["w"], sc["w"])
+    np.testing.assert_allclose(np.asarray(tot / 8), np.asarray(x),
+                               atol=float(scale) * 1.5)
+
+
+# ---------------------------------------------------------------- serving ----
+def test_page_alloc_release_and_sharing():
+    meta = kvc.init_meta(16)
+    table = kvc.init_seq_table(4, 8)
+    meta, pages, ok = kvc.alloc_pages(meta, jnp.array([2, 3], jnp.int32),
+                                      jnp.array([0, 1], jnp.int32), 1)
+    assert bool(ok.all())
+    flat = np.asarray(pages)
+    got = flat[flat >= 0]
+    assert len(np.unique(got)) == 5           # no double-grant
+    table = kvc.map_pages(table, jnp.array([0, 1], jnp.int32), pages,
+                          jnp.zeros((2,), jnp.int32))
+    # prefix sharing bumps refcounts; release of src keeps shared pages
+    meta, table = kvc.share_prefix(meta, table, 0, 2, 2)
+    meta, table = kvc.release_seqs(meta, table, jnp.array([0], jnp.int32))
+    shared = np.asarray(table.page_table[2][:2])
+    from repro.core import header as hdr
+    assert (np.asarray(meta.refcount)[shared] == 1).all()
+    assert not np.asarray(hdr.is_deleted(meta.hdr[shared])).any()
+    # exhaustion reports failure, not corruption
+    meta2, _, ok2 = kvc.alloc_pages(meta, jnp.array([99], jnp.int32),
+                                    jnp.array([0], jnp.int32), 2)
+    assert not bool(ok2[0])
+
+
+def test_engine_matches_model_decode():
+    """Paged-engine greedy decode == dense-cache model decode."""
+    cfg = reduced(get_arch("h2o-danube-3-4b"), n_layers=2, d_model=64,
+                  d_ff=128, vocab=64, sliding_window=None)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(3), dtype=jnp.float32)
+    prompts = make_prompts(jax.random.PRNGKey(4), 2, cfg.vocab,
+                           min_len=5, max_len=8)
+    eng = Engine(cfg, params, EngineConfig(max_seqs=4, page_size=4,
+                                           n_pages=64, max_len=64, eos=-1))
+    outs, state = eng.serve(prompts, max_new=6)
+
+    for i, prompt in enumerate(prompts):
+        toks = jnp.asarray(prompt)[None, :]
+        _, cache = m.prefill(params, {"tokens": toks}, max_len=64)
+        cur = None
+        ref = []
+        logits, cache = None, cache
+        # first token from prefill last hidden == engine's admit token
+        hidden, _ = transformer.forward_hidden(cfg, params, toks)
+        lg = hidden[:, -1].astype(jnp.float32) @ params["embed"].T
+        cur = int(jnp.argmax(lg, -1)[0])
+        ref.append(cur)
+        for _ in range(5):
+            lg, cache = m.decode_step(params, cache,
+                                      jnp.array([cur], jnp.int32))
+            cur = int(jnp.argmax(lg, -1)[0])
+            ref.append(cur)
+        assert outs[i] == ref, (i, outs[i], ref)
+
+
+def test_engine_release_recycles_pages():
+    cfg = reduced(get_arch("h2o-danube-3-4b"), n_layers=2, d_model=32,
+                  d_ff=64, vocab=32, sliding_window=None)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(5), dtype=jnp.float32)
+    eng = Engine(cfg, params, EngineConfig(max_seqs=2, page_size=4,
+                                           n_pages=16, max_len=32, eos=-1))
+    prompts = make_prompts(jax.random.PRNGKey(6), 2, cfg.vocab, 4, 6)
+    _, state = eng.serve(prompts, max_new=4)
+    state = state._replace(done=jnp.ones_like(state.done))
+    state = eng.release_finished(state)
+    frag = float(kvc.fragmentation(state.meta))
+    assert frag == 0.0   # everything returned to the pool
+    # pool is reusable: admit again
+    state = eng.admit(state, prompts)
+    assert bool(state.table.active.any())

@@ -1,0 +1,196 @@
+"""TPC-C integration tests: consistency invariants the benchmark defines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import header as hdr, mvcc
+from repro.core.tsoracle import VectorOracle
+from repro.db import tpcc, workload
+
+
+CFG = tpcc.TPCCConfig(n_warehouses=2, customers_per_district=8, n_items=64,
+                      n_threads=8, orders_per_thread=32, dist_degree=100.0)
+
+
+@pytest.fixture(scope="module")
+def loaded():
+    oracle = VectorOracle(CFG.n_threads)
+    lay, st = tpcc.init_tpcc(CFG, oracle, jax.random.PRNGKey(0))
+    return oracle, lay, st
+
+
+def _run_neworders(oracle, lay, st, n_rounds=6, seed=1, cfg=CFG):
+    logits = workload.zipf_logits(cfg.n_items, cfg.skew_alpha)
+    key = jax.random.PRNGKey(seed)
+    committed_total = 0
+    o_ids = []
+    for r in range(n_rounds):
+        key, sub = jax.random.split(key)
+        inp = workload.gen_neworder(sub, cfg.n_threads, cfg.n_warehouses,
+                                    cfg.n_items, cfg.customers_per_district,
+                                    None, cfg.dist_degree, logits)
+        out = tpcc.neworder_round(cfg, lay, st, oracle, inp, round_no=r)
+        st = out.state
+        st = st._replace(nam=st.nam._replace(
+            table=mvcc.version_mover(st.nam.table)))
+        committed_total += int(np.asarray(out.committed).sum())
+        o_ids.append((np.asarray(inp.w_id), np.asarray(inp.d_id),
+                      np.asarray(out.o_id), np.asarray(out.committed)))
+    return st, committed_total, o_ids
+
+
+def test_neworder_commits_and_advances_district(loaded):
+    oracle, lay, st0 = loaded
+    st, n_committed, _ = _run_neworders(oracle, lay, st0)
+    assert n_committed > 0
+    # consistency: sum over districts of d_next_o_id == total committed orders
+    dspec = lay.catalog["district"]
+    next_ids = np.asarray(
+        st.nam.table.cur_data[dspec.base:dspec.end,
+                              tpcc.D_COL["next_o_id"]])
+    assert next_ids.sum() == n_committed
+
+
+def test_neworder_unique_o_ids_per_district(loaded):
+    """SI must serialize d_next_o_id: no duplicate (w,d,o_id) among commits."""
+    oracle, lay, st0 = loaded
+    _, _, rounds = _run_neworders(oracle, lay, st0, seed=2)
+    seen = set()
+    for w, d, o, c in rounds:
+        for i in range(len(w)):
+            if c[i]:
+                key = (int(w[i]), int(d[i]), int(o[i]))
+                assert key not in seen, f"duplicate order id {key}"
+                seen.add(key)
+
+
+def test_neworder_stock_consistency(loaded):
+    """Committed orders' quantities are all applied exactly once:
+    sum(s_ytd) == sum of committed order quantities."""
+    oracle, lay, st0 = loaded
+    cfg = CFG
+    logits = workload.zipf_logits(cfg.n_items, None)
+    oracle = VectorOracle(cfg.n_threads)
+    lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(3))
+    key = jax.random.PRNGKey(4)
+    expected_ytd = 0
+    for r in range(5):
+        key, sub = jax.random.split(key)
+        inp = workload.gen_neworder(sub, cfg.n_threads, cfg.n_warehouses,
+                                    cfg.n_items, cfg.customers_per_district,
+                                    None, cfg.dist_degree, logits)
+        out = tpcc.neworder_round(cfg, lay, st, oracle, inp, round_no=r)
+        st = out.state
+        st = st._replace(nam=st.nam._replace(
+            table=mvcc.version_mover(st.nam.table)))
+        c = np.asarray(out.committed)
+        qty = np.asarray(inp.qty)
+        lm = np.arange(tpcc.MAX_OL)[None, :] < np.asarray(inp.ol_cnt)[:, None]
+        expected_ytd += int((qty * lm * c[:, None]).sum())
+    sspec = lay.catalog["stock"]
+    got = int(np.asarray(
+        st.nam.table.cur_data[sspec.base:sspec.end, tpcc.S_COL["ytd"]]).sum())
+    assert got == expected_ytd
+
+
+def test_payment_balance_conservation():
+    cfg = CFG
+    oracle = VectorOracle(cfg.n_threads)
+    lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(5))
+    key = jax.random.PRNGKey(6)
+    total_paid = 0
+    for r in range(5):
+        key, sub = jax.random.split(key)
+        inp = workload.gen_payment(sub, cfg.n_threads, cfg.n_warehouses,
+                                   cfg.customers_per_district)
+        st, committed, ops = tpcc.payment_round(cfg, lay, st, oracle, inp)
+        st = st._replace(nam=st.nam._replace(
+            table=mvcc.version_mover(st.nam.table)))
+        c = np.asarray(committed)
+        total_paid += int((np.asarray(inp.amount) * c).sum())
+    wspec = lay.catalog["warehouse"]
+    w_ytd = int(np.asarray(
+        st.nam.table.cur_data[wspec.base:wspec.end,
+                              tpcc.W_COL["ytd"]]).sum())
+    cspec = lay.catalog["customer"]
+    c_bal = int(np.asarray(
+        st.nam.table.cur_data[cspec.base:cspec.end,
+                              tpcc.C_COL["balance"]]).sum())
+    assert w_ytd == total_paid          # TPC-C consistency condition 1
+    assert c_bal == -total_paid         # money left customers' balances
+
+
+def test_orderstatus_reads_inserted_order():
+    cfg = CFG
+    oracle = VectorOracle(cfg.n_threads)
+    lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(7))
+    st, n, rounds = _run_neworders(oracle, lay, st, n_rounds=3, seed=8,
+                                   cfg=cfg)
+    assert n > 0
+    w, d, o, c = rounds[-1]
+    i = int(np.argmax(c))  # a committed txn from the last round
+    cust, ordr, found = tpcc.orderstatus(
+        cfg, lay, st, oracle, jnp.array([w[i]]), jnp.array([d[i]]),
+        jnp.array([0]))
+    assert bool(found[0])
+    assert bool(ordr.found[0])
+    assert int(ordr.data[0, tpcc.O_COL["carrier"]]) == -1  # not delivered
+
+
+def test_delivery_advances_cursor_and_sets_carrier():
+    cfg = CFG
+    oracle = VectorOracle(cfg.n_threads)
+    lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(9))
+    st, n, rounds = _run_neworders(oracle, lay, st, n_rounds=3, seed=10,
+                                   cfg=cfg)
+    w, d, o, c = rounds[0]
+    i = int(np.argmax(c))
+    st2, done, ops = tpcc.delivery_round(
+        cfg, lay, st, oracle, jnp.array([w[i]], jnp.int32),
+        jnp.array([d[i]], jnp.int32), carrier=7)
+    assert bool(done[0])
+    dsl = tpcc.d_slot(lay, jnp.array([w[i]]), jnp.array([d[i]]))
+    dd = st2.nam.table.cur_data[dsl[0]]
+    assert int(dd[tpcc.D_COL["next_deliv"]]) == 1
+
+
+def test_stocklevel_counts_low_stock():
+    cfg = CFG
+    oracle = VectorOracle(cfg.n_threads)
+    lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(11))
+    st, n, rounds = _run_neworders(oracle, lay, st, n_rounds=3, seed=12,
+                                   cfg=cfg)
+    w, d, o, c = rounds[0]
+    i = int(np.argmax(c))
+    cnt = tpcc.stocklevel(cfg, lay, st, oracle, jnp.array(w[i]),
+                          jnp.array(d[i]), threshold=101)
+    assert int(cnt) >= 0  # executes; with threshold=101 any touched item counts
+
+
+def test_contention_raises_aborts():
+    """Exp-4 mechanism: higher zipf skew ⇒ more write-write conflicts."""
+    rates = {}
+    for alpha in (None, 2.0):
+        cfg = tpcc.TPCCConfig(n_warehouses=1, customers_per_district=8,
+                              n_items=256, n_threads=16,
+                              orders_per_thread=64, dist_degree=0.0,
+                              skew_alpha=alpha)
+        oracle = VectorOracle(cfg.n_threads)
+        lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(13))
+        logits = workload.zipf_logits(cfg.n_items, alpha)
+        key = jax.random.PRNGKey(14)
+        total, commits = 0, 0
+        for r in range(6):
+            key, sub = jax.random.split(key)
+            inp = workload.gen_neworder(
+                sub, cfg.n_threads, cfg.n_warehouses, cfg.n_items,
+                cfg.customers_per_district, None, 0.0, logits)
+            out = tpcc.neworder_round(cfg, lay, st, oracle, inp, round_no=r)
+            st = out.state
+            st = st._replace(nam=st.nam._replace(
+                table=mvcc.version_mover(st.nam.table)))
+            commits += int(np.asarray(out.committed).sum())
+            total += cfg.n_threads
+        rates[alpha] = 1.0 - commits / total
+    assert rates[2.0] > rates[None]
