@@ -1,27 +1,52 @@
 """Exp-1 (paper Fig. 4/5): TPC-C scale-out 2 → 56 servers.
 
-Protocol behaviour (abort rates, per-transaction op counts) is *measured* by
-running the real SI rounds; throughput curves come from the calibrated
-InfiniBand model fed with those measurements (DESIGN.md §5). Three systems:
-NAM-DB w/o locality, NAM-DB w/ locality, and the traditional two-sided SI
-baseline.
+Protocol behaviour (steady-state abort rates under the §7.4 retry
+discipline, per-transaction op counts, measured machine-local access
+fractions) is *measured* by running the real SI rounds; throughput curves
+come from the calibrated InfiniBand model fed with those measurements
+(DESIGN.md §5). Three systems: NAM-DB w/o locality, NAM-DB w/ locality, and
+the traditional two-sided SI baseline.
+
+``--shards N`` (default 8) additionally sweeps the shard count 1→N running
+the rounds through ``store.distributed_round`` on a simulated N-memory-server
+mesh (forced host devices), in both Fig. 5 deployments: locality-aware
+(warehouse-major placement + home routing) and locality-oblivious
+(table-major placement + round-robin thread pinning). The script re-execs
+itself with ``XLA_FLAGS=--xla_force_host_platform_device_count`` when the
+host does not expose enough devices.
+
+    python benchmarks/bench_tpcc_scaling.py --shards 8
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mvcc, netmodel
-from repro.core.tsoracle import VectorOracle
-from repro.db import tpcc, workload
+from repro import compat
+from repro.core import locality, netmodel
+from repro.core.tsoracle import PartitionedVectorOracle, VectorOracle
+from repro.db import tpcc
+
+
+def _profile_from_stats(stats: tpcc.NewOrderRunStats) -> netmodel.TxnProfile:
+    """Measured per-attempt op counts → cost-model transaction profile."""
+    per = 1.0 / max(1, stats.attempts)
+    # + inserts: 1 order + 1 new-order + ~10 order-lines + index = ~13 writes
+    return netmodel.TxnProfile(
+        reads=float(stats.ops.record_reads) * per,
+        cas=float(stats.ops.cas_ops) * per,
+        installs=float(stats.ops.writes) * per / 2 + 13,
+        bytes_read=float(stats.ops.bytes_moved) * per * 0.6 + 13 * 40,
+        bytes_written=float(stats.ops.bytes_moved) * per * 0.4 + 13 * 40)
 
 
 def measure_profile(n_rounds: int = 8, dist_degree: float = 100.0,
                     skew_alpha=None, n_threads: int = 32):
-    """Run real new-order rounds; return (TxnProfile, abort_rate, us/txn)."""
+    """Run real new-order rounds (single-shard reference path with the §7.4
+    retry queue); return (TxnProfile, steady-state abort rate, us/txn)."""
     # TPC-C terminal model at the paper's density (≈1 thread per warehouse:
     # 60 threads vs 50 warehouses per server): distinct home warehouses, so
     # contention comes from remote stock accesses, not artificial district
@@ -32,39 +57,49 @@ def measure_profile(n_rounds: int = 8, dist_degree: float = 100.0,
                           dist_degree=dist_degree, skew_alpha=skew_alpha)
     oracle = VectorOracle(cfg.n_threads)
     lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
-    logits = workload.zipf_logits(cfg.n_items, skew_alpha)
-    home = jnp.arange(cfg.n_threads, dtype=jnp.int32)
-    key = jax.random.PRNGKey(1)
-    commits = total = 0
-    reads = cas_ops = writes = b_moved = 0.0
+    home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
     t0 = time.perf_counter()
-    for r in range(n_rounds):
-        key, sub = jax.random.split(key)
-        inp = workload.gen_neworder(sub, cfg.n_threads, cfg.n_warehouses,
-                                    cfg.n_items, cfg.customers_per_district,
-                                    home, dist_degree, logits)
-        out = tpcc.neworder_round(cfg, lay, st, oracle, inp, round_no=r)
-        st = out.state._replace(nam=out.state.nam._replace(
-            table=mvcc.version_mover(out.state.nam.table)))
-        commits += int(np.asarray(out.committed).sum())
-        total += cfg.n_threads
-        reads += float(out.ops.record_reads)
-        cas_ops += float(out.ops.cas_ops)
-        writes += float(out.ops.writes)
-        b_moved += float(out.ops.bytes_moved)
-    wall_us = (time.perf_counter() - t0) / total * 1e6
-    per = 1.0 / total
-    # + inserts: 1 order + 1 new-order + ~10 order-lines + index = ~13 writes
-    prof = netmodel.TxnProfile(
-        reads=reads * per, cas=cas_ops * per,
-        installs=writes * per / 2 + 13,
-        bytes_read=b_moved * per * 0.6 + 13 * 40,
-        bytes_written=b_moved * per * 0.4 + 13 * 40)
-    abort_rate = 1.0 - commits / total
-    return prof, abort_rate, wall_us
+    st, stats = tpcc.run_neworder_rounds(
+        cfg, lay, st, oracle, jax.random.PRNGKey(1), n_rounds, home_w=home)
+    wall_us = (time.perf_counter() - t0) / stats.attempts * 1e6
+    return _profile_from_stats(stats), stats.abort_rate, wall_us
+
+
+def measure_sharded(n_shards: int, mode: str, n_rounds: int = 8,
+                    n_threads: int = 16, dist_degree: float = 20.0):
+    """TPC-C new-order rounds through ``distributed_round`` on an
+    ``n_shards``-memory-server mesh, in one Fig. 5 deployment.
+
+    mode="aware":     warehouse-major placement, txns routed to their home
+                      warehouse's server (§7.3 'w/ locality').
+    mode="oblivious": table-major placement, threads pinned round-robin.
+
+    Returns (TxnProfile, abort_rate, local_fraction, us/txn).
+    """
+    layout = "warehouse_major" if mode == "aware" else "table_major"
+    cfg = tpcc.TPCCConfig(n_warehouses=n_threads, customers_per_district=16,
+                          n_items=256, n_threads=n_threads,
+                          orders_per_thread=max(64, n_rounds * 2),
+                          dist_degree=dist_degree, layout=layout)
+    oracle = PartitionedVectorOracle(cfg.n_threads, n_parts=n_shards)
+    lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
+    mesh = jax.sharding.Mesh(np.array(compat.cpu_devices()[:n_shards]),
+                             ("mem",))
+    engine = tpcc.make_distributed_engine(cfg, lay, mesh, "mem", oracle,
+                                          shard_vector=True)
+    st = tpcc.distribute_state(engine, st)
+    home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
+    t0 = time.perf_counter()
+    st, stats = tpcc.run_neworder_rounds(
+        cfg, lay, st, oracle, jax.random.PRNGKey(1), n_rounds, home_w=home,
+        engine=engine, locality_mode=mode)
+    wall_us = (time.perf_counter() - t0) / stats.attempts * 1e6
+    return (_profile_from_stats(stats), stats.abort_rate,
+            stats.local_fraction, wall_us)
 
 
 def run():
+    """Single-device entry used by benchmarks/run.py (no mesh leakage)."""
     prof, abort, us = measure_profile()
     rows = [("tpcc_neworder_round_sim", us,
              netmodel.namdb_throughput(prof, 56, 60, abort))]
@@ -85,7 +120,41 @@ def run():
     return rows, curves, prof, abort
 
 
-if __name__ == "__main__":
+def run_shard_sweep(max_shards: int, n_rounds: int, n_threads: int):
+    """Shard count 1→max_shards × {aware, oblivious}: measured profiles feed
+    the cost model at the matching cluster size (n memory + n compute).
+
+    Returns (results, skipped): shard counts that do not divide the thread
+    count cannot host the partitioned timestamp vector and are reported
+    rather than silently dropped.
+    """
+    sweep = sorted({s for s in (1, 2, 4, 8, 16) if s < max_shards}
+                   | {max_shards})
+    results, skipped = [], []
+    for n in sweep:
+        if n_threads % n:
+            skipped.append(n)
+            continue
+        for mode in ("oblivious", "aware"):
+            prof, abort, lf, us = measure_sharded(
+                n, mode, n_rounds=n_rounds, n_threads=n_threads)
+            thr = netmodel.namdb_throughput(prof, 2 * n, 60, abort,
+                                            local_fraction=lf)
+            results.append((n, mode, abort, lf, us, prof, thr))
+    return results, skipped
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--threads", type=int, default=16)
+    args = ap.parse_args()
+
+    if args.shards > 1:
+        compat.ensure_host_devices(args.shards)
+
+    print("name,us_per_call,derived")
     rows, curves, prof, abort = run()
     for r in rows:
         print(f"{r[0]},{r[1]:.1f},{r[2]:.0f}")
@@ -94,3 +163,21 @@ if __name__ == "__main__":
     for name, pts in curves.items():
         print(f"# {name}: "
               + " ".join(f"{n}m={t/1e6:.2f}M" for n, t in pts))
+
+    if args.shards >= 1:
+        print("# --- sharded mesh sweep (distributed_round, "
+              f"{args.threads} threads) ---")
+        results, skipped = run_shard_sweep(args.shards, args.rounds,
+                                           args.threads)
+        for n in skipped:
+            print(f"# skipped {n} shards: --threads {args.threads} not "
+                  f"divisible (partitioned T_R needs n_threads % shards == 0)")
+        for n, mode, ab, lf, us, p, thr in results:
+            print(f"tpcc_dist_{n}shard_{mode},{us:.1f},{thr:.0f}")
+            print(f"#   shards={n} mode={mode}: abort={ab:.3f} "
+                  f"local_frac={lf:.3f} reads/txn={p.reads:.1f} "
+                  f"thr@{2*n}m={thr/1e6:.2f}M")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,10 @@ network model to project cluster throughput at 8 and 56 machines — the
 paper's Fig. 4 numbers.
 
     PYTHONPATH=src python examples/tpcc_demo.py --rounds 8 --skew 0.9
+
+With ``--shards 8`` the rounds run through ``store.distributed_round`` on a
+simulated 8-memory-server mesh (forced host devices; the script re-execs
+itself to set XLA_FLAGS), in both Fig. 5 locality deployments.
 """
 import argparse
 import time
@@ -16,9 +20,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mvcc, netmodel
-from repro.core.tsoracle import VectorOracle
+from repro import compat
+from repro.core import locality, mvcc, netmodel
+from repro.core.tsoracle import PartitionedVectorOracle, VectorOracle
 from repro.db import tpcc, workload
+
+
+def run_sharded(args):
+    """New-order rounds on the mesh, locality-aware vs -oblivious.
+
+    The sharded path pins one execution thread per warehouse (the paper's
+    terminal density), so --warehouses is implied by --threads here.
+    """
+    if args.warehouses != args.threads:
+        print(f"# note: --shards pins warehouses to --threads "
+              f"({args.threads}); ignoring --warehouses={args.warehouses}")
+    for mode, layout in (("aware", "warehouse_major"),
+                         ("oblivious", "table_major")):
+        cfg = tpcc.TPCCConfig(
+            n_warehouses=args.threads, customers_per_district=16,
+            n_items=256, n_threads=args.threads,
+            orders_per_thread=max(64, args.rounds * 2),
+            dist_degree=args.dist, skew_alpha=args.skew, layout=layout)
+        oracle = PartitionedVectorOracle(cfg.n_threads, n_parts=args.shards)
+        lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
+        mesh = jax.sharding.Mesh(np.array(compat.cpu_devices()[:args.shards]),
+                                 ("mem",))
+        engine = tpcc.make_distributed_engine(cfg, lay, mesh, "mem", oracle,
+                                              shard_vector=True)
+        st = tpcc.distribute_state(engine, st)
+        home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
+        st, stats = tpcc.run_neworder_rounds(
+            cfg, lay, st, oracle, jax.random.PRNGKey(1), args.rounds,
+            home_w=home, engine=engine, locality_mode=mode)
+        print(f"{args.shards}-server mesh, {mode:9s}: "
+              f"{stats.commits}/{stats.attempts} committed "
+              f"(steady-state abort {stats.abort_rate:.3f}), "
+              f"{stats.local_fraction * 100:.0f}% of accesses machine-local")
+    print("tpcc_demo OK")
 
 
 def main():
@@ -30,7 +69,14 @@ def main():
                     help="zipf alpha (None = uniform)")
     ap.add_argument("--dist", type=float, default=10.0,
                     help="%% of new-orders touching a remote warehouse")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="run through distributed_round on this many "
+                    "simulated memory servers")
     args = ap.parse_args()
+
+    if args.shards > 1:
+        compat.ensure_host_devices(args.shards)
+        return run_sharded(args)
 
     cfg = tpcc.TPCCConfig(n_warehouses=args.warehouses,
                           customers_per_district=32, n_items=256,

@@ -1,0 +1,77 @@
+"""Version compatibility shims for JAX.
+
+``shard_map`` moved twice across JAX releases:
+
+* jax <= 0.4.x: ``jax.experimental.shard_map.shard_map`` with a ``check_rep``
+  keyword,
+* jax >= 0.5:   re-exported as ``jax.shard_map`` with ``check_rep`` renamed
+  to ``check_vma``.
+
+Every module in this repo imports :func:`shard_map` from here so the
+difference is papered over in exactly one place. The shim presents the NEW
+interface (``check_vma``) and translates for old installs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+if hasattr(jax, "shard_map"):                       # jax >= 0.5
+    shard_map = jax.shard_map
+else:                                               # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    @functools.wraps(_legacy_shard_map)
+    def shard_map(f=None, /, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if f is None:                               # partial-application form
+            return functools.partial(shard_map, **kwargs)
+        return _legacy_shard_map(f, **kwargs)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` (jax >= 0.5); on older jax the size of a mapped
+    axis is recovered with a constant-folded ``psum(1)``."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def cpu_devices():
+    """CPU devices only — simulated memory-server meshes live on these.
+    Counting ``jax.devices()`` instead would never grow from the forced-
+    host-device flag on a GPU/TPU host (default backend wins)."""
+    try:
+        return jax.devices("cpu")
+    except RuntimeError:
+        return []
+
+
+def ensure_host_devices(n: int, *, marker: str = "_REPRO_MESH_REEXEC"):
+    """Guarantee ``n`` forced CPU host devices for a CLI script.
+
+    XLA reads ``--xla_force_host_platform_device_count`` only before jax
+    initializes, so a script that needs a simulated mesh re-execs itself
+    once with the flag set. ``marker`` prevents an exec loop when the flag
+    cannot take effect (e.g. overridden XLA_FLAGS). No-op when enough CPU
+    devices already exist.
+    """
+    import os
+    import sys
+
+    if len(cpu_devices()) >= n:
+        return
+    if os.environ.get(marker):
+        raise SystemExit(
+            f"still only {len(cpu_devices())} CPU devices after re-exec "
+            f"(wanted {n}); is XLA_FLAGS being overridden?")
+    flag = f"--xla_force_host_platform_device_count={n}"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
+    env[marker] = "1"
+    os.execve(sys.executable, [sys.executable] + sys.argv, env)
+
+
+__all__ = ["shard_map", "axis_size", "cpu_devices", "ensure_host_devices"]

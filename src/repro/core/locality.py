@@ -52,6 +52,33 @@ def route_home(home_warehouse, warehouses_per_server: int):
     return jnp.asarray(home_warehouse, jnp.int32) // warehouses_per_server
 
 
+def thread_homes(n_threads: int, n_warehouses: int) -> jnp.ndarray:
+    """TPC-C terminal model: threads pinned round-robin to home warehouses
+    (≈1 execution thread per warehouse at the paper's density, §7.1)."""
+    return jnp.arange(n_threads, dtype=jnp.int32) % n_warehouses
+
+
+def route_transactions(mode: str, placement: Placement, home_slot, tid,
+                       n_threads: int):
+    """The two Fig. 5 deployments as routing policies.
+
+    ``"aware"`` executes each transaction on the machine owning its home
+    district record (§7.3 'w/ locality': a compute server is co-located with
+    each memory server, and the txn is routed to its home warehouse's pair) —
+    home-warehouse accesses then hit local memory. ``"oblivious"`` pins
+    threads to machines round-robin with no regard for data placement (the
+    default NAM deployment): locality happens only by accident.
+
+    Returns the executing server id per transaction, int32 [T].
+    """
+    if mode == "aware":
+        return placement.server_of_slot(home_slot)
+    if mode == "oblivious":
+        return co_located_server(
+            tid, max(1, -(-n_threads // placement.n_servers)))
+    raise ValueError(f"unknown locality mode: {mode!r}")
+
+
 def expected_local_fraction(distributed_pct: float,
                             items_remote_when_distributed: float = 1.0,
                             accesses_home: float = 13.0,

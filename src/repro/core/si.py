@@ -71,6 +71,28 @@ ComputeFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 # (read_hdr [T,RS,2], read_data [T,RS,W], rts_vec) -> new_data [T,WS,W]
 
 
+def count_ops(oracle, batch: TxnBatch, txn_found, from_current, n_installs,
+              n_releases, n_committed, payload_width: int,
+              payload_bytes: int = 0) -> OpCounts:
+    """RDMA-op accounting for one round (shared by the single-shard path and
+    :func:`repro.core.store.distributed_round`, so the two produce identical
+    profiles for the cost model)."""
+    T, RS = batch.read_slots.shape
+    n_active_r = jnp.sum(batch.read_mask)
+    n_active_w = jnp.sum(batch.write_mask & txn_found[:, None])
+    vec_bytes = 4 * getattr(oracle, "n_slots", T)
+    rec_bytes = 8 + 4 * payload_width if payload_bytes == 0 else payload_bytes
+    return OpCounts(
+        ts_reads=jnp.asarray(T),
+        ts_read_bytes=jnp.asarray(T * vec_bytes),
+        record_reads=n_active_r + jnp.sum(~from_current & batch.read_mask),
+        cas_ops=n_active_w,
+        writes=2 * n_installs + n_releases + n_committed,
+        bytes_moved=(n_active_r + 2 * n_installs) * rec_bytes
+        + jnp.asarray(T * vec_bytes),
+    )
+
+
 def run_round(
     table: VersionedTable,
     oracle: VectorOracle,
@@ -156,21 +178,9 @@ def run_round(
     state = oracle.make_visible(state, batch.tid, cts, committed)
 
     # ---- op accounting -----------------------------------------------------
-    n_active_r = jnp.sum(batch.read_mask)
-    n_active_w = jnp.sum(req_active)
-    vec_bytes = 4 * getattr(oracle, "n_slots", T)
-    rec_bytes = 8 + 4 * W if payload_bytes == 0 else payload_bytes
-    ops = OpCounts(
-        ts_reads=jnp.asarray(T),
-        ts_read_bytes=jnp.asarray(T * vec_bytes),
-        record_reads=n_active_r + jnp.sum(~vr.from_current.reshape(T, RS)
-                                          & batch.read_mask),
-        cas_ops=n_active_w,
-        writes=2 * jnp.sum(do_install) + jnp.sum(release_mask)
-        + jnp.sum(committed),
-        bytes_moved=(n_active_r + 2 * jnp.sum(do_install)) * rec_bytes
-        + jnp.asarray(T * vec_bytes),
-    )
+    ops = count_ops(oracle, batch, txn_found, vr.from_current.reshape(T, RS),
+                    jnp.sum(do_install), jnp.sum(release_mask),
+                    jnp.sum(committed), W, payload_bytes)
     del inst_mask
     return RoundResult(table=table, oracle_state=state, committed=committed,
                        snapshot_miss=~txn_found, read_data=read_data, ops=ops)

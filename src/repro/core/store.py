@@ -22,7 +22,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.core import cas, header as hdr_ops, mvcc
 from repro.core.catalog import Catalog
@@ -64,9 +65,15 @@ def init_store(catalog: Catalog, oracle: VectorOracle, *, n_old: int = 2,
 
 def mark_region_deleted(store: NAMStore, base: int, count: int) -> NAMStore:
     """Pre-mark an insert region's records as deleted (non-existent)."""
+    return mark_slots_deleted(store, jnp.arange(base, base + count))
+
+
+def mark_slots_deleted(store: NAMStore, slots) -> NAMStore:
+    """Pre-mark arbitrary record slots as deleted (non-existent) — used for
+    strided insert regions (e.g. the warehouse-major TPC-C layout)."""
+    slots = jnp.asarray(slots, jnp.int32)
     meta = store.table.cur_hdr[:, hdr_ops.META]
-    idx = jnp.arange(base, base + count)
-    meta = meta.at[idx].set(meta[idx] | hdr_ops.DELETED_BIT)
+    meta = meta.at[slots].set(meta[slots] | hdr_ops.DELETED_BIT)
     return store._replace(
         table=store.table._replace(
             cur_hdr=store.table.cur_hdr.at[:, hdr_ops.META].set(meta)))
@@ -89,6 +96,24 @@ def allocate(extends: ExtendState, tid, region, n, region_base, extend_size,
 # ---------------------------------------------------------------------------
 # Distributed execution: one SI round under shard_map
 # ---------------------------------------------------------------------------
+class DistRoundOut(NamedTuple):
+    """Replicated per-round outputs of :func:`distributed_round`.
+
+    Mirrors :class:`repro.core.si.RoundResult` minus the state (table and
+    timestamp vector travel separately because they stay device-sharded);
+    the trailing counters feed :func:`repro.core.si.count_ops` so the
+    distributed path produces the same RDMA-op accounting as the
+    single-shard reference.
+    """
+    committed: jnp.ndarray      # bool  [T]
+    snapshot_miss: jnp.ndarray  # bool  [T]
+    read_data: jnp.ndarray      # int32 [T, RS, W]
+    txn_found: jnp.ndarray      # bool  [T]
+    from_current: jnp.ndarray   # bool  [T, RS] — read hit the in-place version
+    n_installs: jnp.ndarray     # int32 [] — installs across all shards
+    n_releases: jnp.ndarray     # int32 [] — abort-path lock releases
+
+
 def _local_slots(slots, base, count):
     """Map global slots to local; out-of-shard → count (OOB, dropped)."""
     loc = slots - base
@@ -97,26 +122,54 @@ def _local_slots(slots, base, count):
 
 
 def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
-                      compute_fn: Callable, shard_records: int):
-    """Build a jittable ``round(table_sharded, oracle_vec, batch) -> …``.
+                      compute_fn: Callable, shard_records: int, *,
+                      shard_vector: bool = False):
+    """Build a jittable ``round(table_sharded, vec, batch, aux)`` executor.
 
     ``table_sharded``: VersionedTable with leading record axis sharded over
-    ``axis``. ``oracle_vec`` is replicated (its partitioned variant shards it
-    too — see PartitionedVectorOracle). ``batch`` is replicated: every memory
-    server sees every request, applies only its own slots — the all-gather of
-    requests is the message-pattern dual of one-sided reads and is counted as
-    such by the cost model, not as two-sided RPC handling.
+    ``axis`` — each device is one memory server owning ``shard_records``
+    contiguous pool slots. ``batch`` (and the ``aux`` pytree threaded to
+    ``compute_fn``) is replicated: every memory server sees every request and
+    applies only its own slots — the all-gather of requests is the
+    message-pattern dual of one-sided reads and is counted as such by the
+    cost model, not as two-sided RPC handling.
+
+    ``compute_fn(read_hdr, read_data, vec, aux) -> new_data`` is the
+    transaction logic; ``aux`` carries per-round inputs (e.g. the TPC-C
+    order lines) so one built executor serves every round.
+
+    ``shard_vector=True`` additionally range-partitions the timestamp vector
+    over the same mesh axis (§4.2 "Partitioning of T_R", the
+    :class:`~repro.core.tsoracle.PartitionedVectorOracle` deployment): each
+    memory server owns ``n_slots / n_shards`` contiguous vector slots, the
+    snapshot read becomes an all-gather of the parts, and each server writes
+    back only its own part. Semantics are identical to the replicated vector
+    — the partitioning is a placement decision, exactly as in the paper.
+
+    Returns ``(round_fn, n_shards)`` with
+    ``round_fn(table, vec, batch, aux) -> (table, vec, DistRoundOut)``.
     """
     n_shards = mesh.shape[axis]
+    if shard_vector:
+        if oracle.n_slots % n_shards:
+            raise ValueError(
+                f"shard_vector needs n_slots ({oracle.n_slots}) divisible by "
+                f"the mesh axis ({n_shards})")
+        part_slots = oracle.n_slots // n_shards
 
-    def local_round(table: VersionedTable, vec: jnp.ndarray, batch: TxnBatch):
+    def local_round(table: VersionedTable, vec: jnp.ndarray, batch: TxnBatch,
+                    aux):
         shard_id = jax.lax.axis_index(axis)
         base = shard_id * shard_records
         T, RS = batch.read_slots.shape
         WS = batch.write_ref.shape[1]
         W = table.payload_width
 
-        # ---- one-sided visible reads (masked local + all-reduce) ---------
+        # ---- 1. read the timestamp vector (gather the partitions) --------
+        if shard_vector:
+            vec = jax.lax.all_gather(vec, axis, tiled=True)
+
+        # ---- 2. one-sided visible reads (masked local + all-reduce) ------
         flat = batch.read_slots.reshape(-1)
         loc, inside = _local_slots(flat, base, shard_records)
         safe = jnp.where(inside, loc, 0)
@@ -124,24 +177,32 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         rh = jnp.where(inside[:, None], vr.hdr, 0)
         rd = jnp.where(inside[:, None], vr.data, 0)
         fnd = jnp.where(inside, vr.found, False)
+        fcur = jnp.where(inside, vr.from_current, False)
         rh = jax.lax.psum(rh, axis)
         rd = jax.lax.psum(rd, axis)
         found = jax.lax.psum(fnd.astype(jnp.int32), axis) > 0
+        from_current = (jax.lax.psum(fcur.astype(jnp.int32), axis) > 0) \
+            .reshape(T, RS)
         read_hdr = rh.reshape(T, RS, 2).astype(jnp.uint32)
         read_data = rd.reshape(T, RS, W)
         found = found.reshape(T, RS) | ~batch.read_mask
         txn_found = jnp.all(found, axis=1)
 
-        # ---- local transaction logic (replicated, deterministic) ---------
-        new_data = compute_fn(read_hdr, read_data, vec)
+        # ---- 3. local transaction logic (replicated, deterministic) ------
+        new_data = compute_fn(read_hdr, read_data, vec, aux)
 
+        # ---- 4. commit timestamps, created locally (same as si.run_round)
         slot_ids = oracle.slot_of_thread(batch.tid)
-        cts = vec[slot_ids] + jnp.uint32(1)
+        if hasattr(oracle, "next_commit_ts_batch"):
+            cts = oracle.next_commit_ts_batch(
+                VectorState(vec=vec), batch.tid, txn_found)
+        else:
+            cts = vec[slot_ids] + jnp.uint32(1)
         new_hdr = hdr_ops.pack(
             jnp.broadcast_to(slot_ids.astype(jnp.uint32)[:, None], (T, WS)),
             jnp.broadcast_to(cts[:, None], (T, WS)))
 
-        # ---- validate+lock on the owning shard ---------------------------
+        # ---- 5. validate+lock on the owning shard ------------------------
         wref = jnp.clip(batch.write_ref, 0, RS - 1)
         wslots = jnp.take_along_axis(batch.read_slots, wref, axis=1)
         expected = jnp.take_along_axis(read_hdr, wref[:, :, None], axis=1)
@@ -160,7 +221,7 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         victim = table.old_hdr[jnp.where(mine, wloc, 0), vpos]
         effective = res.granted & hdr_ops.is_moved(victim)
 
-        # ---- global commit decision (psum of failures) --------------------
+        # ---- 6. global commit decision (psum of failures) ----------------
         txn_of_req = jnp.broadcast_to(
             jnp.arange(T, dtype=jnp.int32)[:, None], (T, WS)).reshape(-1)
         failed_local = mine & ~effective
@@ -169,7 +230,7 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         fails = jax.lax.psum(fails, axis)
         committed = (fails == 0) & txn_found
 
-        # ---- install / release on the owning shard ------------------------
+        # ---- 7./8. install / release on the owning shard -----------------
         do_install = effective & committed[txn_of_req]
         inst = mvcc.install(table, wloc, new_hdr.reshape(-1, 2),
                             new_data.reshape(-1, W), do_install)
@@ -177,11 +238,23 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         release_mask = res.granted & ~committed[txn_of_req]
         table = table._replace(
             cur_hdr=cas.release(table.cur_hdr, wloc, release_mask))
+        n_installs = jax.lax.psum(jnp.sum(do_install.astype(jnp.int32)), axis)
+        n_releases = jax.lax.psum(jnp.sum(release_mask.astype(jnp.int32)),
+                                  axis)
 
-        # ---- make visible (replicated vector update) -----------------------
-        vis_cts = jnp.where(committed, cts, jnp.uint32(0))
-        vec = vec.at[slot_ids].max(vis_cts)
-        return table, vec, committed, read_data
+        # ---- 9. make visible (identical update as the reference path) ----
+        vec = oracle.make_visible(
+            VectorState(vec=vec), batch.tid, cts, committed).vec
+        if shard_vector:
+            vec = jax.lax.dynamic_slice_in_dim(
+                vec, shard_id * part_slots, part_slots)
+
+        out = DistRoundOut(
+            committed=committed, snapshot_miss=~txn_found,
+            read_data=read_data, txn_found=txn_found,
+            from_current=from_current, n_installs=n_installs,
+            n_releases=n_releases)
+        return table, vec, out
 
     tbl_spec = VersionedTable(
         cur_hdr=P(axis), cur_data=P(axis), old_hdr=P(axis), old_data=P(axis),
@@ -189,11 +262,37 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         ovf_next=P(axis))
     batch_spec = TxnBatch(tid=P(), read_slots=P(), read_mask=P(),
                           write_ref=P(), write_mask=P())
+    vec_spec = P(axis) if shard_vector else P()
+    out_spec = DistRoundOut(
+        committed=P(), snapshot_miss=P(), read_data=P(), txn_found=P(),
+        from_current=P(), n_installs=P(), n_releases=P())
     fn = shard_map(local_round, mesh=mesh,
-                   in_specs=(tbl_spec, P(), batch_spec),
-                   out_specs=(tbl_spec, P(), P(), P()),
+                   in_specs=(tbl_spec, vec_spec, batch_spec, P()),
+                   out_specs=(tbl_spec, vec_spec, out_spec),
                    check_vma=False)
     return jax.jit(fn), n_shards
+
+
+def pad_table(table: VersionedTable, multiple: int):
+    """Pad the record axis so it divides evenly over ``multiple`` shards.
+
+    Padding records are marked deleted (reads report not-found) and their
+    old-version slots carry the reusable "moved" sentinel, same as
+    :func:`repro.core.mvcc.init_table`; no transaction ever addresses them,
+    they only square off the shard_map partitioning. Returns
+    ``(padded_table, n_padded_records)``.
+    """
+    n = table.n_records
+    pad = (-n) % multiple
+    if pad == 0:
+        return table, n
+    filler = mvcc.init_table(pad, table.payload_width, n_old=table.n_old,
+                             n_overflow=table.ovf_hdr.shape[1])
+    filler = filler._replace(
+        cur_hdr=hdr_ops.with_deleted(filler.cur_hdr, True))
+    padded = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                          table, filler)
+    return padded, n + pad
 
 
 def shard_table(mesh: Mesh, axis: str, table: VersionedTable):
@@ -202,3 +301,9 @@ def shard_table(mesh: Mesh, axis: str, table: VersionedTable):
         return jax.device_put(
             x, NamedSharding(mesh, P(*([axis] + [None] * (x.ndim - 1)))))
     return jax.tree.map(put, table)
+
+
+def shard_vector(mesh: Mesh, axis: str, vec: jnp.ndarray) -> jnp.ndarray:
+    """Place the timestamp vector range-partitioned over the mesh axis
+    (§4.2 "Partitioning of T_R" — pair with ``shard_vector=True``)."""
+    return jax.device_put(vec, NamedSharding(mesh, P(axis)))

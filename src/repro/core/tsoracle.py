@@ -218,6 +218,57 @@ class PartitionedVectorOracle(VectorOracle):
         return states[round_of_part[part], slots]
 
 
+class NaiveAdapterState(NamedTuple):
+    vec: jnp.ndarray          # uint32 [1] — mirrors the advanced rts
+    gc: GlobalCounterState
+
+
+class NaiveOracleAdapter:
+    """Drives the batched SI engine with the §3.1 naive design underneath.
+
+    The engine's oracle interface is the vector one, so the global-counter
+    oracle is adapted: the "vector" has exactly one slot holding the global
+    read timestamp. Commit timestamps come from the shared RDMA
+    fetch-and-add (:meth:`GlobalCounterOracle.fetch_commit_ts` — the NIC
+    serializes the round's requests in thread order); making them visible
+    appends every outcome to the ctsList and runs the management thread's
+    gap-free-prefix advance. Within one batched round every outcome is
+    known, so the prefix always closes and ``rts`` reaches the round's top —
+    commit/abort *decisions* therefore match the vector oracles exactly
+    (tests/test_oracle_differential.py); what differs is the cost profile,
+    which is the paper's whole point (Fig. 6).
+    """
+
+    def __init__(self, n_threads: int, capacity: int = 1 << 12):
+        self.inner = GlobalCounterOracle(capacity)
+        self.n_threads = n_threads
+        self.n_slots = 1
+
+    def init(self) -> NaiveAdapterState:
+        g = self.inner.init()
+        return NaiveAdapterState(vec=g.rts, gc=g)
+
+    def slot_of_thread(self, tid):
+        return jnp.zeros_like(jnp.asarray(tid))
+
+    def read(self, state: NaiveAdapterState) -> jnp.ndarray:
+        return state.vec
+
+    def next_commit_ts_batch(self, state, tids, want):
+        # every thread of the round fetches a cts from the one counter; the
+        # assigned values are base+1 … base+T in NIC-arbitration (tid) order
+        del want  # aborted/not-found txns still fetched one (and waste it)
+        base = state.gc.cts[0]
+        return base + jnp.uint32(1) + jnp.asarray(tids).astype(jnp.uint32)
+
+    def make_visible(self, state: NaiveAdapterState, tid, cts,
+                     committed=None):
+        g, _ = self.inner.fetch_commit_ts(state.gc, self.n_threads)
+        g = self.inner.complete(g, jnp.asarray(cts, jnp.uint32), committed)
+        g = self.inner.advance(g)
+        return NaiveAdapterState(vec=g.rts, gc=g)
+
+
 def staleness_window(vec_history: jnp.ndarray, k: int) -> jnp.ndarray:
     """§4.2 dedicated-fetch-thread: use the vector prefetched ``k`` rounds ago.
 

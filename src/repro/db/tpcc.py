@@ -17,15 +17,16 @@ over via header CAS — TPC-C's classic conflict, left fully intact.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import header as hdr_ops, mvcc, rangeindex as ri, si, store
+from repro.core import header as hdr_ops, locality, mvcc, rangeindex as ri, \
+    si, store
 from repro.core.catalog import Catalog
 from repro.core.si import TxnBatch
-from repro.core.tsoracle import VectorOracle
+from repro.core.tsoracle import VectorOracle, VectorState
 from repro.db import workload
 
 WIDTH = 8          # unified payload width (int32 words)
@@ -58,14 +59,39 @@ class TPCCConfig:
     skew_alpha: Optional[float] = None
     n_old_versions: int = 2
     n_overflow: int = 2
+    layout: str = "table_major"      # or "warehouse_major" (§7.3 locality)
 
 
 class TPCCLayout(NamedTuple):
+    """Slot layout of the unified pool.
+
+    ``table_major`` (default) lays tables out back to back — record placement
+    ignores warehouse boundaries, so range-partitioning the pool over memory
+    servers scatters each warehouse: the locality-*oblivious* deployment.
+
+    ``warehouse_major`` packs one contiguous *block* per warehouse holding
+    its warehouse/district/customer/stock records, a read-only replica of the
+    item table (the paper's "read-only tables can be replicated"), and the
+    insert extends of the threads homed there. With ``n_warehouses`` a
+    multiple of the shard count, whole warehouses land on single memory
+    servers — the §7.3 locality-*aware* placement of Fig. 5.
+    """
     catalog: Catalog
     order_base: int
     ol_base: int
     no_base: int
     hist_base: int
+    mode: str = "table_major"
+    block: int = 0       # block stride (warehouse_major only)
+    d_off: int = 0       # offsets inside a warehouse block
+    c_off: int = 0
+    s_off: int = 0
+    i_off: int = 0
+    o_off: int = 0
+    ol_off: int = 0
+    no_off: int = 0
+    h_off: int = 0
+    tpw: int = 1         # execution threads homed per warehouse
 
 
 class TPCCState(NamedTuple):
@@ -75,6 +101,8 @@ class TPCCState(NamedTuple):
 
 
 def make_layout(cfg: TPCCConfig) -> TPCCLayout:
+    if cfg.layout == "warehouse_major":
+        return _make_wh_layout(cfg)
     cat = Catalog(n_servers=cfg.n_warehouses)
     cat.create_table("warehouse", cfg.n_warehouses, WIDTH, 2)
     cat.create_table("district", cfg.n_warehouses * DISTRICTS, WIDTH, 4)
@@ -91,26 +119,106 @@ def make_layout(cfg: TPCCConfig) -> TPCCLayout:
                       no_base=no.base, hist_base=h.base)
 
 
+def _make_wh_layout(cfg: TPCCConfig) -> TPCCLayout:
+    if cfg.n_threads % cfg.n_warehouses:
+        raise ValueError("warehouse_major needs n_threads divisible by "
+                         "n_warehouses (threads are homed per warehouse)")
+    tpw = cfg.n_threads // cfg.n_warehouses
+    opt = cfg.orders_per_thread
+    d_off = 1
+    c_off = d_off + DISTRICTS
+    s_off = c_off + DISTRICTS * cfg.customers_per_district
+    i_off = s_off + cfg.n_items
+    o_off = i_off + cfg.n_items
+    ol_off = o_off + tpw * opt
+    no_off = ol_off + tpw * opt * MAX_OL
+    h_off = no_off + tpw * opt
+    block = h_off + tpw * opt
+    cat = Catalog(n_servers=cfg.n_warehouses)
+    cat.create_table("wh_block", cfg.n_warehouses * block, WIDTH, 6)
+    return TPCCLayout(catalog=cat, order_base=-1, ol_base=-1, no_base=-1,
+                      hist_base=-1, mode="warehouse_major", block=block,
+                      d_off=d_off, c_off=c_off, s_off=s_off, i_off=i_off,
+                      o_off=o_off, ol_off=ol_off, no_off=no_off, h_off=h_off,
+                      tpw=tpw)
+
+
 # ------------------------------------------------------------- slot math ----
 def w_slot(lay, w):
+    if lay.mode == "warehouse_major":
+        return jnp.asarray(w, jnp.int32) * lay.block
     return lay.catalog["warehouse"].base + w
 
 
 def d_slot(lay, w, d):
+    if lay.mode == "warehouse_major":
+        return jnp.asarray(w, jnp.int32) * lay.block + lay.d_off + d
     return lay.catalog["district"].base + w * DISTRICTS + d
 
 
 def c_slot(lay, cfg, w, d, c):
+    if lay.mode == "warehouse_major":
+        return jnp.asarray(w, jnp.int32) * lay.block + lay.c_off \
+            + d * cfg.customers_per_district + c
     return lay.catalog["customer"].base \
         + (w * DISTRICTS + d) * cfg.customers_per_district + c
 
 
 def s_slot(lay, cfg, w, i):
+    if lay.mode == "warehouse_major":
+        return jnp.asarray(w, jnp.int32) * lay.block + lay.s_off + i
     return lay.catalog["stock"].base + w * cfg.n_items + i
 
 
-def i_slot(lay, i):
+def i_slot(lay, i, w=None):
+    """Item read. Warehouse-major reads the executing warehouse's local
+    replica (read-only tables are replicated, §7.3), so ``w`` is required."""
+    if lay.mode == "warehouse_major":
+        assert w is not None, "warehouse_major item reads need the home w"
+        return jnp.asarray(w, jnp.int32) * lay.block + lay.i_off + i
     return lay.catalog["item"].base + i
+
+
+def _tid_home(cfg, tid):
+    """Home warehouse + within-warehouse rank of an execution thread."""
+    tid = jnp.asarray(tid, jnp.int32)
+    return tid % cfg.n_warehouses, tid // cfg.n_warehouses
+
+
+def o_slot_ext(lay, cfg, tid, local):
+    """Order-insert extend slot of thread ``tid`` at cursor ``local``."""
+    if lay.mode == "warehouse_major":
+        w, r = _tid_home(cfg, tid)
+        return w * lay.block + lay.o_off + r * cfg.orders_per_thread + local
+    return lay.order_base + jnp.asarray(tid, jnp.int32) \
+        * cfg.orders_per_thread + local
+
+
+def no_slot_ext(lay, cfg, tid, local):
+    if lay.mode == "warehouse_major":
+        w, r = _tid_home(cfg, tid)
+        return w * lay.block + lay.no_off + r * cfg.orders_per_thread + local
+    return lay.no_base + jnp.asarray(tid, jnp.int32) \
+        * cfg.orders_per_thread + local
+
+
+def h_slot_ext(lay, cfg, tid, local):
+    if lay.mode == "warehouse_major":
+        w, r = _tid_home(cfg, tid)
+        return w * lay.block + lay.h_off + r * cfg.orders_per_thread + local
+    return lay.hist_base + jnp.asarray(tid, jnp.int32) \
+        * cfg.orders_per_thread + local
+
+
+def ol_slots_of_order(lay, cfg, oslot):
+    """First order-line slot of the order stored at ``oslot`` (an order's
+    lines are contiguous: +0 … +MAX_OL-1)."""
+    oslot = jnp.asarray(oslot, jnp.int32)
+    if lay.mode == "warehouse_major":
+        blk = oslot // lay.block
+        k = oslot - blk * lay.block - lay.o_off
+        return blk * lay.block + lay.ol_off + k * MAX_OL
+    return lay.ol_base + (oslot - lay.order_base) * MAX_OL
 
 
 def order_key(w, d, o_id):
@@ -127,27 +235,42 @@ def init_tpcc(cfg: TPCCConfig, oracle: VectorOracle,
     tbl = nam.table
     ks = jax.random.split(key, 6)
     data = tbl.cur_data
+    W, I, D = cfg.n_warehouses, cfg.n_items, DISTRICTS
 
-    wspec = lay.catalog["warehouse"]
-    data = data.at[wspec.base:wspec.end, W_COL["tax"]].set(
-        jax.random.randint(ks[0], (wspec.count,), 0, 2000))
-    dspec = lay.catalog["district"]
-    data = data.at[dspec.base:dspec.end, D_COL["tax"]].set(
-        jax.random.randint(ks[1], (dspec.count,), 0, 2000))
+    data = data.at[w_slot(lay, jnp.arange(W)), W_COL["tax"]].set(
+        jax.random.randint(ks[0], (W,), 0, 2000))
+    dsl = d_slot(lay, jnp.repeat(jnp.arange(W), D), jnp.tile(jnp.arange(D), W))
+    data = data.at[dsl, D_COL["tax"]].set(
+        jax.random.randint(ks[1], (W * D,), 0, 2000))
     # d_next_o_id starts at 0; next_deliv at 0
-    ispec = lay.catalog["item"]
-    data = data.at[ispec.base:ispec.end, I_COL["price"]].set(
-        jax.random.randint(ks[2], (ispec.count,), 100, 10000))
-    sspec = lay.catalog["stock"]
-    data = data.at[sspec.base:sspec.end, S_COL["quantity"]].set(
-        jax.random.randint(ks[3], (sspec.count,), 10, 101))
+    price = jax.random.randint(ks[2], (I,), 100, 10000)
+    if lay.mode == "warehouse_major":   # identical read-only replica per wh
+        isl = i_slot(lay, jnp.arange(I)[None, :], jnp.arange(W)[:, None])
+        data = data.at[isl, I_COL["price"]].set(
+            jnp.broadcast_to(price, (W, I)))
+    else:
+        data = data.at[i_slot(lay, jnp.arange(I)), I_COL["price"]].set(price)
+    ssl = s_slot(lay, cfg, jnp.repeat(jnp.arange(W), I),
+                 jnp.tile(jnp.arange(I), W))
+    data = data.at[ssl, S_COL["quantity"]].set(
+        jax.random.randint(ks[3], (W * I,), 10, 101))
     tbl = tbl._replace(cur_data=data)
     nam = nam._replace(table=tbl)
 
     # insert regions start non-existent (deleted current versions)
-    for name in ("orders", "order_line", "new_order", "history"):
-        spec = lay.catalog[name]
-        nam = store.mark_region_deleted(nam, spec.base, spec.count)
+    if lay.mode == "warehouse_major":
+        tids = jnp.arange(cfg.n_threads, dtype=jnp.int32)[:, None]
+        locs = jnp.arange(cfg.orders_per_thread, dtype=jnp.int32)[None, :]
+        osl = o_slot_ext(lay, cfg, tids, locs)
+        olsl = (ol_slots_of_order(lay, cfg, osl)[:, :, None]
+                + jnp.arange(MAX_OL)).reshape(-1)
+        nam = store.mark_slots_deleted(nam, jnp.concatenate(
+            [osl.reshape(-1), no_slot_ext(lay, cfg, tids, locs).reshape(-1),
+             h_slot_ext(lay, cfg, tids, locs).reshape(-1), olsl]))
+    else:
+        for name in ("orders", "order_line", "new_order", "history"):
+            spec = lay.catalog[name]
+            nam = store.mark_region_deleted(nam, spec.base, spec.count)
 
     idx = ri.build(jnp.zeros((0,), jnp.uint32), jnp.zeros((0,), jnp.int32),
                    capacity=cfg.n_threads * cfg.orders_per_thread,
@@ -170,26 +293,20 @@ class NewOrderResult(NamedTuple):
     snapshot_miss: jnp.ndarray
     o_id: jnp.ndarray
     ops: si.OpCounts
+    batch: TxnBatch             # the round's requests (locality accounting)
 
 
-def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
-                   oracle: VectorOracle, inp: workload.NewOrderInputs,
-                   rts_vec=None, round_no=0) -> NewOrderResult:
-    """One vectorized round of new-order transactions through SI.
-
-    Read-set (RS=33): [district, warehouse, customer, item*15, stock*15];
-    write-set (WS=16): district (d_next_o_id++) + up to 15 stocks. Inserts
-    (order, new-order, 5..15 order-lines) go to thread-private extends and
-    the order secondary index, inside the transaction boundary (§6.1).
-    """
+def _neworder_batch(cfg: TPCCConfig, lay: TPCCLayout,
+                    inp: workload.NewOrderInputs) -> TxnBatch:
+    """Read-set (RS=33): [district, warehouse, customer, item*15, stock*15];
+    write-set (WS=16): district (d_next_o_id++) + up to 15 stocks."""
     T = inp.w_id.shape[0]
     line = jnp.arange(MAX_OL)[None, :]
     line_mask = line < inp.ol_cnt[:, None]
-
     dsl = d_slot(lay, inp.w_id, inp.d_id)
     wsl = w_slot(lay, inp.w_id)
     csl = c_slot(lay, cfg, inp.w_id, inp.d_id, inp.c_id)
-    isl = i_slot(lay, inp.item_ids)
+    isl = i_slot(lay, inp.item_ids, inp.w_id[:, None])
     ssl = s_slot(lay, cfg, inp.supply_w, inp.item_ids)
     read_slots = jnp.concatenate(
         [dsl[:, None], wsl[:, None], csl[:, None], isl, ssl], axis=1)
@@ -199,38 +316,47 @@ def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         [jnp.zeros((T, 1), jnp.int32), 18 + jnp.broadcast_to(line, (T, MAX_OL))],
         axis=1)
     write_mask = jnp.concatenate([jnp.ones((T, 1), bool), line_mask], axis=1)
+    return TxnBatch(tid=jnp.arange(T, dtype=jnp.int32),
+                    read_slots=read_slots, read_mask=read_mask,
+                    write_ref=write_ref, write_mask=write_mask)
+
+
+def _neworder_new_data(rd, inp: workload.NewOrderInputs):
+    """The new-order write-set: bump d_next_o_id, restock + count stocks."""
+    dist = rd[:, 0, :]
+    dist = dist.at[:, D_COL["next_o_id"]].add(1)
+    stocks = rd[:, 18:, :]
+    q = stocks[:, :, S_COL["quantity"]]
+    newq = jnp.where(q - inp.qty >= 10, q - inp.qty, q - inp.qty + 91)
+    stocks = stocks.at[:, :, S_COL["quantity"]].set(newq)
+    stocks = stocks.at[:, :, S_COL["ytd"]].add(inp.qty)
+    stocks = stocks.at[:, :, S_COL["order_cnt"]].add(1)
+    stocks = stocks.at[:, :, S_COL["remote_cnt"]].add(
+        inp.is_remote.astype(jnp.int32))
+    return jnp.concatenate([dist[:, None, :], stocks], axis=1)
+
+
+def _neworder_inserts(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                      oracle: VectorOracle, tbl, vec, committed, read_data,
+                      inp: workload.NewOrderInputs, round_no):
+    """Inserts, within the transaction boundary (§6.1): order, new-order and
+    order-lines go to thread-private extends (conflict-free one-sided
+    installs, §5.3) plus the order secondary index. Shared verbatim by the
+    single-shard and the distributed path — on a sharded table the scatters
+    land on the owning shard, the compute server having computed the remote
+    extend address itself."""
+    T = inp.w_id.shape[0]
+    line = jnp.arange(MAX_OL)[None, :]
+    line_mask = line < inp.ol_cnt[:, None]
     tids = jnp.arange(T, dtype=jnp.int32)
-    batch = TxnBatch(tid=tids, read_slots=read_slots, read_mask=read_mask,
-                     write_ref=write_ref, write_mask=write_mask)
-
-    def compute_fn(rh, rd, vec):
-        dist = rd[:, 0, :]
-        dist = dist.at[:, D_COL["next_o_id"]].add(1)
-        stocks = rd[:, 18:, :]
-        q = stocks[:, :, S_COL["quantity"]]
-        newq = jnp.where(q - inp.qty >= 10, q - inp.qty, q - inp.qty + 91)
-        stocks = stocks.at[:, :, S_COL["quantity"]].set(newq)
-        stocks = stocks.at[:, :, S_COL["ytd"]].add(inp.qty)
-        stocks = stocks.at[:, :, S_COL["order_cnt"]].add(1)
-        stocks = stocks.at[:, :, S_COL["remote_cnt"]].add(
-            inp.is_remote.astype(jnp.int32))
-        return jnp.concatenate([dist[:, None, :], stocks], axis=1)
-
-    out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
-                       compute_fn, rts_vec=rts_vec)
-    committed = out.committed
-    tbl, ostate = out.table, out.oracle_state
-
-    # ---- inserts, within the transaction boundary ------------------------
-    o_id = out.read_data[:, 0, D_COL["next_o_id"]]
+    o_id = read_data[:, 0, D_COL["next_o_id"]]
     slot_ids = oracle.slot_of_thread(tids)
-    cts = ostate.vec[slot_ids]                   # committed threads' new cts
+    cts = vec[slot_ids]                          # committed threads' new cts
     cur = st.nam.extends.cursor[:, 0]
     local = jnp.clip(cur, 0, cfg.orders_per_thread - 1)
-    oslot = lay.order_base + tids * cfg.orders_per_thread + local
-    noslot = lay.no_base + tids * cfg.orders_per_thread + local
-    olslot = lay.ol_base + (tids * cfg.orders_per_thread + local)[:, None] \
-        * MAX_OL + line
+    oslot = o_slot_ext(lay, cfg, tids, local)
+    noslot = no_slot_ext(lay, cfg, tids, local)
+    olslot = ol_slots_of_order(lay, cfg, oslot)[:, None] + line
     can_insert = committed & (cur < cfg.orders_per_thread)
 
     odata = jnp.zeros((T, WIDTH), jnp.int32)
@@ -247,7 +373,7 @@ def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     nodata = nodata.at[:, 1].set(inp.w_id * DISTRICTS + inp.d_id)
     tbl = _insert_install(tbl, noslot, slot_ids, cts, nodata, can_insert)
 
-    price = out.read_data[:, 3:18, I_COL["price"]]
+    price = read_data[:, 3:18, I_COL["price"]]
     oldata = jnp.zeros((T, MAX_OL, WIDTH), jnp.int32)
     oldata = oldata.at[:, :, OL_COL["i_id"]].set(inp.item_ids)
     oldata = oldata.at[:, :, OL_COL["supply_w"]].set(inp.supply_w)
@@ -263,16 +389,200 @@ def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
 
     okey = order_key(inp.w_id, inp.d_id, o_id)
     idx = ri.insert(st.order_index, okey, oslot, mask=can_insert)
+    cursor = st.nam.extends.cursor.at[:, 0].add(can_insert.astype(jnp.int32))
+    return tbl, idx, store.ExtendState(cursor=cursor), o_id
 
-    nam = st.nam._replace(
-        table=tbl, oracle_state=ostate,
-        extends=store.ExtendState(
-            cursor=st.nam.extends.cursor.at[:, 0].add(
-                can_insert.astype(jnp.int32))))
+
+def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                   oracle: VectorOracle, inp: workload.NewOrderInputs,
+                   rts_vec=None, round_no=0) -> NewOrderResult:
+    """One vectorized round of new-order transactions through SI
+    (single-shard reference path)."""
+    batch = _neworder_batch(cfg, lay, inp)
+    out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
+                       lambda rh, rd, vec: _neworder_new_data(rd, inp),
+                       rts_vec=rts_vec)
+    tbl, idx, extends, o_id = _neworder_inserts(
+        cfg, lay, st, oracle, out.table, out.oracle_state.vec, out.committed,
+        out.read_data, inp, round_no)
+    nam = st.nam._replace(table=tbl, oracle_state=out.oracle_state,
+                          extends=extends)
     return NewOrderResult(
         state=TPCCState(nam=nam, order_index=idx, hist_cursor=st.hist_cursor),
-        committed=committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
-        ops=out.ops)
+        committed=out.committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
+        ops=out.ops, batch=batch)
+
+
+# ------------------------------------------- new-order over the NAM mesh ----
+class DistEngine(NamedTuple):
+    """A built TPC-C executor over a simulated memory-server mesh.
+
+    ``round_fn`` is the jitted :func:`repro.core.store.distributed_round`
+    executor for the new-order transaction logic; the record pool (and, when
+    ``shard_vector``, the timestamp vector) lives range-partitioned over
+    ``n_shards`` devices, each one memory server.
+    """
+    round_fn: Callable
+    mesh: object
+    axis: str
+    n_shards: int
+    shard_records: int
+    shard_vector: bool
+
+    @property
+    def placement(self) -> locality.Placement:
+        return locality.Placement(n_servers=self.n_shards,
+                                  shard_records=self.shard_records)
+
+
+def make_distributed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
+                            oracle: VectorOracle, *,
+                            shard_vector: bool = False) -> DistEngine:
+    n_shards = mesh.shape[axis]
+    shard_records = -(-lay.catalog.total_records // n_shards)
+    round_fn, _ = store.distributed_round(
+        mesh, axis, oracle,
+        lambda rh, rd, vec, aux: _neworder_new_data(rd, aux),
+        shard_records, shard_vector=shard_vector)
+    return DistEngine(round_fn=round_fn, mesh=mesh, axis=axis,
+                      n_shards=n_shards, shard_records=shard_records,
+                      shard_vector=shard_vector)
+
+
+def distribute_state(engine: DistEngine, st: TPCCState) -> TPCCState:
+    """Pad + range-partition the record pool (and optionally T_R) over the
+    mesh: the loaded single-host state becomes the NAM deployment."""
+    tbl, _ = store.pad_table(st.nam.table, engine.n_shards)
+    tbl = store.shard_table(engine.mesh, engine.axis, tbl)
+    vec = st.nam.oracle_state.vec
+    if engine.shard_vector:
+        vec = store.shard_vector(engine.mesh, engine.axis, vec)
+    return st._replace(nam=st.nam._replace(
+        table=tbl, oracle_state=VectorState(vec=vec)))
+
+
+def neworder_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
+                               st: TPCCState, oracle: VectorOracle,
+                               engine: DistEngine,
+                               inp: workload.NewOrderInputs,
+                               round_no=0) -> NewOrderResult:
+    """One new-order round through :func:`store.distributed_round` — the
+    multi-memory-server rendering of :func:`neworder_round`, bit-identical
+    to it (tests/test_distributed_equiv.py)."""
+    batch = _neworder_batch(cfg, lay, inp)
+    tbl, vec, out = engine.round_fn(st.nam.table, st.nam.oracle_state.vec,
+                                    batch, inp)
+    ops = si.count_ops(oracle, batch, out.txn_found, out.from_current,
+                       out.n_installs, out.n_releases,
+                       jnp.sum(out.committed), tbl.payload_width)
+    tbl, idx, extends, o_id = _neworder_inserts(
+        cfg, lay, st, oracle, tbl, vec, out.committed, out.read_data, inp,
+        round_no)
+    nam = st.nam._replace(table=tbl, oracle_state=VectorState(vec=vec),
+                          extends=extends)
+    return NewOrderResult(
+        state=TPCCState(nam=nam, order_index=idx, hist_cursor=st.hist_cursor),
+        committed=out.committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
+        ops=ops, batch=batch)
+
+
+# ----------------------------------------------------- retry-queue driver ----
+class NewOrderRunStats(NamedTuple):
+    """Aggregates of a multi-round run under the §7.4 retry discipline."""
+    committed: jnp.ndarray      # bool [R, T] — per-round outcomes
+    attempts: int               # executed transactions (incl. retries)
+    commits: int
+    retries: int                # aborted txns that re-entered a later round
+    abort_rate: float           # steady-state: aborts / attempts
+    ops: si.OpCounts            # summed over rounds (python floats)
+    local_fraction: float       # measured share of machine-local accesses
+
+
+def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                        oracle: VectorOracle, key: jax.Array, n_rounds: int,
+                        *, logits=None, home_w=None, dist_degree=None,
+                        engine: Optional[DistEngine] = None,
+                        locality_mode: Optional[str] = None,
+                        move_versions: bool = True):
+    """Closed-loop driver: each thread runs new-orders back to back and an
+    aborted transaction *re-enters the next round* with its original snapshot
+    discarded (§7.4 "the compute server directly triggers a retry after an
+    abort") — so multi-round runs measure steady-state abort rates, not
+    per-round ones.
+
+    ``engine=None`` runs the single-shard reference; with a
+    :class:`DistEngine` every round goes through ``distributed_round`` on the
+    mesh. ``locality_mode`` ∈ {"aware", "oblivious", None} additionally
+    measures the machine-local access fraction of the run under the given
+    §7.3 routing (it never changes protocol behaviour — locality is an
+    optimization, not a requirement).
+    """
+    T = cfg.n_threads
+    if logits is None:
+        logits = workload.zipf_logits(cfg.n_items, cfg.skew_alpha)
+    if dist_degree is None:
+        dist_degree = cfg.dist_degree
+    placement = engine.placement if engine is not None else \
+        locality.Placement(n_servers=1,
+                           shard_records=lay.catalog.total_records)
+
+    retry_mask = jnp.zeros((T,), bool)
+    pending: Optional[workload.NewOrderInputs] = None
+    committed_rounds = []
+    attempts = commits = retries = 0
+    ops_sum = [0.0] * len(si.OpCounts._fields)
+    lf_sum, lf_n = 0.0, 0
+
+    for r in range(n_rounds):
+        key, sub = jax.random.split(key)
+        fresh = workload.gen_neworder(
+            sub, T, cfg.n_warehouses, cfg.n_items,
+            cfg.customers_per_district, home_w, dist_degree, logits)
+        if pending is None:
+            inp = fresh
+        else:
+            # aborted txns re-enter with their original *inputs*; the
+            # snapshot is re-read inside the round (GSI: any newer one is
+            # admissible), i.e. the old snapshot is discarded.
+            inp = jax.tree.map(
+                lambda p, f: jnp.where(
+                    retry_mask.reshape((T,) + (1,) * (f.ndim - 1)), p, f),
+                pending, fresh)
+        if engine is None:
+            out = neworder_round(cfg, lay, st, oracle, inp, round_no=r)
+        else:
+            out = neworder_round_distributed(cfg, lay, st, oracle, engine,
+                                             inp, round_no=r)
+        st = out.state
+        if move_versions:
+            st = st._replace(nam=st.nam._replace(
+                table=mvcc.version_mover(st.nam.table)))
+
+        c = out.committed
+        committed_rounds.append(c)
+        n_c = int(jnp.sum(c))
+        attempts += T
+        commits += n_c
+        retries += T - n_c
+        for i, f in enumerate(out.ops):
+            ops_sum[i] += float(f)
+        if locality_mode is not None:
+            home_slot = d_slot(lay, inp.w_id, inp.d_id)
+            srv = locality.route_transactions(
+                locality_mode, placement, home_slot, out.batch.tid, T)
+            lf_sum += float(locality.local_fraction(
+                placement, srv, out.batch.read_slots, out.batch.read_mask))
+            lf_n += 1
+        retry_mask = ~c
+        pending = inp
+
+    stats = NewOrderRunStats(
+        committed=jnp.stack(committed_rounds),
+        attempts=attempts, commits=commits, retries=retries,
+        abort_rate=1.0 - commits / max(1, attempts),
+        ops=si.OpCounts(*ops_sum),
+        local_fraction=lf_sum / lf_n if lf_n else float("nan"))
+    return st, stats
 
 
 # --------------------------------------------------------------- payment ----
@@ -308,7 +618,7 @@ def payment_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     cts = out.oracle_state.vec[slot_ids]
     cur = st.hist_cursor
     local = jnp.clip(cur, 0, cfg.orders_per_thread - 1)
-    hslot = lay.hist_base + tids * cfg.orders_per_thread + local
+    hslot = h_slot_ext(lay, cfg, tids, local)
     can = out.committed & (cur < cfg.orders_per_thread)
     hdata = jnp.zeros((T, WIDTH), jnp.int32)
     hdata = hdata.at[:, H_COL["amount"]].set(inp.amount)
@@ -354,11 +664,11 @@ def stocklevel(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     hi = order_key(w_id, d_id, next_o)
     k, oslots, n = ri.range_scan(st.order_index, lo[None], hi[None],
                                  max_results=last_n)
-    oslots = jnp.where(oslots[0] >= 0, oslots[0], lay.order_base)
+    safe_o = o_slot_ext(lay, cfg, jnp.int32(0), jnp.int32(0))
+    oslots = jnp.where(oslots[0] >= 0, oslots[0], safe_o)
     valid = (k[0] != ri.SENTINEL)
     # order lines are contiguous with each order's extend slot
-    rel = oslots - lay.order_base
-    ol = (lay.ol_base + rel[:, None] * MAX_OL
+    ol = (ol_slots_of_order(lay, cfg, oslots)[:, None]
           + jnp.arange(MAX_OL)[None, :]).reshape(-1)
     olr = mvcc.read_visible(st.nam.table, ol, vec)
     items = olr.data[:, OL_COL["i_id"]]
@@ -393,7 +703,8 @@ def delivery_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     k, oslot, idx_found = ri.lookup_max_below(st.order_index,
                                               okey + jnp.uint32(1))
     found = idx_found & (k == okey) & has_order
-    oslot = jnp.where(found, oslot, lay.order_base)
+    oslot = jnp.where(found, oslot, o_slot_ext(lay, cfg, jnp.int32(0),
+                                               jnp.int32(0)))
     ordr = mvcc.read_visible(st.nam.table, oslot, vec)
     c_id = ordr.data[:, O_COL["c_id"]]
     csl = c_slot(lay, cfg, w_id, d_id, jnp.where(found, c_id, 0))

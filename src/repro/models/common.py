@@ -14,6 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 NEG_INF = -1e30
 
 
@@ -95,7 +97,7 @@ def embed_lookup(embed, tokens):
             def local(emb, tok):
                 return emb[tok]              # [B/dp, …, D/model]
 
-            return jax.shard_map(
+            return shard_map(
                 local, mesh=mesh,
                 in_specs=(P(None, "model"), P(dp, *([None] * (tokens.ndim - 1)))),
                 out_specs=P(dp, *([None] * (tokens.ndim - 1)), "model"),
@@ -155,7 +157,7 @@ def kv_cache_update(k_cache, v_cache, k_new, v_new, pos):
             jnp.where(sel, vn.astype(vc.dtype), old_v))
         return kc, vc
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, "model", None, None), P(dp, "model", None, None),
                   P(dp, None, None), P(dp, None, None), P(dp)),

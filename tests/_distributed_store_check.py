@@ -24,7 +24,7 @@ def main():
     shard_records = n_records // 8
     oracle = VectorOracle(n_threads)
 
-    def compute_fn(rh, rd, vec):
+    def compute_fn(rh, rd, vec, aux):
         return rd[:, :1, :].at[..., 0].add(1)
 
     round_fn, _ = store.distributed_round(mesh, "mem", oracle, compute_fn,
@@ -47,11 +47,13 @@ def main():
             write_ref=jnp.zeros((n_threads, 1), jnp.int32),
             write_mask=jnp.ones((n_threads, 1), bool),
         )
-        tbl_d, vec_d, committed_d, _ = round_fn(tbl_d, vec_d, batch)
-        out = si.run_round(tbl_s, oracle, st, batch, compute_fn)
+        tbl_d, vec_d, dout = round_fn(tbl_d, vec_d, batch, None)
+        out = si.run_round(tbl_s, oracle, st, batch,
+                           lambda rh, rd, vec: compute_fn(rh, rd, vec, None))
         tbl_s, st = out.table, out.oracle_state
-        np.testing.assert_array_equal(np.asarray(committed_d),
-                                      np.asarray(out.committed)), rnd
+        np.testing.assert_array_equal(np.asarray(dout.committed),
+                                      np.asarray(out.committed),
+                                      err_msg=str(rnd))
         tbl_s = mvcc.version_mover(tbl_s)
         # the version-mover is per-record elementwise, so it runs directly on
         # the sharded table (XLA preserves the record-axis sharding)

@@ -1,0 +1,58 @@
+"""Shared seeded-random workload generator for the SI protocol tests.
+
+Produces well-formed :class:`repro.core.si.TxnBatch` rounds: read slots are
+distinct within a transaction, write refs are distinct indices into the
+transaction's own read-set, and every written ref is a masked read (the
+write-set is a subset of the read-set, as SI validation requires).
+
+The companion compute function is deterministic from the read data —
+``new_data[t, k] = read_data[t, write_ref[t, k]] + (t + 1)`` — so tests can
+maintain an exact pure-python model of every installed version.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import si
+
+
+def gen_batch(rng: np.random.Generator, n_records: int, n_threads: int,
+              rs: int, ws: int) -> si.TxnBatch:
+    slots = np.stack([rng.choice(n_records, size=rs, replace=False)
+                      for _ in range(n_threads)])
+    read_mask = rng.random((n_threads, rs)) < 0.9
+    wref = np.stack([rng.choice(rs, size=ws, replace=False)
+                     for _ in range(n_threads)])
+    write_mask = rng.random((n_threads, ws)) < 0.7
+    for t in range(n_threads):
+        read_mask[t, wref[t][write_mask[t]]] = True
+    return si.TxnBatch(
+        tid=jnp.arange(n_threads, dtype=jnp.int32),
+        read_slots=jnp.asarray(slots, jnp.int32),
+        read_mask=jnp.asarray(read_mask),
+        write_ref=jnp.asarray(wref, jnp.int32),
+        write_mask=jnp.asarray(write_mask))
+
+
+def make_compute(batch: si.TxnBatch):
+    """new_data[t, k] = read_data[t, write_ref[t, k]] + (t + 1)."""
+    def compute_fn(rh, rd, vec):
+        wref = jnp.clip(batch.write_ref, 0, rd.shape[1] - 1)
+        base = jnp.take_along_axis(rd, wref[:, :, None], axis=1)
+        return base + (batch.tid + 1)[:, None, None]
+    return compute_fn
+
+
+def committed_write_slots(batch: si.TxnBatch, committed) -> np.ndarray:
+    """Flat list of (txn, slot) pairs actually written by committed txns."""
+    slots = np.asarray(jnp.take_along_axis(
+        batch.read_slots, jnp.clip(batch.write_ref, 0,
+                                   batch.read_slots.shape[1] - 1), axis=1))
+    wm = np.asarray(batch.write_mask)
+    c = np.asarray(committed)
+    pairs = []
+    for t in range(slots.shape[0]):
+        if c[t]:
+            for k in range(slots.shape[1]):
+                if wm[t, k]:
+                    pairs.append((t, int(slots[t, k])))
+    return np.asarray(pairs, dtype=np.int64).reshape(-1, 2)

@@ -1,0 +1,30 @@
+"""The sharded TPC-C path must be bit-identical to the single-shard one.
+
+``distributed_round`` on an 8-way forced-host-device mesh (record pool range-
+partitioned, timestamp vector partitioned à la PartitionedVectorOracle) runs
+the same new-order workload as ``si.run_round`` and must produce identical
+commit decisions, installed versions, oracle state and op profiles — the
+distribution layer is a placement decision, not a semantics change.
+
+Runs in a subprocess so the 8 placeholder host devices never leak into this
+test process (smoke tests and benches must see 1 device — see dryrun rules).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_distributed_tpcc_matches_single_shard():
+    script = os.path.join(os.path.dirname(__file__),
+                          "_distributed_equiv_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "DISTRIBUTED_EQUIV_OK" in out.stdout

@@ -1,0 +1,105 @@
+"""Differential test of the four timestamp-oracle designs (paper Fig. 6).
+
+The oracle decides *visibility*, never conflicts — so for the same
+transaction batches, all four designs must produce identical commit/abort
+decisions and identical installed payloads:
+
+* ``GlobalCounterOracle`` (via :class:`NaiveOracleAdapter`) — §3.1 naive,
+* ``VectorOracle`` — §4.1 per-thread slots,
+* ``CompressedVectorOracle`` — §4.2 one slot per compute server,
+* ``PartitionedVectorOracle`` — §4.2 range-partitioned vector.
+
+They differ only in cost (what Fig. 6 plots), which the cost model handles.
+
+Staleness (§4.2 dedicated fetch thread, k rounds): reading an older vector
+is admissible under GSI but must be *conservative* — on identical starting
+state it may only add aborts (CAS mismatch against a version it could not
+see), never commit a transaction the fresh-snapshot run aborted, and every
+transaction it does commit validated against the true current versions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mvcc, si
+from repro.core.tsoracle import (CompressedVectorOracle, NaiveOracleAdapter,
+                                 PartitionedVectorOracle, VectorOracle)
+
+from _si_common import gen_batch, make_compute
+
+N_REC, W, T, RS, WS, ROUNDS = 32, 4, 8, 2, 1, 6
+
+
+def _run(oracle, batches):
+    state = oracle.init()
+    table = mvcc.init_table(N_REC, W, n_old=8, n_overflow=8)
+    committed = []
+    for batch in batches:
+        out = si.run_round(table, oracle, state, batch, make_compute(batch))
+        table, state = out.table, out.oracle_state
+        committed.append(np.asarray(out.committed))
+        table = mvcc.version_mover(table)
+    return np.stack(committed), np.asarray(table.cur_data)
+
+
+ORACLES = {
+    "naive": lambda: NaiveOracleAdapter(T),
+    "vector": lambda: VectorOracle(T),
+    "compressed_x4": lambda: CompressedVectorOracle(T, threads_per_server=4),
+    "compressed_x8": lambda: CompressedVectorOracle(T, threads_per_server=8),
+    "partitioned": lambda: PartitionedVectorOracle(T, n_parts=4),
+}
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_oracles_agree_on_decisions(seed):
+    rng = np.random.default_rng(seed)
+    batches = [gen_batch(rng, N_REC, T, RS, WS) for _ in range(ROUNDS)]
+    ref_committed, ref_data = _run(VectorOracle(T), batches)
+    assert ref_committed.any() and not ref_committed.all()  # non-trivial run
+    for name, mk in ORACLES.items():
+        committed, data = _run(mk(), batches)
+        np.testing.assert_array_equal(committed, ref_committed, err_msg=name)
+        np.testing.assert_array_equal(data, ref_data, err_msg=name)
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_staleness_only_adds_aborts(k):
+    """From identical state, a k-stale snapshot commits a subset of what the
+    fresh snapshot commits, and what it commits read the same (current)
+    versions for its write refs — no unsafe commits."""
+    rng = np.random.default_rng(11)
+    oracle = VectorOracle(T)
+    state = oracle.init()
+    table = mvcc.init_table(N_REC, W, n_old=8, n_overflow=8)
+    hist = [np.asarray(state.vec)] * (k + 1)   # hist[k] = k rounds back
+    saw_extra_abort = False
+    for rnd in range(ROUNDS):
+        batch = gen_batch(rng, N_REC, T, RS, WS)
+        compute = make_compute(batch)
+        stale_vec = jnp.asarray(hist[k])
+        fresh = si.run_round(table, oracle, state, batch, compute)
+        stale = si.run_round(table, oracle, state, batch, compute,
+                             rts_vec=stale_vec)
+        f_c = np.asarray(fresh.committed)
+        s_c = np.asarray(stale.committed)
+        assert not (s_c & ~f_c).any(), rnd        # subset: only adds aborts
+        saw_extra_abort |= bool((f_c & ~s_c).any())
+        # safety: the stale run's committed txns validated (CAS full-header
+        # match) against the same current versions the fresh run saw
+        wref = jnp.clip(batch.write_ref, 0, RS - 1)
+        f_rd = np.asarray(jnp.take_along_axis(fresh.read_data,
+                                              wref[:, :, None], axis=1))
+        s_rd = np.asarray(jnp.take_along_axis(stale.read_data,
+                                              wref[:, :, None], axis=1))
+        wm = np.asarray(batch.write_mask)
+        for t in range(T):
+            if s_c[t]:
+                np.testing.assert_array_equal(
+                    s_rd[t][wm[t]], f_rd[t][wm[t]], err_msg=str((rnd, t)))
+        # canonical evolution continues with the fresh outcome
+        table, state = fresh.table, fresh.oracle_state
+        table = mvcc.version_mover(table)
+        hist = [np.asarray(state.vec)] + hist[:-1]
+    assert saw_extra_abort, "staleness never exercised an extra abort"

@@ -12,7 +12,11 @@ SI protocol (paper §3/§4/§5):
   P5  visible read returns the newest version ≤ snapshot — against a
       brute-force reference over the full version history.
 """
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; the seeded-random "
+    "equivalents live in tests/test_si_invariants.py")
 from hypothesis import given, settings, strategies as st
 
 import jax
