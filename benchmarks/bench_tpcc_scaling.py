@@ -1,21 +1,25 @@
-"""Exp-1 (paper Fig. 4/5): TPC-C scale-out 2 → 56 servers.
+"""Exp-1 (paper Fig. 4/5): TPC-C scale-out 2 → 56 servers, full mix.
 
-Protocol behaviour (steady-state abort rates under the §7.4 retry
-discipline, per-transaction op counts, measured machine-local access
-fractions) is *measured* by running the real SI rounds; throughput curves
-come from the calibrated InfiniBand model fed with those measurements
-(DESIGN.md §5). Three systems: NAM-DB w/o locality, NAM-DB w/ locality, and
-the traditional two-sided SI baseline.
+The paper's headline is 6.5M *new-order* out of **14.5M total** distributed
+transactions per second — the total only exists because the whole 45/43/4/4/4
+mix runs concurrently. This bench runs the full five-transaction mix:
+protocol behaviour (steady-state abort rates under the §7.4 per-type retry
+queues, per-*type* op counts, measured machine-local access fractions) is
+*measured* by running the real SI rounds; throughput curves come from the
+calibrated InfiniBand model fed with the attempt-share-weighted mix profile
+(DESIGN.md §5), and **both total and new-order** txn/s are reported.
 
 ``--shards N`` (default 8) additionally sweeps the shard count 1→N running
-the rounds through ``store.distributed_round`` on a simulated N-memory-server
-mesh (forced host devices), in both Fig. 5 deployments: locality-aware
-(warehouse-major placement + home routing) and locality-oblivious
-(table-major placement + round-robin thread pinning). The script re-execs
-itself with ``XLA_FLAGS=--xla_force_host_platform_device_count`` when the
-host does not expose enough devices.
+the mixed rounds through ``store.distributed_round`` (write types) and
+``store.distributed_readonly_round`` (read-only types) on a simulated
+N-memory-server mesh (forced host devices), in both Fig. 5 deployments:
+locality-aware (warehouse-major placement + home routing) and
+locality-oblivious (table-major placement + round-robin thread pinning). The
+script re-execs itself with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+when the host does not expose enough devices.
 
     python benchmarks/bench_tpcc_scaling.py --shards 8
+    python benchmarks/bench_tpcc_scaling.py --smoke     # CI: tiny, 2 shards
 """
 from __future__ import annotations
 
@@ -28,28 +32,19 @@ import numpy as np
 from repro import compat
 from repro.core import locality, netmodel
 from repro.core.tsoracle import PartitionedVectorOracle, VectorOracle
-from repro.db import tpcc
+from repro.db import tpcc, workload
+
+mixed_profiles = tpcc.mixed_profiles
+neworder_share = tpcc.neworder_share
 
 
-def _profile_from_stats(stats: tpcc.NewOrderRunStats) -> netmodel.TxnProfile:
-    """Measured per-attempt op counts → cost-model transaction profile."""
-    per = 1.0 / max(1, stats.attempts)
-    # + inserts: 1 order + 1 new-order + ~10 order-lines + index = ~13 writes
-    return netmodel.TxnProfile(
-        reads=float(stats.ops.record_reads) * per,
-        cas=float(stats.ops.cas_ops) * per,
-        installs=float(stats.ops.writes) * per / 2 + 13,
-        bytes_read=float(stats.ops.bytes_moved) * per * 0.6 + 13 * 40,
-        bytes_written=float(stats.ops.bytes_moved) * per * 0.4 + 13 * 40)
-
-
-def measure_profile(n_rounds: int = 8, dist_degree: float = 100.0,
-                    skew_alpha=None, n_threads: int = 32):
-    """Run real new-order rounds (single-shard reference path with the §7.4
-    retry queue); return (TxnProfile, steady-state abort rate, us/txn)."""
+def measure_mixed(n_rounds: int = 8, dist_degree: float = 100.0,
+                  skew_alpha=None, n_threads: int = 32):
+    """Run real full-mix rounds (single-shard reference path, per-type retry
+    queues); return (MixedRunStats, us/txn)."""
     # TPC-C terminal model at the paper's density (≈1 thread per warehouse:
     # 60 threads vs 50 warehouses per server): distinct home warehouses, so
-    # contention comes from remote stock accesses, not artificial district
+    # contention comes from remote accesses, not artificial district
     # collisions between co-batched threads.
     cfg = tpcc.TPCCConfig(n_warehouses=n_threads, customers_per_district=16,
                           n_items=512, n_threads=n_threads,
@@ -59,22 +54,30 @@ def measure_profile(n_rounds: int = 8, dist_degree: float = 100.0,
     lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
     home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
     t0 = time.perf_counter()
-    st, stats = tpcc.run_neworder_rounds(
+    st, stats = tpcc.run_mixed_rounds(
         cfg, lay, st, oracle, jax.random.PRNGKey(1), n_rounds, home_w=home)
-    wall_us = (time.perf_counter() - t0) / stats.attempts * 1e6
-    return _profile_from_stats(stats), stats.abort_rate, wall_us
+    wall_us = (time.perf_counter() - t0) / stats.total_attempts * 1e6
+    return stats, wall_us
+
+
+# smoke-mode mix: flattened so 4x3 thread-rounds deterministically sample
+# every transaction type (the natural 4% shares would need far more draws);
+# smoke exercises the machinery, not the ratios.
+SMOKE_MIX = {"neworder": 0.28, "payment": 0.24, "orderstatus": 0.16,
+             "delivery": 0.16, "stocklevel": 0.16}
 
 
 def measure_sharded(n_shards: int, mode: str, n_rounds: int = 8,
-                    n_threads: int = 16, dist_degree: float = 20.0):
-    """TPC-C new-order rounds through ``distributed_round`` on an
-    ``n_shards``-memory-server mesh, in one Fig. 5 deployment.
+                    n_threads: int = 16, dist_degree: float = 20.0,
+                    mix=None):
+    """Full-mix TPC-C rounds through the per-type mesh executors on an
+    ``n_shards``-memory-server deployment, in one Fig. 5 deployment.
 
     mode="aware":     warehouse-major placement, txns routed to their home
                       warehouse's server (§7.3 'w/ locality').
     mode="oblivious": table-major placement, threads pinned round-robin.
 
-    Returns (TxnProfile, abort_rate, local_fraction, us/txn).
+    Returns (MixedRunStats, us/txn).
     """
     layout = "warehouse_major" if mode == "aware" else "table_major"
     cfg = tpcc.TPCCConfig(n_warehouses=n_threads, customers_per_district=16,
@@ -85,44 +88,50 @@ def measure_sharded(n_shards: int, mode: str, n_rounds: int = 8,
     lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
     mesh = jax.sharding.Mesh(np.array(compat.cpu_devices()[:n_shards]),
                              ("mem",))
-    engine = tpcc.make_distributed_engine(cfg, lay, mesh, "mem", oracle,
-                                          shard_vector=True)
+    engine = tpcc.make_mixed_engine(cfg, lay, mesh, "mem", oracle,
+                                    shard_vector=True)
     st = tpcc.distribute_state(engine, st)
     home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
     t0 = time.perf_counter()
-    st, stats = tpcc.run_neworder_rounds(
+    st, stats = tpcc.run_mixed_rounds(
         cfg, lay, st, oracle, jax.random.PRNGKey(1), n_rounds, home_w=home,
-        engine=engine, locality_mode=mode)
-    wall_us = (time.perf_counter() - t0) / stats.attempts * 1e6
-    return (_profile_from_stats(stats), stats.abort_rate,
-            stats.local_fraction, wall_us)
+        engine=engine, locality_mode=mode, mix=mix)
+    wall_us = (time.perf_counter() - t0) / stats.total_attempts * 1e6
+    return stats, wall_us
 
 
-def run():
+def run(n_rounds: int = 8, n_threads: int = 32):
     """Single-device entry used by benchmarks/run.py (no mesh leakage)."""
-    prof, abort, us = measure_profile()
-    rows = [("tpcc_neworder_round_sim", us,
+    stats, us = measure_mixed(n_rounds=n_rounds, n_threads=n_threads)
+    _, prof = mixed_profiles(stats)
+    share = neworder_share(stats)
+    abort = stats.abort_rate
+    rows = [("tpcc_mixed_round_sim", us,
              netmodel.namdb_throughput(prof, 56, 60, abort))]
     servers = [2, 4, 8, 16, 28, 56]
-    curves = {"namdb": [], "namdb_locality": [], "traditional": []}
+    curves = {"namdb_total": [], "namdb_neworder": [],
+              "namdb_locality_total": [], "traditional": []}
     for n in servers:
-        curves["namdb"].append(
-            (n, netmodel.namdb_throughput(prof, n, 60, abort)))
+        total = netmodel.namdb_throughput(prof, n, 60, abort)
+        curves["namdb_total"].append((n, total))
+        curves["namdb_neworder"].append((n, total * share))
         # locality deployment (§7.1): compute+memory pairs on all n machines,
         # 30 threads each (same total thread count). ~60 % of record accesses
         # end up machine-local at the default 10 % distribution degree once
         # timestamp-vector reads, index updates and remote lines are counted.
-        curves["namdb_locality"].append(
+        curves["namdb_locality_total"].append(
             (n, netmodel.namdb_throughput(prof, n, 60, abort,
                                           local_fraction=0.6)))
         curves["traditional"].append(
             (n, netmodel.traditional_throughput(prof, n, 60, abort)))
-    return rows, curves, prof, abort
+    return rows, curves, prof, abort, share
 
 
-def run_shard_sweep(max_shards: int, n_rounds: int, n_threads: int):
-    """Shard count 1→max_shards × {aware, oblivious}: measured profiles feed
-    the cost model at the matching cluster size (n memory + n compute).
+def run_shard_sweep(max_shards: int, n_rounds: int, n_threads: int,
+                    mix=None):
+    """Shard count 1→max_shards × {aware, oblivious}: measured full-mix
+    profiles feed the cost model at the matching cluster size (n memory +
+    n compute); **total and new-order** txn/s are reported per point.
 
     Returns (results, skipped): shard counts that do not divide the thread
     count cannot host the partitioned timestamp vector and are reported
@@ -136,11 +145,14 @@ def run_shard_sweep(max_shards: int, n_rounds: int, n_threads: int):
             skipped.append(n)
             continue
         for mode in ("oblivious", "aware"):
-            prof, abort, lf, us = measure_sharded(
-                n, mode, n_rounds=n_rounds, n_threads=n_threads)
-            thr = netmodel.namdb_throughput(prof, 2 * n, 60, abort,
-                                            local_fraction=lf)
-            results.append((n, mode, abort, lf, us, prof, thr))
+            stats, us = measure_sharded(
+                n, mode, n_rounds=n_rounds, n_threads=n_threads, mix=mix)
+            _, prof = mixed_profiles(stats)
+            total = netmodel.namdb_throughput(
+                prof, 2 * n, 60, stats.abort_rate,
+                local_fraction=stats.local_fraction)
+            results.append((n, mode, stats, us, prof,
+                            total, total * neworder_share(stats)))
     return results, skipped
 
 
@@ -149,34 +161,57 @@ def main():
     ap.add_argument("--shards", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--threads", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny config, 2 shards, 3 rounds per point")
     args = ap.parse_args()
+    if args.smoke:
+        args.shards, args.rounds, args.threads = 2, 3, 4
 
     if args.shards > 1:
         compat.ensure_host_devices(args.shards)
 
     print("name,us_per_call,derived")
-    rows, curves, prof, abort = run()
-    for r in rows:
-        print(f"{r[0]},{r[1]:.1f},{r[2]:.0f}")
-    print(f"# measured abort rate: {abort:.4f}; "
-          f"reads/txn {prof.reads:.1f}, cas/txn {prof.cas:.1f}")
-    for name, pts in curves.items():
-        print(f"# {name}: "
-              + " ".join(f"{n}m={t/1e6:.2f}M" for n, t in pts))
+    if not args.smoke:
+        rows, curves, prof, abort, share = run(n_rounds=args.rounds)
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]:.0f}")
+        print(f"# measured abort rate: {abort:.4f}; "
+              f"reads/txn {prof.reads:.1f}, cas/txn {prof.cas:.1f}, "
+              f"neworder share of commits {share:.3f}")
+        for name, pts in curves.items():
+            print(f"# {name}: "
+                  + " ".join(f"{n}m={t/1e6:.2f}M" for n, t in pts))
 
-    if args.shards >= 1:
-        print("# --- sharded mesh sweep (distributed_round, "
-              f"{args.threads} threads) ---")
-        results, skipped = run_shard_sweep(args.shards, args.rounds,
-                                           args.threads)
-        for n in skipped:
-            print(f"# skipped {n} shards: --threads {args.threads} not "
-                  f"divisible (partitioned T_R needs n_threads % shards == 0)")
-        for n, mode, ab, lf, us, p, thr in results:
-            print(f"tpcc_dist_{n}shard_{mode},{us:.1f},{thr:.0f}")
-            print(f"#   shards={n} mode={mode}: abort={ab:.3f} "
-                  f"local_frac={lf:.3f} reads/txn={p.reads:.1f} "
-                  f"thr@{2*n}m={thr/1e6:.2f}M")
+    print("# --- sharded mesh sweep (full mix through distributed_round, "
+          f"{args.threads} threads) ---")
+    results, skipped = run_shard_sweep(args.shards, args.rounds, args.threads,
+                                       mix=SMOKE_MIX if args.smoke else None)
+    for n in skipped:
+        print(f"# skipped {n} shards: --threads {args.threads} not "
+              f"divisible (partitioned T_R needs n_threads % shards == 0)")
+    for n, mode, stats, us, p, total, neworder in results:
+        print(f"tpcc_dist_{n}shard_{mode},{us:.1f},{total:.0f}")
+        per_type = " ".join(
+            f"{t}={stats.commits[t]}/{stats.attempts[t]}"
+            for t in workload.TXN_TYPES)
+        print(f"#   shards={n} mode={mode}: abort={stats.abort_rate:.3f} "
+              f"local_frac={stats.local_fraction:.3f} "
+              f"reads/txn={p.reads:.1f} total@{2*n}m={total/1e6:.2f}M "
+              f"neworder@{2*n}m={neworder/1e6:.2f}M")
+        print(f"#   per-type commits/attempts: {per_type}")
+
+    if args.smoke:
+        # CI contract: the smoke sweep must exercise every transaction type
+        # through the mesh executors, or fail loudly rather than let a
+        # per-type path rot uncovered.
+        for n, mode, stats, *_ in results:
+            missing = [t for t in workload.TXN_TYPES
+                       if stats.attempts[t] == 0]
+            if missing:
+                raise SystemExit(
+                    f"smoke sweep (shards={n}, {mode}) never sampled "
+                    f"{missing}; widen SMOKE_MIX or add rounds")
+        print("# smoke: all five transaction types exercised on the mesh")
 
 
 if __name__ == "__main__":

@@ -25,11 +25,11 @@ def main() -> None:
         print(f"# fig6 {v}: "
               + " ".join(f"{c}nodes={t/1e6:.1f}M" for c, t in pts))
 
-    rows, curves, prof, abort = bench_tpcc_scaling.run()
+    rows, curves, prof, abort, share = bench_tpcc_scaling.run()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.0f}")
     print(f"# fig4 measured abort={abort:.4f} reads/txn={prof.reads:.1f} "
-          f"cas/txn={prof.cas:.1f}")
+          f"cas/txn={prof.cas:.1f} neworder_share={share:.3f}")
     for name, pts in curves.items():
         print(f"# fig4 {name}: "
               + " ".join(f"{n}m={t/1e6:.2f}M" for n, t in pts))

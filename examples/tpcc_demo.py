@@ -1,33 +1,42 @@
 """TPC-C on the NAM core — the paper's headline experiment in miniature.
 
-Loads a small TPC-C database into the NAM store, runs vectorized new-order
-and payment rounds through the full SI protocol (timestamp-vector oracle,
-combined validate+lock CAS, WAL, multi-versioning), measures the real abort
-rate and per-transaction RDMA-op profile, and feeds both into the calibrated
-network model to project cluster throughput at 8 and 56 machines — the
-paper's Fig. 4 numbers.
+Loads a small TPC-C database into the NAM store, runs the **full
+five-transaction mix** (45/43/4/4/4) through the SI protocol
+(timestamp-vector oracle, combined validate+lock CAS, WAL,
+multi-versioning, per-type §7.4 retry queues), measures the real abort rate
+and per-type RDMA-op profiles, and feeds them into the calibrated network
+model to project cluster throughput at 8 and 56 machines — **both total and
+new-order** txn/s, the paper's Fig. 4 split (6.5M new-order of 14.5M total).
 
     PYTHONPATH=src python examples/tpcc_demo.py --rounds 8 --skew 0.9
 
-With ``--shards 8`` the rounds run through ``store.distributed_round`` on a
-simulated 8-memory-server mesh (forced host devices; the script re-execs
-itself to set XLA_FLAGS), in both Fig. 5 locality deployments.
+With ``--shards 8`` the rounds run through ``store.distributed_round`` (and
+``store.distributed_readonly_round`` for the read-only types) on a simulated
+8-memory-server mesh (forced host devices; the script re-execs itself to set
+XLA_FLAGS), in both Fig. 5 locality deployments.
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.core import locality, mvcc, netmodel
+from repro.core import locality, netmodel
 from repro.core.tsoracle import PartitionedVectorOracle, VectorOracle
 from repro.db import tpcc, workload
+from repro.db.tpcc import mixed_profiles, neworder_share
+
+
+def _print_mix(stats: tpcc.MixedRunStats):
+    per_type = "  ".join(
+        f"{t}:{stats.commits[t]}/{stats.attempts[t]}"
+        for t in workload.TXN_TYPES)
+    print(f"  commits/attempts per type: {per_type}")
 
 
 def run_sharded(args):
-    """New-order rounds on the mesh, locality-aware vs -oblivious.
+    """Full-mix rounds on the mesh, locality-aware vs -oblivious.
 
     The sharded path pins one execution thread per warehouse (the paper's
     terminal density), so --warehouses is implied by --threads here.
@@ -46,17 +55,24 @@ def run_sharded(args):
         lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
         mesh = jax.sharding.Mesh(np.array(compat.cpu_devices()[:args.shards]),
                                  ("mem",))
-        engine = tpcc.make_distributed_engine(cfg, lay, mesh, "mem", oracle,
-                                              shard_vector=True)
+        engine = tpcc.make_mixed_engine(cfg, lay, mesh, "mem", oracle,
+                                        shard_vector=True)
         st = tpcc.distribute_state(engine, st)
         home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
-        st, stats = tpcc.run_neworder_rounds(
+        st, stats = tpcc.run_mixed_rounds(
             cfg, lay, st, oracle, jax.random.PRNGKey(1), args.rounds,
             home_w=home, engine=engine, locality_mode=mode)
+        _, prof = mixed_profiles(stats)
+        total = netmodel.namdb_throughput(
+            prof, 2 * args.shards, 60, stats.abort_rate,
+            local_fraction=stats.local_fraction)
         print(f"{args.shards}-server mesh, {mode:9s}: "
-              f"{stats.commits}/{stats.attempts} committed "
+              f"{stats.total_commits}/{stats.total_attempts} committed "
               f"(steady-state abort {stats.abort_rate:.3f}), "
-              f"{stats.local_fraction * 100:.0f}% of accesses machine-local")
+              f"{stats.local_fraction * 100:.0f}% of accesses machine-local, "
+              f"total {total / 1e6:.2f}M txn/s "
+              f"(new-order {total * neworder_share(stats) / 1e6:.2f}M)")
+        _print_mix(stats)
     print("tpcc_demo OK")
 
 
@@ -84,62 +100,35 @@ def main():
                           dist_degree=args.dist, skew_alpha=args.skew)
     oracle = VectorOracle(cfg.n_threads)
     lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
-    logits = workload.zipf_logits(cfg.n_items, cfg.skew_alpha)
 
-    key = jax.random.PRNGKey(1)
-    committed = aborted = 0
-    reads = cas = installs = b_moved = 0.0
     t0 = time.time()
-    for r in range(args.rounds):
-        key, k1, k2 = jax.random.split(key, 3)
-        inp = workload.gen_neworder(k1, cfg.n_threads, cfg.n_warehouses,
-                                    cfg.n_items, cfg.customers_per_district,
-                                    None, cfg.dist_degree, logits)
-        out = tpcc.neworder_round(cfg, lay, st, oracle, inp, round_no=r)
-        st = out.state
-        n_c = int(np.asarray(out.committed).sum())
-        committed += n_c
-        aborted += cfg.n_threads - n_c
-        reads += float(out.ops.record_reads)
-        cas += float(out.ops.cas_ops)
-        installs += float(out.ops.writes)
-        b_moved += float(out.ops.bytes_moved)
-
-        pinp = workload.gen_payment(k2, cfg.n_threads, cfg.n_warehouses,
-                                    cfg.customers_per_district,
-                                    cfg.dist_degree)
-        st, p_comm, p_ops = tpcc.payment_round(cfg, lay, st, oracle, pinp)
-        committed += int(np.asarray(p_comm).sum())
-        aborted += cfg.n_threads - int(np.asarray(p_comm).sum())
-        # the version-mover thread of the memory servers (§5.1)
-        st = st._replace(nam=st.nam._replace(
-            table=mvcc.version_mover(st.nam.table)))
+    st, stats = tpcc.run_mixed_rounds(cfg, lay, st, oracle,
+                                      jax.random.PRNGKey(1), args.rounds)
     dt = time.time() - t0
 
-    n_txns = committed + aborted
-    abort_rate = aborted / n_txns
-    per_txn = netmodel.TxnProfile(
-        reads=reads / max(1, n_txns), cas=cas / max(1, n_txns),
-        installs=installs / max(1, n_txns),
-        bytes_read=b_moved / max(1, n_txns) * 0.6,
-        bytes_written=b_moved / max(1, n_txns) * 0.4)
-
-    print(f"ran {n_txns} transactions ({args.rounds} rounds x "
-          f"{cfg.n_threads} threads x 2 mixes) in {dt:.1f}s")
-    print(f"abort rate = {abort_rate:.3f}  (skew={args.skew}, "
+    print(f"ran {stats.total_attempts} transactions ({args.rounds} rounds x "
+          f"{cfg.n_threads} threads, full 45/43/4/4/4 mix) in {dt:.1f}s")
+    print(f"abort rate = {stats.abort_rate:.3f}  (skew={args.skew}, "
           f"dist={args.dist}%)")
-    print(f"per-txn profile: reads={per_txn.reads:.1f} cas={per_txn.cas:.1f}"
-          f" installs={per_txn.installs:.1f}")
+    _print_mix(stats)
+    per_type, prof = mixed_profiles(stats)
+    share = neworder_share(stats)
+    print(f"mix profile: reads={prof.reads:.1f} cas={prof.cas:.1f} "
+          f"installs={prof.installs:.1f}  (new-order: "
+          f"reads={per_type['neworder'].reads:.1f} "
+          f"cas={per_type['neworder'].cas:.1f})")
     print("\nprojected cluster throughput (calibrated cost model, Fig. 4):")
     for n in (8, 28, 56):
-        thr = netmodel.namdb_throughput(per_txn, n, 60, abort_rate)
-        thr_loc = netmodel.namdb_throughput(per_txn, n, 60, abort_rate,
+        thr = netmodel.namdb_throughput(prof, n, 60, stats.abort_rate)
+        thr_loc = netmodel.namdb_throughput(prof, n, 60, stats.abort_rate,
                                             local_fraction=0.9)
-        trad = netmodel.traditional_throughput(per_txn, n, 60, abort_rate)
-        print(f"  {n:3d} machines: NAM-DB {thr / 1e6:5.2f} M txn/s"
+        trad = netmodel.traditional_throughput(prof, n, 60, stats.abort_rate)
+        print(f"  {n:3d} machines: NAM-DB total {thr / 1e6:5.2f} M txn/s"
+              f" (new-order {thr * share / 1e6:5.2f} M)"
               f"   +locality {thr_loc / 1e6:5.2f} M   traditional "
               f"{trad / 1e3:6.0f} k")
-    print("\n(paper anchors @56: 3.64 M w/o locality, ~6.5 M with)")
+    print("\n(paper anchors @56: 14.5 M total / 6.5 M new-order w/ locality;"
+          " 3.64 M w/o)")
     print("tpcc_demo OK")
 
 

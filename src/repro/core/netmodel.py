@@ -127,6 +127,38 @@ class TxnProfile:
     log_writes: float = 2.0  # WAL journal writes (≥2 replicas)
 
 
+def profile_from_ops(ops, attempts: int, *, extra_installs: float = 0.0,
+                     read_only: bool = False) -> TxnProfile:
+    """Measured per-attempt op counts (an ``si.OpCounts``-shaped record) of
+    one transaction type → cost-model profile.
+
+    ``extra_installs`` charges conflict-free extend inserts that the SI
+    round's op counters do not see (e.g. new-order's order/order-line
+    records). Read-only transactions burn less local CPU and write no WAL.
+    """
+    per = 1.0 / max(1, attempts)
+    return TxnProfile(
+        reads=float(ops.record_reads) * per,
+        cas=float(ops.cas_ops) * per,
+        installs=float(ops.writes) * per / 2 + extra_installs,
+        bytes_read=float(ops.bytes_moved) * per * 0.6 + extra_installs * 40,
+        bytes_written=float(ops.bytes_moved) * per * 0.4
+        + extra_installs * 40,
+        logic_cpu=5e-6 if read_only else 20e-6,
+        log_writes=0.0 if read_only else 2.0)
+
+
+def combine_profiles(profiles, shares) -> TxnProfile:
+    """Attempt-share-weighted mix of per-type profiles (the paper's *total*
+    throughput is over the whole transaction mix, §7)."""
+    def mix(field):
+        return sum(shares[n] * getattr(profiles[n], field) for n in profiles)
+    return TxnProfile(
+        reads=mix("reads"), cas=mix("cas"), installs=mix("installs"),
+        bytes_read=mix("bytes_read"), bytes_written=mix("bytes_written"),
+        logic_cpu=mix("logic_cpu"), log_writes=mix("log_writes"))
+
+
 # Queueing inflation at 60 threads/server load: verbs queue at the NIC and
 # two-sided index/catalog ops queue at server CPUs. Calibrated jointly with
 # PROTO_OP_CPU to the paper's anchors thr=3.64 M @56 w/o locality (cap_lat =

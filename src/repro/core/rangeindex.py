@@ -122,7 +122,10 @@ def lookup_max_below(idx: RangeIndex, hi):
         k = jnp.stack([c[0] for c in cands])
         v = jnp.stack([c[1] for c in cands])
         ok = jnp.stack([c[2] for c in cands])
-        best = jnp.argmax(jnp.where(ok, k, 0))
+        # rank by key+1 so a qualifying key 0 still beats non-qualifying
+        # candidates (which sit at rank 0) — key 0 is a valid key. k+1
+        # cannot wrap: ok implies k < h ≤ uint32 max.
+        best = jnp.argmax(jnp.where(ok, k + jnp.uint32(1), 0))
         return k[best], v[best], jnp.any(ok)
 
     return jax.vmap(one)(hi)

@@ -73,23 +73,61 @@ ComputeFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
 def count_ops(oracle, batch: TxnBatch, txn_found, from_current, n_installs,
               n_releases, n_committed, payload_width: int,
-              payload_bytes: int = 0) -> OpCounts:
+              payload_bytes: int = 0, n_txns=None,
+              active=None) -> OpCounts:
     """RDMA-op accounting for one round (shared by the single-shard path and
     :func:`repro.core.store.distributed_round`, so the two produce identical
-    profiles for the cost model)."""
+    profiles for the cost model).
+
+    ``n_txns`` overrides the number of transactions actually executed this
+    round (mixed rounds run one type per sub-round over a subset of the
+    threads — only those fetch the timestamp vector). Defaults to the batch
+    width. ``active`` masks the batch's read/write masks the same way the
+    protocol does, so inactive lanes count no ops even when the caller did
+    not pre-mask the batch.
+    """
     T, RS = batch.read_slots.shape
-    n_active_r = jnp.sum(batch.read_mask)
-    n_active_w = jnp.sum(batch.write_mask & txn_found[:, None])
+    if n_txns is None:
+        n_txns = jnp.asarray(T)
+    read_mask, write_mask = batch.read_mask, batch.write_mask
+    if active is not None:
+        read_mask = read_mask & active[:, None]
+        write_mask = write_mask & active[:, None]
+    n_active_r = jnp.sum(read_mask)
+    n_active_w = jnp.sum(write_mask & txn_found[:, None])
     vec_bytes = 4 * getattr(oracle, "n_slots", T)
     rec_bytes = 8 + 4 * payload_width if payload_bytes == 0 else payload_bytes
     return OpCounts(
-        ts_reads=jnp.asarray(T),
-        ts_read_bytes=jnp.asarray(T * vec_bytes),
-        record_reads=n_active_r + jnp.sum(~from_current & batch.read_mask),
+        ts_reads=jnp.asarray(n_txns),
+        ts_read_bytes=jnp.asarray(n_txns * vec_bytes),
+        record_reads=n_active_r + jnp.sum(~from_current & read_mask),
         cas_ops=n_active_w,
         writes=2 * n_installs + n_releases + n_committed,
         bytes_moved=(n_active_r + 2 * n_installs) * rec_bytes
-        + jnp.asarray(T * vec_bytes),
+        + jnp.asarray(n_txns * vec_bytes),
+    )
+
+
+def count_readonly_ops(oracle, read_mask, from_current, n_txns,
+                       payload_width: int, payload_bytes: int = 0) -> OpCounts:
+    """RDMA-op accounting for a round of *read-only* transactions.
+
+    Read-only transactions never validate and never write under SI (§1.2 of
+    the paper): one timestamp-vector fetch per transaction plus one one-sided
+    read per record (old-version probes counted like the write path's), zero
+    CAS and zero installs. Shared by the single-shard and the sharded
+    (:func:`repro.core.store.distributed_readonly_round`) paths.
+    """
+    n_reads = jnp.sum(read_mask)
+    vec_bytes = 4 * getattr(oracle, "n_slots", 1)
+    rec_bytes = 8 + 4 * payload_width if payload_bytes == 0 else payload_bytes
+    return OpCounts(
+        ts_reads=jnp.asarray(n_txns),
+        ts_read_bytes=jnp.asarray(n_txns * vec_bytes),
+        record_reads=n_reads + jnp.sum(~from_current & read_mask),
+        cas_ops=jnp.asarray(0),
+        writes=jnp.asarray(0),
+        bytes_moved=n_reads * rec_bytes + jnp.asarray(n_txns * vec_bytes),
     )
 
 
@@ -102,11 +140,22 @@ def run_round(
     *,
     rts_vec: Optional[jnp.ndarray] = None,
     payload_bytes: int = 0,
+    active: Optional[jnp.ndarray] = None,
 ) -> RoundResult:
-    """Execute one vectorized round of the SI protocol."""
+    """Execute one vectorized round of the SI protocol.
+
+    ``active`` (bool [T], default all-true) marks the threads that actually
+    run a transaction this round. A mixed workload executes one transaction
+    *type* per sub-round over the type's thread subset; inactive threads are
+    protocol no-ops — no reads counted, no CAS issued, no commit published
+    (their T_R slot is not bumped) — so sub-rounds compose into exactly one
+    transaction per thread per round.
+    """
     T, RS = batch.read_slots.shape
     WS = batch.write_ref.shape[1]
     W = table.payload_width
+    if active is None:
+        active = jnp.ones((T,), bool)
 
     # ---- 1. read timestamp (whole vector = the snapshot) -----------------
     if rts_vec is None:
@@ -127,7 +176,8 @@ def run_round(
     # ---- 4. commit timestamps, created locally ----------------------------
     slot = oracle.slot_of_thread(batch.tid)
     if hasattr(oracle, "next_commit_ts_batch"):
-        cts = oracle.next_commit_ts_batch(state, batch.tid, txn_found)
+        cts = oracle.next_commit_ts_batch(state, batch.tid,
+                                          txn_found & active)
     else:
         cts = state.vec[slot] + jnp.uint32(1)          # [T]
     new_hdr = hdr_ops.pack(
@@ -139,7 +189,8 @@ def run_round(
     wref = jnp.clip(batch.write_ref, 0, RS - 1)
     write_slots = jnp.take_along_axis(batch.read_slots, wref, axis=1)
     expected = jnp.take_along_axis(read_hdr, wref[:, :, None], axis=1)
-    req_active = (batch.write_mask & txn_found[:, None]).reshape(-1)
+    req_active = (batch.write_mask
+                  & (txn_found & active)[:, None]).reshape(-1)
     req_slots = write_slots.reshape(-1)
     req_expected = expected.reshape(-1, 2)
     # round-unique priorities: thread id (each thread issues ≤1 txn/round)
@@ -159,7 +210,7 @@ def run_round(
     txn_of_req = jnp.broadcast_to(
         jnp.arange(T, dtype=jnp.int32)[:, None], (T, WS)).reshape(-1)
     committed = cas.all_granted_per_txn(effective, txn_of_req, T, req_active)
-    committed = committed & txn_found
+    committed = committed & txn_found & active
 
     # ---- 7. install write-sets of committed transactions ------------------
     inst_mask = res.granted & committed[txn_of_req]   # they hold these locks
@@ -180,7 +231,8 @@ def run_round(
     # ---- op accounting -----------------------------------------------------
     ops = count_ops(oracle, batch, txn_found, vr.from_current.reshape(T, RS),
                     jnp.sum(do_install), jnp.sum(release_mask),
-                    jnp.sum(committed), W, payload_bytes)
+                    jnp.sum(committed), W, payload_bytes,
+                    n_txns=jnp.sum(active.astype(jnp.int32)), active=active)
     del inst_mask
     return RoundResult(table=table, oracle_state=state, committed=committed,
                        snapshot_miss=~txn_found, read_data=read_data, ops=ops)

@@ -48,13 +48,19 @@ class NAMStore(NamedTuple):
 def init_store(catalog: Catalog, oracle: VectorOracle, *, n_old: int = 2,
                n_overflow: int = 2, width: int | None = None,
                n_insert_regions: int = 1) -> NAMStore:
+    """Build the NAM store for a catalog: versioned pool + oracle + extends.
+
+    Every record starts *existing* (found by reads). Insert-style regions
+    must start non-existent so reads report not-found until an extend install
+    creates the record — the catalog carries no layout knowledge of strided
+    extends, so that is the **caller's obligation**: after ``init_store``,
+    pre-mark each insert region via :func:`mark_region_deleted` (contiguous
+    regions) or :func:`mark_slots_deleted` (strided layouts, e.g. the
+    warehouse-major TPC-C pool).
+    """
     w = width or max(s.width for s in catalog.specs.values())
     tbl = mvcc.init_table(catalog.total_records, w, n_old=n_old,
                           n_overflow=n_overflow)
-    # insert-style tables start "deleted" so reads report not-found
-    for spec in catalog.specs.values():
-        if spec.kind == "table" and getattr(spec, "insertable", False):
-            pass  # handled by caller via mark_region_deleted
     return NAMStore(
         table=tbl,
         oracle_state=oracle.init(),
@@ -147,7 +153,11 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
     — the partitioning is a placement decision, exactly as in the paper.
 
     Returns ``(round_fn, n_shards)`` with
-    ``round_fn(table, vec, batch, aux) -> (table, vec, DistRoundOut)``.
+    ``round_fn(table, vec, batch, aux, active=None) -> (table, vec,
+    DistRoundOut)``. ``active`` (bool [T], default all-true) marks the
+    threads running a transaction this round — the mixed-workload sub-round
+    mask of :func:`repro.core.si.run_round`: inactive threads issue no CAS
+    and publish no commit timestamp.
     """
     n_shards = mesh.shape[axis]
     if shard_vector:
@@ -158,7 +168,7 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         part_slots = oracle.n_slots // n_shards
 
     def local_round(table: VersionedTable, vec: jnp.ndarray, batch: TxnBatch,
-                    aux):
+                    aux, active):
         shard_id = jax.lax.axis_index(axis)
         base = shard_id * shard_records
         T, RS = batch.read_slots.shape
@@ -195,7 +205,7 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         slot_ids = oracle.slot_of_thread(batch.tid)
         if hasattr(oracle, "next_commit_ts_batch"):
             cts = oracle.next_commit_ts_batch(
-                VectorState(vec=vec), batch.tid, txn_found)
+                VectorState(vec=vec), batch.tid, txn_found & active)
         else:
             cts = vec[slot_ids] + jnp.uint32(1)
         new_hdr = hdr_ops.pack(
@@ -208,7 +218,8 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         expected = jnp.take_along_axis(read_hdr, wref[:, :, None], axis=1)
         req_slots_g = wslots.reshape(-1)
         wloc, winside = _local_slots(req_slots_g, base, shard_records)
-        req_active = (batch.write_mask & txn_found[:, None]).reshape(-1)
+        req_active = (batch.write_mask
+                      & (txn_found & active)[:, None]).reshape(-1)
         mine = req_active & winside
         prio = jnp.broadcast_to(
             batch.tid.astype(jnp.uint32)[:, None], (T, WS)).reshape(-1)
@@ -228,7 +239,7 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         fails = jnp.zeros((T,), jnp.int32).at[txn_of_req].add(
             failed_local.astype(jnp.int32))
         fails = jax.lax.psum(fails, axis)
-        committed = (fails == 0) & txn_found
+        committed = (fails == 0) & txn_found & active
 
         # ---- 7./8. install / release on the owning shard -----------------
         do_install = effective & committed[txn_of_req]
@@ -266,11 +277,73 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
     out_spec = DistRoundOut(
         committed=P(), snapshot_miss=P(), read_data=P(), txn_found=P(),
         from_current=P(), n_installs=P(), n_releases=P())
-    fn = shard_map(local_round, mesh=mesh,
-                   in_specs=(tbl_spec, vec_spec, batch_spec, P()),
-                   out_specs=(tbl_spec, vec_spec, out_spec),
-                   check_vma=False)
-    return jax.jit(fn), n_shards
+    fn = jax.jit(shard_map(local_round, mesh=mesh,
+                           in_specs=(tbl_spec, vec_spec, batch_spec, P(), P()),
+                           out_specs=(tbl_spec, vec_spec, out_spec),
+                           check_vma=False))
+
+    def round_fn(table, vec, batch, aux, active=None):
+        if active is None:
+            active = jnp.ones((batch.tid.shape[0],), bool)
+        return fn(table, vec, batch, aux, active)
+
+    return round_fn, n_shards
+
+
+class ReadOnlyOut(NamedTuple):
+    """Replicated outputs of :func:`distributed_readonly_round`."""
+    read_data: jnp.ndarray      # int32 [T, RS, W]
+    found: jnp.ndarray          # bool  [T, RS] (True where masked out)
+    from_current: jnp.ndarray   # bool  [T, RS]
+
+
+def distributed_readonly_round(mesh: Mesh, axis: str, shard_records: int, *,
+                               shard_vector: bool = False):
+    """Build a jittable snapshot-read executor over the sharded pool.
+
+    Read-only transactions never validate under SI (paper §1.2): their whole
+    execution is phase 1-2 of Listing 1 — fetch the timestamp vector, issue
+    one-sided visible reads. This builder renders exactly that against the
+    range-partitioned pool: masked local gathers on the owning memory server
+    combined with an all-reduce, no CAS, no install, no visibility write; the
+    table and vector pass through untouched.
+
+    Returns ``ro_fn(table, vec, read_slots, read_mask) -> ReadOnlyOut`` with
+    ``read_slots`` int32 [T, RS] and ``read_mask`` bool [T, RS] replicated.
+    """
+
+    def local_read(table: VersionedTable, vec: jnp.ndarray, read_slots,
+                   read_mask):
+        shard_id = jax.lax.axis_index(axis)
+        base = shard_id * shard_records
+        T, RS = read_slots.shape
+        W = table.payload_width
+        if shard_vector:
+            vec = jax.lax.all_gather(vec, axis, tiled=True)
+        flat = read_slots.reshape(-1)
+        loc, inside = _local_slots(flat, base, shard_records)
+        vr = mvcc.read_visible(table, jnp.where(inside, loc, 0), vec)
+        rd = jax.lax.psum(jnp.where(inside[:, None], vr.data, 0), axis)
+        fnd = jax.lax.psum(
+            jnp.where(inside, vr.found, False).astype(jnp.int32), axis) > 0
+        fcur = jax.lax.psum(
+            jnp.where(inside, vr.from_current, False).astype(jnp.int32),
+            axis) > 0
+        return ReadOnlyOut(
+            read_data=rd.reshape(T, RS, W),
+            found=fnd.reshape(T, RS) | ~read_mask,
+            from_current=fcur.reshape(T, RS))
+
+    tbl_spec = VersionedTable(
+        cur_hdr=P(axis), cur_data=P(axis), old_hdr=P(axis), old_data=P(axis),
+        next_write=P(axis), ovf_hdr=P(axis), ovf_data=P(axis),
+        ovf_next=P(axis))
+    vec_spec = P(axis) if shard_vector else P()
+    out_spec = ReadOnlyOut(read_data=P(), found=P(), from_current=P())
+    fn = shard_map(local_read, mesh=mesh,
+                   in_specs=(tbl_spec, vec_spec, P(), P()),
+                   out_specs=out_spec, check_vma=False)
+    return jax.jit(fn)
 
 
 def pad_table(table: VersionedTable, multiple: int):

@@ -22,8 +22,8 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import header as hdr_ops, locality, mvcc, rangeindex as ri, \
-    si, store
+from repro.core import header as hdr_ops, locality, mvcc, netmodel, \
+    rangeindex as ri, si, store
 from repro.core.catalog import Catalog
 from repro.core.si import TxnBatch
 from repro.core.tsoracle import VectorOracle, VectorState
@@ -286,6 +286,27 @@ def _insert_install(tbl, slots, tid_slots, cts, data, mask):
     return out.table
 
 
+def _n_active(batch: TxnBatch, active):
+    """Transactions actually executed this (sub-)round — op accounting."""
+    if active is None:
+        return jnp.asarray(batch.tid.shape[0])
+    return jnp.sum(active.astype(jnp.int32))
+
+
+def _active_or_ones(T: int, active):
+    return jnp.ones((T,), bool) if active is None else active
+
+
+def _dist_ops(oracle, batch: TxnBatch, out, tbl, active) -> si.OpCounts:
+    """Op accounting of one distributed round — the exact
+    :func:`si.count_ops` call the single-shard path makes, shared by every
+    ``*_round_distributed`` so the accounting cannot diverge per type."""
+    return si.count_ops(oracle, batch, out.txn_found, out.from_current,
+                        out.n_installs, out.n_releases,
+                        jnp.sum(out.committed), tbl.payload_width,
+                        n_txns=_n_active(batch, active), active=active)
+
+
 # ------------------------------------------------------------- new-order ----
 class NewOrderResult(NamedTuple):
     state: TPCCState
@@ -297,12 +318,17 @@ class NewOrderResult(NamedTuple):
 
 
 def _neworder_batch(cfg: TPCCConfig, lay: TPCCLayout,
-                    inp: workload.NewOrderInputs) -> TxnBatch:
+                    inp: workload.NewOrderInputs,
+                    active: Optional[jnp.ndarray] = None) -> TxnBatch:
     """Read-set (RS=33): [district, warehouse, customer, item*15, stock*15];
-    write-set (WS=16): district (d_next_o_id++) + up to 15 stocks."""
+    write-set (WS=16): district (d_next_o_id++) + up to 15 stocks.
+
+    ``active`` masks the threads running a new-order this round (mixed-mix
+    sub-round); inactive threads get all-false read/write masks."""
     T = inp.w_id.shape[0]
+    act = _active_or_ones(T, active)
     line = jnp.arange(MAX_OL)[None, :]
-    line_mask = line < inp.ol_cnt[:, None]
+    line_mask = (line < inp.ol_cnt[:, None]) & act[:, None]
     dsl = d_slot(lay, inp.w_id, inp.d_id)
     wsl = w_slot(lay, inp.w_id)
     csl = c_slot(lay, cfg, inp.w_id, inp.d_id, inp.c_id)
@@ -311,11 +337,12 @@ def _neworder_batch(cfg: TPCCConfig, lay: TPCCLayout,
     read_slots = jnp.concatenate(
         [dsl[:, None], wsl[:, None], csl[:, None], isl, ssl], axis=1)
     read_mask = jnp.concatenate(
-        [jnp.ones((T, 3), bool), line_mask, line_mask], axis=1)
+        [jnp.broadcast_to(act[:, None], (T, 3)), line_mask, line_mask],
+        axis=1)
     write_ref = jnp.concatenate(
         [jnp.zeros((T, 1), jnp.int32), 18 + jnp.broadcast_to(line, (T, MAX_OL))],
         axis=1)
-    write_mask = jnp.concatenate([jnp.ones((T, 1), bool), line_mask], axis=1)
+    write_mask = jnp.concatenate([act[:, None], line_mask], axis=1)
     return TxnBatch(tid=jnp.arange(T, dtype=jnp.int32),
                     read_slots=read_slots, read_mask=read_mask,
                     write_ref=write_ref, write_mask=write_mask)
@@ -395,13 +422,13 @@ def _neworder_inserts(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
 
 def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                    oracle: VectorOracle, inp: workload.NewOrderInputs,
-                   rts_vec=None, round_no=0) -> NewOrderResult:
+                   rts_vec=None, round_no=0, active=None) -> NewOrderResult:
     """One vectorized round of new-order transactions through SI
     (single-shard reference path)."""
-    batch = _neworder_batch(cfg, lay, inp)
+    batch = _neworder_batch(cfg, lay, inp, active)
     out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
                        lambda rh, rd, vec: _neworder_new_data(rd, inp),
-                       rts_vec=rts_vec)
+                       rts_vec=rts_vec, active=active)
     tbl, idx, extends, o_id = _neworder_inserts(
         cfg, lay, st, oracle, out.table, out.oracle_state.vec, out.committed,
         out.read_data, inp, round_no)
@@ -461,20 +488,86 @@ def distribute_state(engine: DistEngine, st: TPCCState) -> TPCCState:
         table=tbl, oracle_state=VectorState(vec=vec)))
 
 
+class MixedEngine(NamedTuple):
+    """Per-type executors for the full TPC-C mix over the memory-server mesh.
+
+    Composes the new-order :class:`DistEngine` (``base``) with one
+    :func:`repro.core.store.distributed_round` executor per additional
+    *write* transaction type (their transaction logic differs, the protocol
+    does not), plus one :func:`repro.core.store.distributed_readonly_round`
+    executor shared by the read-only types (orderstatus, stocklevel), whose
+    one-sided snapshot reads hit the sharded pool without any validate or
+    install phase. Placement fields delegate to ``base``, so the engine
+    drops into :func:`neworder_round_distributed` / ``distribute_state``
+    unchanged.
+    """
+    base: DistEngine
+    payment_fn: Callable
+    delivery_fn: Callable
+    readonly_fn: Callable
+
+    @property
+    def round_fn(self) -> Callable:
+        return self.base.round_fn
+
+    @property
+    def mesh(self):
+        return self.base.mesh
+
+    @property
+    def axis(self) -> str:
+        return self.base.axis
+
+    @property
+    def n_shards(self) -> int:
+        return self.base.n_shards
+
+    @property
+    def shard_records(self) -> int:
+        return self.base.shard_records
+
+    @property
+    def shard_vector(self) -> bool:
+        return self.base.shard_vector
+
+    @property
+    def placement(self) -> locality.Placement:
+        return self.base.placement
+
+
+def make_mixed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
+                      oracle: VectorOracle, *,
+                      shard_vector: bool = False) -> MixedEngine:
+    """Build the five-transaction mix's executors over the mesh (the
+    new-order executor is :func:`make_distributed_engine`'s, reused)."""
+    base = make_distributed_engine(cfg, lay, mesh, axis, oracle,
+                                   shard_vector=shard_vector)
+    pay_fn, _ = store.distributed_round(
+        mesh, axis, oracle,
+        lambda rh, rd, vec, aux: _payment_new_data(rd, aux),
+        base.shard_records, shard_vector=shard_vector)
+    del_fn, _ = store.distributed_round(
+        mesh, axis, oracle,
+        lambda rh, rd, vec, aux: _delivery_new_data(rd, aux),
+        base.shard_records, shard_vector=shard_vector)
+    ro_fn = store.distributed_readonly_round(mesh, axis, base.shard_records,
+                                             shard_vector=shard_vector)
+    return MixedEngine(base=base, payment_fn=pay_fn, delivery_fn=del_fn,
+                       readonly_fn=ro_fn)
+
+
 def neworder_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
                                st: TPCCState, oracle: VectorOracle,
                                engine: DistEngine,
                                inp: workload.NewOrderInputs,
-                               round_no=0) -> NewOrderResult:
+                               round_no=0, active=None) -> NewOrderResult:
     """One new-order round through :func:`store.distributed_round` — the
     multi-memory-server rendering of :func:`neworder_round`, bit-identical
     to it (tests/test_distributed_equiv.py)."""
-    batch = _neworder_batch(cfg, lay, inp)
+    batch = _neworder_batch(cfg, lay, inp, active)
     tbl, vec, out = engine.round_fn(st.nam.table, st.nam.oracle_state.vec,
-                                    batch, inp)
-    ops = si.count_ops(oracle, batch, out.txn_found, out.from_current,
-                       out.n_installs, out.n_releases,
-                       jnp.sum(out.committed), tbl.payload_width)
+                                    batch, inp, active)
+    ops = _dist_ops(oracle, batch, out, tbl, active)
     tbl, idx, extends, o_id = _neworder_inserts(
         cfg, lay, st, oracle, tbl, vec, out.committed, out.read_data, inp,
         round_no)
@@ -487,6 +580,39 @@ def neworder_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
 
 
 # ----------------------------------------------------- retry-queue driver ----
+def _check_layout_homes(cfg: TPCCConfig, lay: TPCCLayout, home_w,
+                        locality_mode):
+    """The warehouse-major layout homes each thread's insert extends in
+    block ``tid % n_warehouses`` (see :func:`o_slot_ext`); when locality is
+    being *measured*, transactions must execute at their insert blocks or
+    the §7.3 measurement scores accesses against the wrong server. Reject
+    diverging ``home_w`` rather than silently skewing local_fraction.
+    (Without a locality measurement the protocol is placement-agnostic and
+    any ``home_w`` is fine.)"""
+    if locality_mode is None or lay.mode != "warehouse_major":
+        return
+    expected = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
+    if home_w is None or not bool(jnp.all(
+            jnp.asarray(home_w, jnp.int32) == expected)):
+        raise ValueError(
+            "measuring locality under the warehouse_major layout requires "
+            "home_w = locality.thread_homes(n_threads, n_warehouses): "
+            "thread tid's insert extends live in block tid % n_warehouses")
+
+
+def _merge_retries(pending, fresh, retry_mask, T: int):
+    """§7.4 retry queue: threads with a pending abort re-enter with their
+    original *inputs* (the snapshot is re-read inside the round — GSI: any
+    newer one is admissible, i.e. the old snapshot is discarded); everyone
+    else draws fresh work. Shared by both run drivers."""
+    if pending is None:
+        return fresh
+    return jax.tree.map(
+        lambda p, f: jnp.where(
+            retry_mask.reshape((T,) + (1,) * (f.ndim - 1)), p, f),
+        pending, fresh)
+
+
 class NewOrderRunStats(NamedTuple):
     """Aggregates of a multi-round run under the §7.4 retry discipline."""
     committed: jnp.ndarray      # bool [R, T] — per-round outcomes
@@ -518,6 +644,7 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     optimization, not a requirement).
     """
     T = cfg.n_threads
+    _check_layout_homes(cfg, lay, home_w, locality_mode)
     if logits is None:
         logits = workload.zipf_logits(cfg.n_items, cfg.skew_alpha)
     if dist_degree is None:
@@ -538,16 +665,7 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         fresh = workload.gen_neworder(
             sub, T, cfg.n_warehouses, cfg.n_items,
             cfg.customers_per_district, home_w, dist_degree, logits)
-        if pending is None:
-            inp = fresh
-        else:
-            # aborted txns re-enter with their original *inputs*; the
-            # snapshot is re-read inside the round (GSI: any newer one is
-            # admissible), i.e. the old snapshot is discarded.
-            inp = jax.tree.map(
-                lambda p, f: jnp.where(
-                    retry_mask.reshape((T,) + (1,) * (f.ndim - 1)), p, f),
-                pending, fresh)
+        inp = _merge_retries(pending, fresh, retry_mask, T)
         if engine is None:
             out = neworder_round(cfg, lay, st, oracle, inp, round_no=r)
         else:
@@ -576,6 +694,8 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         retry_mask = ~c
         pending = inp
 
+    # the last round's aborts never re-entered a later round
+    retries -= int(jnp.sum(retry_mask))
     stats = NewOrderRunStats(
         committed=jnp.stack(committed_rounds),
         attempts=attempts, commits=commits, retries=retries,
@@ -585,53 +705,329 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     return st, stats
 
 
+# ----------------------------------------------------- mixed-round driver ----
+class MixedRunStats(NamedTuple):
+    """Aggregates of a full five-transaction-mix run (§7: the paper's total
+    throughput only exists because the whole 45/43/4/4/4 mix runs
+    concurrently; new-order is reported *out of* that total)."""
+    attempts: dict              # type name -> executed txns (incl. retries)
+    commits: dict               # type name -> commits
+    retries: dict               # type name -> aborted txns re-entered later
+    ops: dict                   # type name -> si.OpCounts (python floats)
+    total_attempts: int
+    total_commits: int
+    abort_rate: float           # steady-state: 1 - commits/attempts
+    local_fraction: float       # access-weighted machine-local share
+    delivered: int              # deliveries that found+delivered an order
+
+
+def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                     oracle: VectorOracle, key: jax.Array, n_rounds: int,
+                     *, mix=None, logits=None, home_w=None, dist_degree=None,
+                     engine: Optional[MixedEngine] = None,
+                     locality_mode: Optional[str] = None,
+                     move_versions: bool = True, stock_last_n: int = 8):
+    """Closed-loop driver for the full TPC-C mix.
+
+    Each round, every execution thread draws its next transaction type from
+    ``mix`` (default :data:`workload.MIX`) and runs it; the round executes as
+    five type-homogeneous sub-rounds over the thread subsets (the vectorized
+    rendering of per-terminal mixing — inactive lanes are protocol no-ops).
+    The §7.4 retry queue is per-transaction-type: an aborted write
+    transaction re-enters the next round with its original inputs *and its
+    original type*, its snapshot discarded. Read-only types never validate
+    and never abort (§1.2) — they always commit, and their snapshot reads
+    are op-counted (and, with an engine, hit the sharded pool).
+
+    ``engine=None`` runs the single-shard reference; with a
+    :class:`MixedEngine` every sub-round goes through the mesh executors.
+    """
+    T = cfg.n_threads
+    _check_layout_homes(cfg, lay, home_w, locality_mode)
+    if logits is None:
+        logits = workload.zipf_logits(cfg.n_items, cfg.skew_alpha)
+    if dist_degree is None:
+        dist_degree = cfg.dist_degree
+    placement = engine.placement if engine is not None else \
+        locality.Placement(n_servers=1,
+                           shard_records=lay.catalog.total_records)
+    names = workload.TXN_TYPES
+    attempts = {n: 0 for n in names}
+    commits = {n: 0 for n in names}
+    retries = {n: 0 for n in names}
+    ops_sum = {n: [0.0] * len(si.OpCounts._fields) for n in names}
+    delivered = 0
+    lf_local = lf_total = 0.0
+    tids = jnp.arange(T, dtype=jnp.int32)
+    pending_type = jnp.full((T,), -1, jnp.int32)
+    pending: Optional[workload.MixedInputs] = None
+
+    def acc_ops(name, ops):
+        for i, f in enumerate(ops):
+            ops_sum[name][i] += float(f)
+
+    def acc_local(w_id, d_id, slots, mask):
+        nonlocal lf_local, lf_total
+        if locality_mode is None:
+            return
+        srv = locality.route_transactions(
+            locality_mode, placement, d_slot(lay, w_id, d_id), tids, T)
+        n_acc = float(jnp.sum(mask))
+        lf_local += float(locality.local_fraction(
+            placement, srv, slots, mask)) * n_acc
+        lf_total += n_acc
+
+    def acc_write(name, act, committed, ops):
+        attempts[name] += int(jnp.sum(act))
+        commits[name] += int(jnp.sum(committed))
+        aborted = act & ~committed
+        retries[name] += int(jnp.sum(aborted))
+        acc_ops(name, ops)
+        return aborted
+
+    for r in range(n_rounds):
+        key, sub = jax.random.split(key)
+        fresh = workload.gen_mixed(sub, T, cfg.n_warehouses, cfg.n_items,
+                                   cfg.customers_per_district, home_w,
+                                   dist_degree, logits, mix)
+        # a retried txn keeps its original type AND inputs (MixedInputs
+        # carries both, so one merge covers the per-type retry queues)
+        inp = _merge_retries(pending, fresh, pending_type >= 0, T)
+        ttype = inp.txn_type
+        aborted_round = jnp.zeros((T,), bool)
+
+        # ---- write transactions, one type-homogeneous sub-round each -----
+        # (a type that drew zero lanes this round is skipped outright — the
+        # masked sub-round would be a pure no-op contributing zero stats)
+        act = ttype == 0
+        if int(jnp.sum(act)):
+            if engine is None:
+                out = neworder_round(cfg, lay, st, oracle, inp.neworder,
+                                     round_no=r, active=act)
+            else:
+                out = neworder_round_distributed(cfg, lay, st, oracle,
+                                                 engine, inp.neworder,
+                                                 round_no=r, active=act)
+            st = out.state
+            aborted_round |= acc_write("neworder", act, out.committed,
+                                       out.ops)
+            acc_local(inp.neworder.w_id, inp.neworder.d_id,
+                      out.batch.read_slots, out.batch.read_mask)
+
+        act = ttype == 1
+        if int(jnp.sum(act)):
+            if engine is None:
+                pay = payment_round(cfg, lay, st, oracle, inp.payment,
+                                    active=act)
+            else:
+                pay = payment_round_distributed(cfg, lay, st, oracle, engine,
+                                                inp.payment, active=act)
+            st = pay.state
+            aborted_round |= acc_write("payment", act, pay.committed,
+                                       pay.ops)
+            acc_local(inp.payment.w_id, inp.payment.d_id,
+                      pay.batch.read_slots, pay.batch.read_mask)
+
+        act = ttype == 3
+        if int(jnp.sum(act)):
+            if engine is None:
+                dl = delivery_round(cfg, lay, st, oracle, inp.delivery,
+                                    active=act)
+            else:
+                dl = delivery_round_distributed(cfg, lay, st, oracle, engine,
+                                                inp.delivery, active=act)
+            st = dl.state
+            aborted_round |= acc_write("delivery", act, dl.committed, dl.ops)
+            delivered += int(jnp.sum(dl.delivered))
+            acc_local(inp.delivery.w_id, inp.delivery.d_id,
+                      dl.batch.read_slots, dl.batch.read_mask)
+
+        # ---- read-only transactions: snapshot reads, never abort ---------
+        act = ttype == 2
+        n_act = int(jnp.sum(act))
+        if n_act:
+            ro = orderstatus_round(cfg, lay, st, oracle, inp.orderstatus,
+                                   engine=engine, active=act)
+            attempts["orderstatus"] += n_act
+            commits["orderstatus"] += n_act
+            acc_ops("orderstatus", ro.ops)
+            acc_local(inp.orderstatus.w_id, inp.orderstatus.d_id,
+                      ro.read_slots, ro.read_mask)
+
+        act = ttype == 4
+        n_act = int(jnp.sum(act))
+        if n_act:
+            sl = stocklevel_round(cfg, lay, st, oracle, inp.stocklevel,
+                                  engine=engine, active=act,
+                                  last_n=stock_last_n)
+            attempts["stocklevel"] += n_act
+            commits["stocklevel"] += n_act
+            acc_ops("stocklevel", sl.ops)
+            acc_local(inp.stocklevel.w_id, inp.stocklevel.d_id,
+                      sl.read_slots, sl.read_mask)
+
+        pending_type = jnp.where(aborted_round, ttype, -1)
+        pending = inp
+        if move_versions:
+            st = st._replace(nam=st.nam._replace(
+                table=mvcc.version_mover(st.nam.table)))
+
+    # the last round's aborts never re-entered a later round
+    for i, n in enumerate(names):
+        retries[n] -= int(jnp.sum(pending_type == i))
+    total_attempts = sum(attempts.values())
+    total_commits = sum(commits.values())
+    stats = MixedRunStats(
+        attempts=attempts, commits=commits, retries=retries,
+        ops={n: si.OpCounts(*ops_sum[n]) for n in names},
+        total_attempts=total_attempts, total_commits=total_commits,
+        abort_rate=1.0 - total_commits / max(1, total_attempts),
+        local_fraction=lf_local / lf_total if lf_total else float("nan"),
+        delivered=delivered)
+    return st, stats
+
+
+# extra conflict-free extend installs per COMMIT, invisible to OpCounts:
+# new-order inserts order + new-order + ~10 order-lines + index entry;
+# payment appends one history record. Read-only types insert nothing.
+# (profiles are per *attempt*, so the charge is scaled by the commit rate —
+# aborted attempts never reach the insert phase.)
+EXTRA_INSTALLS = {"neworder": 13.0, "payment": 1.0}
+READ_ONLY_TYPES = ("orderstatus", "stocklevel")
+
+
+def mixed_profiles(stats: MixedRunStats):
+    """Per-type cost-model profiles + the attempt-share-weighted mix profile
+    that feeds :func:`repro.core.netmodel.namdb_throughput` (the paper's
+    total-throughput number is over the whole mix)."""
+    per_type = {
+        n: netmodel.profile_from_ops(
+            stats.ops[n], stats.attempts[n],
+            extra_installs=EXTRA_INSTALLS.get(n, 0.0)
+            * stats.commits[n] / max(1, stats.attempts[n]),
+            read_only=n in READ_ONLY_TYPES)
+        for n in workload.TXN_TYPES}
+    total = max(1, stats.total_attempts)
+    shares = {n: stats.attempts[n] / total for n in workload.TXN_TYPES}
+    return per_type, netmodel.combine_profiles(per_type, shares)
+
+
+def neworder_share(stats: MixedRunStats) -> float:
+    """New-order commits as a fraction of total commits — the Fig. 4 split
+    (paper: 6.5M new-order out of 14.5M total)."""
+    return stats.commits["neworder"] / max(1, stats.total_commits)
+
+
 # --------------------------------------------------------------- payment ----
-def payment_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
-                  oracle: VectorOracle, inp: workload.PaymentInputs,
-                  rts_vec=None):
+class PaymentResult(NamedTuple):
+    state: TPCCState
+    committed: jnp.ndarray
+    ops: si.OpCounts
+    batch: TxnBatch
+
+
+def _payment_batch(cfg: TPCCConfig, lay: TPCCLayout,
+                   inp: workload.PaymentInputs,
+                   active: Optional[jnp.ndarray] = None) -> TxnBatch:
+    """RS=WS=3: [warehouse, district, customer] — all written."""
     T = inp.w_id.shape[0]
+    act = _active_or_ones(T, active)
     read_slots = jnp.stack(
         [w_slot(lay, inp.w_id), d_slot(lay, inp.w_id, inp.d_id),
          c_slot(lay, cfg, inp.c_w_id, inp.d_id, inp.c_id)], axis=1)
-    batch = TxnBatch(
+    mask = jnp.broadcast_to(act[:, None], (T, 3))
+    return TxnBatch(
         tid=jnp.arange(T, dtype=jnp.int32),
-        read_slots=read_slots, read_mask=jnp.ones((T, 3), bool),
+        read_slots=read_slots, read_mask=mask,
         write_ref=jnp.broadcast_to(jnp.arange(3)[None, :], (T, 3)).astype(
             jnp.int32),
-        write_mask=jnp.ones((T, 3), bool))
+        write_mask=mask)
 
-    def compute_fn(rh, rd, vec):
-        w = rd[:, 0, :].at[:, W_COL["ytd"]].add(inp.amount)
-        d = rd[:, 1, :].at[:, D_COL["ytd"]].add(inp.amount)
-        c = rd[:, 2, :]
-        c = c.at[:, C_COL["balance"]].add(-inp.amount)
-        c = c.at[:, C_COL["ytd_payment"]].add(inp.amount)
-        c = c.at[:, C_COL["payment_cnt"]].add(1)
-        return jnp.stack([w, d, c], axis=1)
 
-    out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
-                       compute_fn, rts_vec=rts_vec)
-    tbl = out.table
-    # history insert (thread-private extend)
+def _payment_new_data(rd, inp: workload.PaymentInputs):
+    """The payment write-set: w/d ytd += amount, debit the customer."""
+    w = rd[:, 0, :].at[:, W_COL["ytd"]].add(inp.amount)
+    d = rd[:, 1, :].at[:, D_COL["ytd"]].add(inp.amount)
+    c = rd[:, 2, :]
+    c = c.at[:, C_COL["balance"]].add(-inp.amount)
+    c = c.at[:, C_COL["ytd_payment"]].add(inp.amount)
+    c = c.at[:, C_COL["payment_cnt"]].add(1)
+    return jnp.stack([w, d, c], axis=1)
+
+
+def _payment_insert(cfg, lay, st: TPCCState, oracle, tbl, vec, committed,
+                    inp: workload.PaymentInputs):
+    """History insert into the thread-private extend (shared verbatim by the
+    single-shard and the distributed payment paths)."""
+    T = inp.w_id.shape[0]
     tids = jnp.arange(T, dtype=jnp.int32)
     slot_ids = oracle.slot_of_thread(tids)
-    cts = out.oracle_state.vec[slot_ids]
+    cts = vec[slot_ids]
     cur = st.hist_cursor
     local = jnp.clip(cur, 0, cfg.orders_per_thread - 1)
     hslot = h_slot_ext(lay, cfg, tids, local)
-    can = out.committed & (cur < cfg.orders_per_thread)
+    can = committed & (cur < cfg.orders_per_thread)
     hdata = jnp.zeros((T, WIDTH), jnp.int32)
     hdata = hdata.at[:, H_COL["amount"]].set(inp.amount)
     hdata = hdata.at[:, H_COL["c_id"]].set(inp.c_id)
     hdata = hdata.at[:, H_COL["w_id"]].set(inp.w_id)
     tbl = _insert_install(tbl, hslot, slot_ids, cts, hdata, can)
+    return tbl, cur + can.astype(jnp.int32)
+
+
+def payment_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                  oracle: VectorOracle, inp: workload.PaymentInputs,
+                  rts_vec=None, active=None) -> PaymentResult:
+    """One vectorized round of payment transactions (single-shard path)."""
+    batch = _payment_batch(cfg, lay, inp, active)
+    out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
+                       lambda rh, rd, vec: _payment_new_data(rd, inp),
+                       rts_vec=rts_vec, active=active)
+    tbl, hist_cursor = _payment_insert(cfg, lay, st, oracle, out.table,
+                                       out.oracle_state.vec, out.committed,
+                                       inp)
     nam = st.nam._replace(table=tbl, oracle_state=out.oracle_state)
-    new_st = TPCCState(nam=nam, order_index=st.order_index,
-                       hist_cursor=cur + can.astype(jnp.int32))
-    return new_st, out.committed, out.ops
+    return PaymentResult(
+        state=TPCCState(nam=nam, order_index=st.order_index,
+                        hist_cursor=hist_cursor),
+        committed=out.committed, ops=out.ops, batch=batch)
+
+
+def payment_round_distributed(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                              oracle: VectorOracle, engine,
+                              inp: workload.PaymentInputs,
+                              active=None) -> PaymentResult:
+    """Payment through :func:`store.distributed_round` on the mesh —
+    bit-identical to :func:`payment_round`."""
+    batch = _payment_batch(cfg, lay, inp, active)
+    tbl, vec, out = engine.payment_fn(st.nam.table, st.nam.oracle_state.vec,
+                                      batch, inp, active)
+    ops = _dist_ops(oracle, batch, out, tbl, active)
+    tbl, hist_cursor = _payment_insert(cfg, lay, st, oracle, tbl, vec,
+                                       out.committed, inp)
+    nam = st.nam._replace(table=tbl, oracle_state=VectorState(vec=vec))
+    return PaymentResult(
+        state=TPCCState(nam=nam, order_index=st.order_index,
+                        hist_cursor=hist_cursor),
+        committed=out.committed, ops=ops, batch=batch)
 
 
 # ----------------------------------------------------- read-only queries ----
+def _latest_order_of(idx: ri.RangeIndex, w_id, d_id):
+    """Latest order slot of (w, d) via the secondary index, with the
+    key-ownership check: ``lookup_max_below`` returns the globally largest
+    key below the bound, so a district with no orders would otherwise
+    silently surface *another* district's latest order. Returns
+    (oslot, found) where ``found`` is trustworthy."""
+    d_key = (jnp.asarray(w_id) * DISTRICTS + jnp.asarray(d_id)) \
+        .astype(jnp.uint32)
+    hi = (d_key + jnp.uint32(1)) * jnp.uint32(MAX_O_PER_DISTRICT)
+    k, oslot, idx_found = ri.lookup_max_below(idx, jnp.atleast_1d(hi))
+    found = idx_found & (k // jnp.uint32(MAX_O_PER_DISTRICT)
+                         == jnp.atleast_1d(d_key))
+    return oslot, found
+
+
 def orderstatus(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                 oracle: VectorOracle, w_id, d_id, c_id):
     """Read-only: customer + their latest order + its order lines.
@@ -642,12 +1038,119 @@ def orderstatus(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     vec = oracle.read(st.nam.oracle_state)
     csl = c_slot(lay, cfg, w_id, d_id, c_id)
     cust = mvcc.read_visible(st.nam.table, jnp.atleast_1d(csl), vec)
-    hi = order_key(w_id, d_id, jnp.asarray(MAX_O_PER_DISTRICT - 1))
-    k, oslot, found = ri.lookup_max_below(st.order_index,
-                                          jnp.atleast_1d(hi))
+    oslot, found = _latest_order_of(st.order_index, w_id, d_id)
     ordr = mvcc.read_visible(st.nam.table,
                              jnp.where(found, oslot, 0), vec)
     return cust, ordr, found
+
+
+class ReadOnlyRoundResult(NamedTuple):
+    """One vectorized round of a read-only transaction type.
+
+    Read-only transactions never validate (§1.2): the round is snapshot
+    reads only — but those reads hit the (possibly sharded) record pool and
+    are op-counted, so the mixed bench charges them to the cost model.
+    ``result`` is per-transaction: the latest-order payload (orderstatus) or
+    the low-stock count (stocklevel). ``read_slots``/``read_mask`` feed the
+    locality measurement like a write transaction's batch would."""
+    result: jnp.ndarray
+    found: jnp.ndarray          # bool [T]
+    ops: si.OpCounts
+    read_slots: jnp.ndarray
+    read_mask: jnp.ndarray
+
+
+def _snapshot_read(st: TPCCState, engine, vec, slots, mask):
+    """Visible reads of ``slots`` [T, A] — through the sharded pool when an
+    engine is given, plain single-pool reads otherwise. Returns
+    (data [T,A,W], found [T,A], from_current [T,A])."""
+    T, A = slots.shape
+    if engine is not None:
+        out = engine.readonly_fn(st.nam.table, st.nam.oracle_state.vec,
+                                 slots, mask)
+        return out.read_data, out.found, out.from_current
+    vr = mvcc.read_visible(st.nam.table, slots.reshape(-1), vec)
+    W = st.nam.table.payload_width
+    return (vr.data.reshape(T, A, W), vr.found.reshape(T, A),
+            vr.from_current.reshape(T, A))
+
+
+def orderstatus_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                      oracle: VectorOracle, inp: workload.OrderStatusInputs,
+                      *, engine=None, active=None) -> ReadOnlyRoundResult:
+    """Vectorized order-status: customer + the district's latest order + its
+    order lines (a dependent read — the line count comes out of the order
+    payload), every read hitting the pool and op-counted."""
+    T = inp.w_id.shape[0]
+    act = _active_or_ones(T, active)
+    vec = oracle.read(st.nam.oracle_state)
+    csl = c_slot(lay, cfg, inp.w_id, inp.d_id, inp.c_id)
+    oslot, found = _latest_order_of(st.order_index, inp.w_id, inp.d_id)
+    found = found & act
+    slots = jnp.stack([csl, jnp.where(found, oslot, 0)], axis=1)
+    mask = jnp.stack([act, found], axis=1)
+    data, _, fcur = _snapshot_read(st, engine, vec, slots, mask)
+    order = data[:, 1, :]
+    safe_o = o_slot_ext(lay, cfg, jnp.int32(0), jnp.int32(0))
+    olslot = ol_slots_of_order(lay, cfg, jnp.where(found, oslot, safe_o))[
+        :, None] + jnp.arange(MAX_OL)
+    line_mask = (jnp.arange(MAX_OL)[None, :]
+                 < order[:, O_COL["ol_cnt"], None]) & found[:, None]
+    _, _, ol_cur = _snapshot_read(st, engine, vec, olslot, line_mask)
+    slots = jnp.concatenate([slots, olslot], axis=1)
+    mask = jnp.concatenate([mask, line_mask], axis=1)
+    fcur = jnp.concatenate([fcur, ol_cur], axis=1)
+    ops = si.count_readonly_ops(oracle, mask, fcur,
+                                jnp.sum(act.astype(jnp.int32)),
+                                st.nam.table.payload_width)
+    return ReadOnlyRoundResult(result=order, found=found, ops=ops,
+                               read_slots=slots, read_mask=mask)
+
+
+def stocklevel_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                     oracle: VectorOracle, inp: workload.StockLevelInputs,
+                     *, engine=None, active=None,
+                     last_n: int = 8) -> ReadOnlyRoundResult:
+    """Vectorized stock-level: distinct items with low stock among the last
+    ``last_n`` orders' lines of (w, d) — a dependent-read chain (district →
+    index scan → order lines → stocks), every record read hitting the pool.
+    """
+    T = inp.w_id.shape[0]
+    act = _active_or_ones(T, active)
+    vec = oracle.read(st.nam.oracle_state)
+    dsl = d_slot(lay, inp.w_id, inp.d_id)
+    ddata, _, dcur = _snapshot_read(st, engine, vec, dsl[:, None],
+                                    act[:, None])
+    next_o = ddata[:, 0, D_COL["next_o_id"]]
+    lo = order_key(inp.w_id, inp.d_id, jnp.maximum(next_o - last_n, 0))
+    hi = order_key(inp.w_id, inp.d_id, next_o)
+    k, oslots, _ = ri.range_scan(st.order_index, lo, hi, max_results=last_n)
+    valid = (k != ri.SENTINEL) & (oslots >= 0) & act[:, None]
+    safe_o = o_slot_ext(lay, cfg, jnp.int32(0), jnp.int32(0))
+    oslots = jnp.where(valid, oslots, safe_o)
+    ol = (ol_slots_of_order(lay, cfg, oslots.reshape(-1))[:, None]
+          + jnp.arange(MAX_OL)).reshape(T, last_n * MAX_OL)
+    ol_mask = jnp.repeat(valid, MAX_OL, axis=1)
+    ol_data, ol_found, ol_cur = _snapshot_read(st, engine, vec, ol, ol_mask)
+    ol_ok = ol_found & ol_mask
+    items = ol_data[:, :, OL_COL["i_id"]]
+    ssl = s_slot(lay, cfg, jnp.broadcast_to(inp.w_id[:, None], items.shape),
+                 jnp.where(ol_ok, items, 0))
+    s_data, s_found, s_cur = _snapshot_read(st, engine, vec, ssl, ol_ok)
+    low = ol_ok & s_found \
+        & (s_data[:, :, S_COL["quantity"]] < inp.threshold[:, None])
+    marked = jnp.zeros((T, cfg.n_items), jnp.int32).at[
+        jnp.arange(T)[:, None], jnp.where(low, items, cfg.n_items)].max(
+        1, mode="drop")
+    counts = jnp.sum(marked, axis=1)
+    mask = jnp.concatenate([act[:, None], ol_mask, ol_ok], axis=1)
+    fcur = jnp.concatenate([dcur, ol_cur, s_cur], axis=1)
+    slots = jnp.concatenate([dsl[:, None], ol, ssl], axis=1)
+    ops = si.count_readonly_ops(oracle, mask, fcur,
+                                jnp.sum(act.astype(jnp.int32)),
+                                st.nam.table.payload_width)
+    return ReadOnlyRoundResult(result=counts, found=act, ops=ops,
+                               read_slots=slots, read_mask=mask)
 
 
 def stocklevel(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
@@ -683,54 +1186,130 @@ def stocklevel(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
 
 
 # -------------------------------------------------------------- delivery ----
-def delivery_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
-                   oracle: VectorOracle, w_id, d_id, carrier, round_no=0,
-                   rts_vec=None):
-    """Deliver the oldest undelivered order of (w,d): bump the district's
-    delivery cursor, stamp the order's carrier, credit the customer.
+class DeliveryResult(NamedTuple):
+    state: TPCCState
+    committed: jnp.ndarray      # bool [T] — txn outcome (vacuous if no order)
+    delivered: jnp.ndarray      # bool [T] — committed AND an order was found
+    ops: si.OpCounts
+    batch: TxnBatch
 
-    Dependent read (district → order slot) costs an extra round trip: a
-    snapshot pre-read locates the order, then the SI round validates the
-    district version — any race re-runs via abort, keeping atomicity.
-    """
-    T = w_id.shape[0]
-    vec = oracle.read(st.nam.oracle_state) if rts_vec is None else rts_vec
-    dsl = d_slot(lay, w_id, d_id)
+
+class DeliveryAux(NamedTuple):
+    """Per-round aux threaded to the delivery compute_fn (both paths)."""
+    carrier: jnp.ndarray     # int32 [T]
+    line_mask: jnp.ndarray   # bool [T, MAX_OL] — the order's real lines
+
+
+def _delivery_prepare(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                      vec, inp: workload.DeliveryInputs, active=None):
+    """Locate the oldest undelivered order of (w, d) with snapshot pre-reads
+    (district cursor → index → order payload), then build the SI batch.
+
+    Read-set (RS=3+15): [district, order, customer, order-lines]; write-set
+    (WS=3): district cursor, order carrier, customer balance. The order
+    lines ride in the read-set so the customer credit is the *real* sum of
+    the order's line amounts, not a placeholder."""
+    T = inp.w_id.shape[0]
+    act = _active_or_ones(T, active)
+    dsl = d_slot(lay, inp.w_id, inp.d_id)
     pre = mvcc.read_visible(st.nam.table, dsl, vec)
     deliv_o = pre.data[:, D_COL["next_deliv"]]
     has_order = deliv_o < pre.data[:, D_COL["next_o_id"]]
-    okey = order_key(w_id, d_id, deliv_o)
+    okey = order_key(inp.w_id, inp.d_id, deliv_o)
     k, oslot, idx_found = ri.lookup_max_below(st.order_index,
                                               okey + jnp.uint32(1))
-    found = idx_found & (k == okey) & has_order
+    found = idx_found & (k == okey) & has_order & act
     oslot = jnp.where(found, oslot, o_slot_ext(lay, cfg, jnp.int32(0),
                                                jnp.int32(0)))
     ordr = mvcc.read_visible(st.nam.table, oslot, vec)
     c_id = ordr.data[:, O_COL["c_id"]]
-    csl = c_slot(lay, cfg, w_id, d_id, jnp.where(found, c_id, 0))
+    ol_cnt = ordr.data[:, O_COL["ol_cnt"]]
+    csl = c_slot(lay, cfg, inp.w_id, inp.d_id, jnp.where(found, c_id, 0))
+    olslot = ol_slots_of_order(lay, cfg, oslot)[:, None] + jnp.arange(MAX_OL)
+    line_mask = (jnp.arange(MAX_OL)[None, :] < ol_cnt[:, None]) \
+        & found[:, None]
 
-    read_slots = jnp.stack([dsl, oslot, csl], axis=1)
-    write_mask = jnp.stack([found, found, found], axis=1)
+    read_slots = jnp.concatenate(
+        [dsl[:, None], oslot[:, None], csl[:, None], olslot], axis=1)
+    read_mask = jnp.concatenate(
+        [act[:, None], found[:, None], found[:, None], line_mask], axis=1)
     batch = TxnBatch(
         tid=jnp.arange(T, dtype=jnp.int32),
-        read_slots=read_slots,
-        read_mask=jnp.concatenate(
-            [jnp.ones((T, 1), bool), found[:, None], found[:, None]], 1),
+        read_slots=read_slots, read_mask=read_mask,
         write_ref=jnp.broadcast_to(jnp.arange(3)[None, :], (T, 3)).astype(
             jnp.int32),
-        write_mask=write_mask)
+        write_mask=jnp.stack([found, found, found], axis=1))
+    aux = DeliveryAux(carrier=jnp.broadcast_to(
+        jnp.asarray(inp.carrier, jnp.int32), (T,)), line_mask=line_mask)
+    return batch, aux, found
 
-    def compute_fn(rh, rd, v):
-        d = rd[:, 0, :].at[:, D_COL["next_deliv"]].add(1)
-        o = rd[:, 1, :].at[:, O_COL["carrier"]].set(carrier)
-        c = rd[:, 2, :]
-        c = c.at[:, C_COL["balance"]].add(100)  # simplified OL amount credit
-        c = c.at[:, C_COL["delivery_cnt"]].add(1)
-        return jnp.stack([d, o, c], axis=1)
 
+def _delivery_new_data(rd, aux: DeliveryAux):
+    """The delivery write-set: advance the district's delivery cursor, stamp
+    the carrier, credit the customer with the order's total line amount."""
+    d = rd[:, 0, :].at[:, D_COL["next_deliv"]].add(1)
+    o = rd[:, 1, :].at[:, O_COL["carrier"]].set(aux.carrier)
+    amount = jnp.sum(
+        jnp.where(aux.line_mask, rd[:, 3:, OL_COL["amount"]], 0), axis=1)
+    c = rd[:, 2, :]
+    c = c.at[:, C_COL["balance"]].add(amount)
+    c = c.at[:, C_COL["delivery_cnt"]].add(1)
+    return jnp.stack([d, o, c], axis=1)
+
+
+def _delivery_preread_ops(ops: si.OpCounts, n_active, payload_width):
+    """Charge the two dependent snapshot pre-reads (district cursor, order
+    payload) that locate the order before the SI round — identical in the
+    single-shard and distributed paths."""
+    rec_bytes = 8 + 4 * payload_width
+    n_pre = 2 * n_active
+    return ops._replace(record_reads=ops.record_reads + n_pre,
+                        bytes_moved=ops.bytes_moved + n_pre * rec_bytes)
+
+
+def delivery_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                   oracle: VectorOracle, inp: workload.DeliveryInputs,
+                   rts_vec=None, active=None) -> DeliveryResult:
+    """Deliver the oldest undelivered order of (w,d): bump the district's
+    delivery cursor, stamp the order's carrier, credit the customer with the
+    sum of the order's line amounts.
+
+    Dependent read (district → order slot) costs extra round trips: snapshot
+    pre-reads locate the order, then the SI round re-reads and validates the
+    district version — any race re-runs via abort, keeping atomicity.
+    """
+    vec = oracle.read(st.nam.oracle_state) if rts_vec is None else rts_vec
+    batch, aux, found = _delivery_prepare(cfg, lay, st, vec, inp, active)
     out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
-                       compute_fn, rts_vec=rts_vec)
+                       lambda rh, rd, v: _delivery_new_data(rd, aux),
+                       rts_vec=rts_vec, active=active)
     nam = st.nam._replace(table=out.table, oracle_state=out.oracle_state)
-    return (TPCCState(nam=nam, order_index=st.order_index,
-                      hist_cursor=st.hist_cursor),
-            out.committed & found, out.ops)
+    ops = _delivery_preread_ops(out.ops, _n_active(batch, active),
+                                out.table.payload_width)
+    return DeliveryResult(
+        state=TPCCState(nam=nam, order_index=st.order_index,
+                        hist_cursor=st.hist_cursor),
+        committed=out.committed, delivered=out.committed & found, ops=ops,
+        batch=batch)
+
+
+def delivery_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
+                               st: TPCCState, oracle: VectorOracle, engine,
+                               inp: workload.DeliveryInputs,
+                               active=None) -> DeliveryResult:
+    """Delivery through :func:`store.distributed_round` on the mesh —
+    bit-identical to :func:`delivery_round` (the pre-reads gather from the
+    sharded pool; the SI round runs shard-side)."""
+    vec = oracle.read(st.nam.oracle_state)
+    batch, aux, found = _delivery_prepare(cfg, lay, st, vec, inp, active)
+    tbl, nvec, out = engine.delivery_fn(st.nam.table, st.nam.oracle_state.vec,
+                                        batch, aux, active)
+    ops = _delivery_preread_ops(_dist_ops(oracle, batch, out, tbl, active),
+                                _n_active(batch, active),
+                                tbl.payload_width)
+    nam = st.nam._replace(table=tbl, oracle_state=VectorState(vec=nvec))
+    return DeliveryResult(
+        state=TPCCState(nam=nam, order_index=st.order_index,
+                        hist_cursor=st.hist_cursor),
+        committed=out.committed, delivered=out.committed & found, ops=ops,
+        batch=batch)

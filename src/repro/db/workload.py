@@ -17,6 +17,27 @@ import jax.numpy as jnp
 MIX = {"neworder": 0.45, "payment": 0.43, "orderstatus": 0.04,
        "delivery": 0.04, "stocklevel": 0.04}
 
+# canonical type order: the integer id of a transaction type everywhere
+# (mix sampler output, per-type retry queues, per-type stats)
+TXN_TYPES = ("neworder", "payment", "orderstatus", "delivery", "stocklevel")
+
+
+def mix_logits(mix=None) -> jnp.ndarray:
+    """Log-probabilities over TXN_TYPES for the given mix (default MIX)."""
+    mix = MIX if mix is None else mix
+    p = jnp.asarray([float(mix.get(t, 0.0)) for t in TXN_TYPES], jnp.float32)
+    return jnp.log(jnp.maximum(p, 1e-30))
+
+
+def sample_mix(key, n_txns: int, mix=None) -> jnp.ndarray:
+    """Sample per-thread transaction types, int32 [n_txns] into TXN_TYPES.
+
+    One round's composition: each execution thread draws its next
+    transaction type from the mix — the 45/43/4/4/4 split holds in
+    expectation per round, exactly the closed-loop terminal behaviour."""
+    return jax.random.categorical(key, mix_logits(mix),
+                                  shape=(n_txns,)).astype(jnp.int32)
+
 
 def zipf_logits(n_items: int, alpha: Optional[float]) -> jnp.ndarray:
     """Log-probabilities of item popularity (rank-ordered)."""
@@ -106,3 +127,92 @@ def gen_payment(key, n_txns: int, n_warehouses: int,
     amount = jax.random.randint(ks[4], (n_txns,), 100, 500000)
     return PaymentInputs(w_id=w_id.astype(jnp.int32), d_id=d_id, c_id=c_id,
                          c_w_id=c_w_id.astype(jnp.int32), amount=amount)
+
+
+class OrderStatusInputs(NamedTuple):
+    w_id: jnp.ndarray
+    d_id: jnp.ndarray
+    c_id: jnp.ndarray
+
+
+def gen_orderstatus(key, n_txns: int, n_warehouses: int,
+                    customers_per_district: int,
+                    home_w: Optional[jnp.ndarray] = None) -> OrderStatusInputs:
+    ks = jax.random.split(key, 3)
+    if home_w is None:
+        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
+    else:
+        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
+    return OrderStatusInputs(
+        w_id=w_id.astype(jnp.int32),
+        d_id=jax.random.randint(ks[1], (n_txns,), 0, 10),
+        c_id=jax.random.randint(ks[2], (n_txns,), 0, customers_per_district))
+
+
+class DeliveryInputs(NamedTuple):
+    w_id: jnp.ndarray
+    d_id: jnp.ndarray
+    carrier: jnp.ndarray     # int32 [T] carrier id 1..10
+
+
+def gen_delivery(key, n_txns: int, n_warehouses: int,
+                 home_w: Optional[jnp.ndarray] = None) -> DeliveryInputs:
+    ks = jax.random.split(key, 3)
+    if home_w is None:
+        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
+    else:
+        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
+    return DeliveryInputs(
+        w_id=w_id.astype(jnp.int32),
+        d_id=jax.random.randint(ks[1], (n_txns,), 0, 10),
+        carrier=jax.random.randint(ks[2], (n_txns,), 1, 11))
+
+
+class StockLevelInputs(NamedTuple):
+    w_id: jnp.ndarray
+    d_id: jnp.ndarray
+    threshold: jnp.ndarray   # int32 [T] low-stock threshold 10..20 (spec)
+
+
+def gen_stocklevel(key, n_txns: int, n_warehouses: int,
+                   home_w: Optional[jnp.ndarray] = None) -> StockLevelInputs:
+    ks = jax.random.split(key, 3)
+    if home_w is None:
+        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
+    else:
+        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
+    return StockLevelInputs(
+        w_id=w_id.astype(jnp.int32),
+        d_id=jax.random.randint(ks[1], (n_txns,), 0, 10),
+        threshold=jax.random.randint(ks[2], (n_txns,), 10, 21))
+
+
+class MixedInputs(NamedTuple):
+    """One round's full five-type workload: per-thread types + per-type
+    inputs generated for every thread (only the threads whose sampled type
+    matches actually run them — the vectorized SIMT rendering of the mix)."""
+    txn_type: jnp.ndarray    # int32 [T] — index into TXN_TYPES
+    neworder: NewOrderInputs
+    payment: PaymentInputs
+    orderstatus: OrderStatusInputs
+    delivery: DeliveryInputs
+    stocklevel: StockLevelInputs
+
+
+def gen_mixed(key, n_txns: int, n_warehouses: int, n_items: int,
+              customers_per_district: int, home_w: Optional[jnp.ndarray],
+              dist_degree: float, item_logits: jnp.ndarray,
+              mix=None) -> MixedInputs:
+    """Sample one round of the full TPC-C mix (45/43/4/4/4 by default)."""
+    kt, kn, kp, ko, kd, ks_ = jax.random.split(key, 6)
+    return MixedInputs(
+        txn_type=sample_mix(kt, n_txns, mix),
+        neworder=gen_neworder(kn, n_txns, n_warehouses, n_items,
+                              customers_per_district, home_w, dist_degree,
+                              item_logits),
+        payment=gen_payment(kp, n_txns, n_warehouses, customers_per_district,
+                            home_w),
+        orderstatus=gen_orderstatus(ko, n_txns, n_warehouses,
+                                    customers_per_district, home_w),
+        delivery=gen_delivery(kd, n_txns, n_warehouses, home_w),
+        stocklevel=gen_stocklevel(ks_, n_txns, n_warehouses, home_w))

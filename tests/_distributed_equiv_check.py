@@ -1,12 +1,17 @@
 """Subprocess body for test_distributed_equiv: 8 forced host devices.
 
-Runs the same TPC-C new-order workload (same seeds, §7.4 retry queue)
-twice — through the single-shard ``si.run_round`` reference and through
+Runs the same TPC-C workloads (same seeds, §7.4 retry queues) twice —
+through the single-shard ``si.run_round`` reference and through
 ``store.distributed_round`` on an 8-way 'mem' mesh with the timestamp
 vector range-partitioned (PartitionedVectorOracle deployment) — and asserts
 the sharded path is bit-identical: commit decisions, installed versions
 (headers and payloads, current + old + overflow), oracle state, extend
-cursors and the order index. Both pool layouts are exercised.
+cursors and the order index. Covered workloads, in both pool layouts:
+
+* new-order alone (the original retry-queue run),
+* payment alone and delivery alone (per-round drivers),
+* the full five-transaction mix through ``run_mixed_rounds`` — per-type
+  commit/abort counts and final state must match the single-shard reference.
 """
 import os
 
@@ -18,63 +23,135 @@ import numpy as np
 
 from repro.core import locality
 from repro.core.tsoracle import PartitionedVectorOracle, VectorOracle
-from repro.db import tpcc
+from repro.db import tpcc, workload
 
 CFG = dict(n_warehouses=8, customers_per_district=8, n_items=64,
            n_threads=16, orders_per_thread=16, dist_degree=30.0)
 ROUNDS = 4
 
 
-def run_layout(layout: str):
-    cfg = tpcc.TPCCConfig(layout=layout, **CFG)
-    home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
-
-    # ---- single-shard reference (plain VectorOracle) ---------------------
-    oracle_s = VectorOracle(cfg.n_threads)
-    lay, st_s = tpcc.init_tpcc(cfg, oracle_s, jax.random.PRNGKey(0))
-    st_s, stats_s = tpcc.run_neworder_rounds(
-        cfg, lay, st_s, oracle_s, jax.random.PRNGKey(1), ROUNDS, home_w=home)
-
-    # ---- 8-memory-server mesh, partitioned timestamp vector --------------
-    oracle_d = PartitionedVectorOracle(cfg.n_threads, n_parts=8)
-    lay_d, st_d = tpcc.init_tpcc(cfg, oracle_d, jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((8,), ("mem",))
-    engine = tpcc.make_distributed_engine(cfg, lay_d, mesh, "mem", oracle_d,
-                                          shard_vector=True)
-    st_d = tpcc.distribute_state(engine, st_d)
-    st_d, stats_d = tpcc.run_neworder_rounds(
-        cfg, lay_d, st_d, oracle_d, jax.random.PRNGKey(1), ROUNDS,
-        home_w=home, engine=engine)
-
-    # ---- bit-identical everywhere ----------------------------------------
-    np.testing.assert_array_equal(np.asarray(stats_d.committed),
-                                  np.asarray(stats_s.committed))
-    assert stats_d.commits == stats_s.commits and stats_s.commits > 0
+def assert_same_state(layout, tag, lay, st_d, st_s):
     R = lay.catalog.total_records
     for field in tpcc.mvcc.VersionedTable._fields:
         a = np.asarray(jax.device_get(getattr(st_d.nam.table, field)))[:R]
         b = np.asarray(getattr(st_s.nam.table, field))[:R]
-        np.testing.assert_array_equal(a, b, err_msg=f"{layout}:{field}")
+        np.testing.assert_array_equal(a, b, err_msg=f"{layout}:{tag}:{field}")
     np.testing.assert_array_equal(
         np.asarray(jax.device_get(st_d.nam.oracle_state.vec)),
-        np.asarray(st_s.nam.oracle_state.vec))
+        np.asarray(st_s.nam.oracle_state.vec), err_msg=f"{layout}:{tag}:vec")
     np.testing.assert_array_equal(np.asarray(st_d.nam.extends.cursor),
                                   np.asarray(st_s.nam.extends.cursor))
+    np.testing.assert_array_equal(np.asarray(st_d.hist_cursor),
+                                  np.asarray(st_s.hist_cursor))
     for leaf_d, leaf_s in zip(jax.tree.leaves(st_d.order_index),
                               jax.tree.leaves(st_s.order_index)):
         np.testing.assert_array_equal(np.asarray(jax.device_get(leaf_d)),
                                       np.asarray(leaf_s))
+
+
+def make_pair(cfg, mesh, *, seed=0):
+    """(single-shard ref, sharded deployment) freshly loaded from one seed."""
+    oracle_s = VectorOracle(cfg.n_threads)
+    lay, st_s = tpcc.init_tpcc(cfg, oracle_s, jax.random.PRNGKey(seed))
+    oracle_d = PartitionedVectorOracle(cfg.n_threads, n_parts=8)
+    lay_d, st_d = tpcc.init_tpcc(cfg, oracle_d, jax.random.PRNGKey(seed))
+    engine = tpcc.make_mixed_engine(cfg, lay_d, mesh, "mem", oracle_d,
+                                    shard_vector=True)
+    st_d = tpcc.distribute_state(engine, st_d)
+    return lay, (oracle_s, st_s), (oracle_d, st_d, engine)
+
+
+def run_neworder(layout: str, mesh):
+    cfg = tpcc.TPCCConfig(layout=layout, **CFG)
+    home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
+    lay, (oracle_s, st_s), (oracle_d, st_d, engine) = make_pair(cfg, mesh)
+    st_s, stats_s = tpcc.run_neworder_rounds(
+        cfg, lay, st_s, oracle_s, jax.random.PRNGKey(1), ROUNDS, home_w=home)
+    st_d, stats_d = tpcc.run_neworder_rounds(
+        cfg, lay, st_d, oracle_d, jax.random.PRNGKey(1), ROUNDS,
+        home_w=home, engine=engine)
+    np.testing.assert_array_equal(np.asarray(stats_d.committed),
+                                  np.asarray(stats_s.committed))
+    assert stats_d.commits == stats_s.commits and stats_s.commits > 0
+    assert_same_state(layout, "neworder", lay, st_d, st_s)
     # the ops profiles feeding netmodel agree too
     for f, a, b in zip(tpcc.si.OpCounts._fields, stats_d.ops, stats_s.ops):
         assert float(a) == float(b), (layout, f, float(a), float(b))
-    print(f"{layout}: {stats_s.commits}/{stats_s.attempts} committed, "
-          f"abort {stats_s.abort_rate:.3f} — sharded == single-shard")
+    print(f"{layout}: neworder {stats_s.commits}/{stats_s.attempts} "
+          f"committed, abort {stats_s.abort_rate:.3f} — sharded == single")
+    return cfg, lay, (oracle_s, st_s), (oracle_d, st_d, engine)
+
+
+def run_payment_delivery(layout, cfg, lay, single, dist):
+    """Payment rounds then delivery rounds on the post-neworder states (so
+    deliveries find real undelivered orders) — bit-identical per round."""
+    (oracle_s, st_s), (oracle_d, st_d, engine) = single, dist
+    key = jax.random.PRNGKey(5)
+    for r in range(3):
+        key, kp, kd = jax.random.split(key, 3)
+        pinp = workload.gen_payment(kp, cfg.n_threads, cfg.n_warehouses,
+                                    cfg.customers_per_district)
+        ps = tpcc.payment_round(cfg, lay, st_s, oracle_s, pinp)
+        pd = tpcc.payment_round_distributed(cfg, lay, st_d, oracle_d,
+                                            engine, pinp)
+        st_s, st_d = ps.state, pd.state
+        np.testing.assert_array_equal(np.asarray(pd.committed),
+                                      np.asarray(ps.committed))
+        for f, a, b in zip(tpcc.si.OpCounts._fields, pd.ops, ps.ops):
+            assert float(a) == float(b), (layout, "payment", f)
+        dinp = workload.gen_delivery(kd, cfg.n_threads, cfg.n_warehouses)
+        ds = tpcc.delivery_round(cfg, lay, st_s, oracle_s, dinp)
+        dd = tpcc.delivery_round_distributed(cfg, lay, st_d, oracle_d,
+                                             engine, dinp)
+        st_s, st_d = ds.state, dd.state
+        np.testing.assert_array_equal(np.asarray(dd.committed),
+                                      np.asarray(ds.committed))
+        np.testing.assert_array_equal(np.asarray(dd.delivered),
+                                      np.asarray(ds.delivered))
+        for f, a, b in zip(tpcc.si.OpCounts._fields, dd.ops, ds.ops):
+            assert float(a) == float(b), (layout, "delivery", f)
+    assert int(np.asarray(ps.committed).sum()) > 0
+    assert int(np.asarray(ds.delivered).sum()) > 0, \
+        "no delivery landed — equivalence would be vacuous"
+    assert_same_state(layout, "payment+delivery", lay, st_d, st_s)
+    print(f"{layout}: payment+delivery — sharded == single")
+
+
+def run_mixed(layout: str, mesh):
+    """Full five-transaction mix: per-type commit/abort counts and final
+    state must match the single-shard reference exactly."""
+    cfg = tpcc.TPCCConfig(layout=layout, **CFG)
+    home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
+    lay, (oracle_s, st_s), (oracle_d, st_d, engine) = make_pair(cfg, mesh)
+    st_s, ms = tpcc.run_mixed_rounds(cfg, lay, st_s, oracle_s,
+                                     jax.random.PRNGKey(9), 3, home_w=home)
+    st_d, md = tpcc.run_mixed_rounds(cfg, lay, st_d, oracle_d,
+                                     jax.random.PRNGKey(9), 3, home_w=home,
+                                     engine=engine)
+    for name in workload.TXN_TYPES:
+        # the run must actually exercise every type through the mesh
+        # executors, or the per-type equivalence below is vacuous
+        assert ms.attempts[name] > 0, (layout, name, "never sampled")
+        assert ms.attempts[name] == md.attempts[name], (layout, name)
+        assert ms.commits[name] == md.commits[name], (layout, name)
+        assert ms.retries[name] == md.retries[name], (layout, name)
+        for f, a, b in zip(tpcc.si.OpCounts._fields, md.ops[name],
+                           ms.ops[name]):
+            assert float(a) == float(b), (layout, name, f)
+    assert ms.delivered == md.delivered
+    assert ms.commits["neworder"] > 0 and ms.commits["payment"] > 0
+    assert_same_state(layout, "mixed", lay, st_d, st_s)
+    print(f"{layout}: mixed {ms.total_commits}/{ms.total_attempts} "
+          f"committed ({dict(ms.commits)}) — sharded == single")
 
 
 def main():
     assert len(jax.devices()) == 8, jax.devices()
-    run_layout("table_major")
-    run_layout("warehouse_major")
+    mesh = jax.make_mesh((8,), ("mem",))
+    for layout in ("table_major", "warehouse_major"):
+        cfg, lay, single, dist = run_neworder(layout, mesh)
+        run_payment_delivery(layout, cfg, lay, single, dist)
+        run_mixed(layout, mesh)
     print("DISTRIBUTED_EQUIV_OK")
 
 

@@ -2,8 +2,10 @@
 
 ``distributed_round`` on an 8-way forced-host-device mesh (record pool range-
 partitioned, timestamp vector partitioned à la PartitionedVectorOracle) runs
-the same new-order workload as ``si.run_round`` and must produce identical
-commit decisions, installed versions, oracle state and op profiles — the
+the same workloads as ``si.run_round`` — new-order alone, payment and
+delivery rounds, and the full five-transaction mix (per-type commit/abort
+counts and op profiles) — and must produce identical commit decisions,
+installed versions, oracle state and op profiles in both pool layouts: the
 distribution layer is a placement decision, not a semantics change.
 
 Runs in a subprocess so the 8 placeholder host devices never leak into this
