@@ -1,0 +1,132 @@
+"""Schema check for the sustained-execution bench artifact.
+
+CI runs ``bench_tpcc_scaling.py --sustain … --smoke`` and uploads the
+emitted ``BENCH_sustain.json``; this script pins the document's shape so the
+bench output format cannot rot silently (a field rename or a dropped
+trajectory would otherwise only surface when someone next tries to plot an
+artifact). Pure stdlib, no repo imports — it must be able to judge the
+artifact from any checkout.
+
+    python scripts/check_bench_json.py [BENCH_sustain.json]
+"""
+from __future__ import annotations
+
+import json
+import numbers
+import sys
+
+SCHEMA_VERSION = 1
+
+CONFIG_KEYS = {"rounds": int, "shards": int, "threads": int, "mode": str,
+               "gc_interval": int, "max_txn_time": int, "n_overflow": int,
+               "smoke": bool}
+WINDOW_KEYS = {"round_lo": int, "round_hi": int, "attempts": int,
+               "commits": int, "abort_rate": float,
+               "snapshot_miss_rate": float, "commits_per_round": float}
+SUMMARY_KEYS = {"attempts": int, "commits": int, "abort_rate": float,
+                "snapshot_miss_rate": float, "snapshot_misses": int,
+                "contention_aborts": int, "ovf_reads": int, "gc_sweeps": int,
+                "ovf_peak": int, "ovf_capacity": int, "ovf_bounded": bool,
+                "local_fraction": float, "wall_s": float,
+                "txn_per_s_measured": float, "modeled_total_txn_s": float}
+
+RATES = ("abort_rate", "snapshot_miss_rate")
+
+
+class SchemaError(Exception):
+    pass
+
+
+def _check_fields(obj: dict, spec: dict, where: str):
+    if not isinstance(obj, dict):
+        raise SchemaError(f"{where}: expected object, got {type(obj).__name__}")
+    for key, typ in spec.items():
+        if key not in obj:
+            raise SchemaError(f"{where}: missing key {key!r}")
+        val = obj[key]
+        # ints are acceptable where floats are declared; bool is not an int
+        ok = (isinstance(val, bool) if typ is bool else
+              isinstance(val, str) if typ is str else
+              isinstance(val, numbers.Real) and not isinstance(val, bool))
+        if not ok:
+            raise SchemaError(f"{where}.{key}: expected {typ.__name__}, "
+                              f"got {type(val).__name__} ({val!r})")
+        if typ is int and isinstance(val, float) and val != int(val):
+            raise SchemaError(f"{where}.{key}: expected integer, got {val!r}")
+    for key in (k for k in RATES if k in spec):
+        if not 0.0 <= obj[key] <= 1.0:
+            raise SchemaError(f"{where}.{key}: rate {obj[key]!r} not in [0,1]")
+
+
+def check(doc: dict):
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        raise SchemaError(f"schema_version {doc.get('schema_version')!r} != "
+                          f"{SCHEMA_VERSION}")
+    if doc.get("kind") != "tpcc_sustain":
+        raise SchemaError(f"kind {doc.get('kind')!r} != 'tpcc_sustain'")
+    _check_fields(doc.get("config"), CONFIG_KEYS, "config")
+    _check_fields(doc.get("summary"), SUMMARY_KEYS, "summary")
+
+    windows = doc.get("windows")
+    if not isinstance(windows, list) or not windows:
+        raise SchemaError("windows: expected non-empty list")
+    for i, w in enumerate(windows):
+        _check_fields(w, WINDOW_KEYS, f"windows[{i}]")
+    # windows must tile [0, rounds) contiguously — partial coverage would
+    # make trajectory plots silently lie about the run length
+    rounds = doc["config"]["rounds"]
+    lo = 0
+    for i, w in enumerate(windows):
+        if w["round_lo"] != lo or w["round_hi"] <= w["round_lo"]:
+            raise SchemaError(f"windows[{i}]: [{w['round_lo']},"
+                              f"{w['round_hi']}) does not continue at {lo}")
+        lo = w["round_hi"]
+    if lo != rounds:
+        raise SchemaError(f"windows cover [0,{lo}) but config.rounds={rounds}")
+
+    reclaim = doc.get("reclaimable")
+    if not isinstance(reclaim, list) or not reclaim:
+        raise SchemaError("reclaimable: expected non-empty list (is the GC "
+                          "thread on? gc_interval must be > 0)")
+    for i, p in enumerate(reclaim):
+        _check_fields(p, {"round": int, "fraction": float},
+                      f"reclaimable[{i}]")
+        if not 0.0 <= p["fraction"] <= 1.0:
+            raise SchemaError(f"reclaimable[{i}].fraction out of [0,1]")
+    if len(reclaim) != doc["summary"]["gc_sweeps"]:
+        raise SchemaError(f"{len(reclaim)} reclaimable points != "
+                          f"summary.gc_sweeps {doc['summary']['gc_sweeps']}")
+
+    s = doc["summary"]
+    if not s["ovf_bounded"] or s["ovf_peak"] >= s["ovf_capacity"]:
+        raise SchemaError(f"overflow ring not bounded: peak {s['ovf_peak']} "
+                          f"vs capacity {s['ovf_capacity']}")
+    if sum(w["commits"] for w in windows) != s["commits"]:
+        raise SchemaError("window commits do not sum to summary.commits")
+
+
+def main(argv):
+    path = argv[1] if len(argv) > 1 else "BENCH_sustain.json"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench_json: cannot load {path}: {e}", file=sys.stderr)
+        return 2
+    try:
+        check(doc)
+    except SchemaError as e:
+        print(f"check_bench_json: {path}: SCHEMA VIOLATION: {e}",
+              file=sys.stderr)
+        return 1
+    s = doc["summary"]
+    print(f"check_bench_json: {path} ok — {doc['config']['rounds']} rounds, "
+          f"{s['commits']}/{s['attempts']} committed, "
+          f"ovf {s['ovf_peak']}/{s['ovf_capacity']}, "
+          f"{len(doc['windows'])} windows, "
+          f"{len(doc['reclaimable'])} gc points")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

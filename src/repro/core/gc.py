@@ -14,7 +14,7 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.core import header as hdr_ops
+from repro.core import header as hdr_ops, mvcc
 from repro.core.mvcc import VersionedTable
 
 
@@ -29,8 +29,17 @@ def init_log(n_snapshots: int, n_slots: int) -> SnapshotLog:
 
 
 def take_snapshot(log: SnapshotLog, now, vec) -> SnapshotLog:
-    """Append (ring) the current T_R with its wall-clock time."""
-    pos = jnp.argmin(log.times)  # oldest / unused slot
+    """Append (ring) the current T_R with its wall-clock time.
+
+    Slot choice is explicit: an unused slot (time −1) if any remains, else
+    the slot holding the OLDEST retained snapshot. (A bare ``argmin(times)``
+    happened to do both only because −1 sorts below every valid wall-clock
+    time — the unused-first preference was a coincidence of encoding, not a
+    stated rule; spelled out it also survives clocks that start below zero.)
+    """
+    unused = log.times < 0
+    pos = jnp.where(jnp.any(unused), jnp.argmax(unused),
+                    jnp.argmin(log.times))
     return SnapshotLog(times=log.times.at[pos].set(now),
                        vecs=log.vecs.at[pos].set(vec))
 
@@ -63,8 +72,31 @@ def collect(table: VersionedTable, safe_vec) -> VersionedTable:
     return table._replace(ovf_hdr=new_hdr)
 
 
-def reclaimable_fraction(table: VersionedTable) -> jnp.ndarray:
+def gc_round(table: VersionedTable, vec, log: SnapshotLog, now,
+             max_txn_time):
+    """One step of the per-memory-server GC thread (§5.3), end to end:
+    snapshot T_R into the log, derive the safe vector, sweep the overflow
+    region, lazily truncate the marked versions.
+
+    Shared VERBATIM by the single-shard drivers
+    (:func:`repro.db.tpcc.run_neworder_rounds` et al.) and the per-shard mesh
+    sweep (:func:`repro.core.store.distributed_gc_round`, which calls this on
+    each shard's resident records with the gathered vector) — one body, so
+    the two paths cannot diverge and the bit-identical equivalence contract
+    holds through GC rounds.
+    """
+    log = take_snapshot(log, now, vec)
+    safe = safe_vector(log, now, max_txn_time)
+    table = mvcc.compact_overflow(collect(table, safe))
+    return table, log
+
+
+def reclaimable_fraction(table: VersionedTable,
+                         n_records: int | None = None) -> jnp.ndarray:
     """Telemetry: share of overflow slots whose deleted bit is set (lazy
-    truncation happens when contiguous regions free up)."""
-    d = hdr_ops.is_deleted(table.ovf_hdr)
+    truncation happens when contiguous regions free up). ``n_records``
+    restricts the count to the pool's real records (a padded+sharded table's
+    filler rows are all-deleted and would inflate the fraction)."""
+    hdrs = table.ovf_hdr if n_records is None else table.ovf_hdr[:n_records]
+    d = hdr_ops.is_deleted(hdrs)
     return jnp.mean(d.astype(jnp.float32))

@@ -11,7 +11,12 @@ slots, KO overflow slots):
   alone first to locate a version, then exactly one payload read follows).
 * ``next_write int32 [R]`` — the circular buffers' next-write counter.
 * ``ovf_hdr/ovf_data [R, KO, …]``, ``ovf_next int32 [R]`` — the overflow
-  region fed by the version-mover thread.
+  region fed by the version-mover thread. ``ovf_next`` is the ring's
+  next-write *position* (always in ``[0, KO)`` — bounded by construction);
+  under the §5.3 GC discipline (``version_mover(reuse_only=True)``) the
+  mover only ever advances into slots whose deleted bit is set, i.e. slots
+  reclaimed by :func:`repro.core.gc.collect` and lazily truncated by
+  :func:`compact_overflow`.
 
 Fixed-length payloads only, exactly as the paper's current implementation
 (§5.1 "Record Layout"); our TPC-C encodes every column into int32 words.
@@ -86,6 +91,8 @@ class VisibleRead(NamedTuple):
     data: jnp.ndarray    # int32  [Q, W]
     found: jnp.ndarray   # bool [Q] — False ⇒ snapshot too old (GC'd) → abort
     from_current: jnp.ndarray  # bool [Q] — stats: hit the in-place version
+    from_ovf: jnp.ndarray      # bool [Q] — stats: served by the overflow
+    #                            region (a GC-survivor old version)
 
 
 def read_visible(tbl: VersionedTable, slots, ts_vec) -> VisibleRead:
@@ -137,7 +144,8 @@ def read_visible(tbl: VersionedTable, slots, ts_vec) -> VisibleRead:
     data = jnp.where(cur_ok[:, None], cur_d,
                      jnp.where(any_old[:, None], old_d, ovf_d))
     found = cur_ok | any_old | any_ovf
-    return VisibleRead(hdr=hdr, data=data, found=found, from_current=cur_ok)
+    return VisibleRead(hdr=hdr, data=data, found=found, from_current=cur_ok,
+                       from_ovf=~cur_ok & ~any_old & any_ovf)
 
 
 class InstallResult(NamedTuple):
@@ -190,12 +198,25 @@ def install(tbl: VersionedTable, slots, new_hdr, new_data, mask) -> InstallResul
     )
 
 
-def version_mover(tbl: VersionedTable, budget_per_record: int = 1) -> VersionedTable:
-    """The memory-server version-mover thread (paper §5.1).
+def version_mover(tbl: VersionedTable, budget_per_record: int = 1, *,
+                  reuse_only: bool = False) -> VersionedTable:
+    """The memory-server version-mover thread (paper §5.1 + §5.3).
 
     Copies the OLDEST not-yet-moved old-buffer version of every record into
     the overflow region and sets its moved bit, freeing the slot for reuse.
     Runs continuously on memory servers; here one sweep per call.
+
+    The overflow region is a ring: insertion advances strictly one slot at a
+    time, so circular position order IS version age order (read_visible's
+    newest-first scan depends on this). ``reuse_only`` selects the §5.3
+    sustained-execution discipline: the mover advances only into slots whose
+    deleted bit is set — i.e. slots reclaimed by the GC sweep
+    (:func:`repro.core.gc.collect`) — and otherwise *stalls*, which
+    backpressures :func:`install` into abort-and-retry instead of silently
+    overwriting a version some admissible snapshot may still need. With
+    ``reuse_only=False`` (the pre-GC behaviour, fine for short runs) the ring
+    head is overwritten unconditionally, losing the oldest overflow version
+    on wrap.
     """
     for _ in range(budget_per_record):
         K = tbl.n_old
@@ -211,14 +232,17 @@ def version_mover(tbl: VersionedTable, budget_per_record: int = 1) -> VersionedT
         src = jnp.take_along_axis(pos, first[:, None], axis=1)[:, 0]
         mh = tbl.old_hdr[r, src]
         md = tbl.old_data[r, src]
-        # append to overflow ring
-        opos = jnp.mod(tbl.ovf_next, tbl.ovf_hdr.shape[1])
+        # append to overflow ring (reclaimed-slot allocation under GC)
+        KO = tbl.ovf_hdr.shape[1]
+        opos = jnp.mod(tbl.ovf_next, KO)
+        if reuse_only:
+            has = has & hdr_ops.is_deleted(tbl.ovf_hdr[r, opos])
         ovf_hdr = tbl.ovf_hdr.at[r, opos].set(
             jnp.where(has[:, None], hdr_ops.with_deleted(mh, False),
                       tbl.ovf_hdr[r, opos]))
         ovf_data = tbl.ovf_data.at[r, opos].set(
             jnp.where(has[:, None], md, tbl.ovf_data[r, opos]))
-        ovf_next = tbl.ovf_next + has.astype(jnp.int32)
+        ovf_next = jnp.mod(tbl.ovf_next + has.astype(jnp.int32), KO)
         # set moved bit in the old buffer (slot stays readable until reused)
         old_hdr = tbl.old_hdr.at[r, src].set(
             jnp.where(has[:, None], hdr_ops.with_moved(mh, True),
@@ -226,3 +250,20 @@ def version_mover(tbl: VersionedTable, budget_per_record: int = 1) -> VersionedT
         tbl = tbl._replace(old_hdr=old_hdr, ovf_hdr=ovf_hdr,
                            ovf_data=ovf_data, ovf_next=ovf_next)
     return tbl
+
+
+def compact_overflow(tbl: VersionedTable) -> VersionedTable:
+    """Lazy truncation of GC-marked overflow versions (paper §5.3).
+
+    The paper truncates deleted versions lazily once contiguous regions free
+    up; in the bounded ring the equivalent compaction resets every
+    deleted-bit slot to the reusable sentinel — zero header and payload with
+    only the deleted bit kept — physically reclaiming the space the mover's
+    ring allocation will hand out next. Idempotent and read-invisible
+    (deleted versions are never returned by read_visible).
+    """
+    dead = hdr_ops.is_deleted(tbl.ovf_hdr)                    # [R, KO]
+    sentinel = hdr_ops.pack(jnp.uint32(0), jnp.uint32(0), deleted=True)
+    return tbl._replace(
+        ovf_hdr=jnp.where(dead[..., None], sentinel, tbl.ovf_hdr),
+        ovf_data=jnp.where(dead[..., None], 0, tbl.ovf_data))

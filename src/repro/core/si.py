@@ -58,6 +58,35 @@ class OpCounts(NamedTuple):
     bytes_moved: jnp.ndarray
 
 
+class VisStats(NamedTuple):
+    """Per-round visibility accounting (paper §5.1/§5.3 telemetry).
+
+    Lets drivers split aborts by cause: a transaction with ``snapshot_miss``
+    lost a version to GC (or read a not-yet-existing record), every other
+    abort is contention (CAS lost / old-slot not reusable). ``n_ovf`` counts
+    reads served by the overflow region — the GC-survivor old versions — so
+    sustained runs can see the post-GC version distribution shift.
+    """
+    n_reads: jnp.ndarray    # int32 [] — masked reads issued this round
+    n_current: jnp.ndarray  # int32 [] — served by the in-place version
+    n_ovf: jnp.ndarray      # int32 [] — served by the overflow region
+    n_miss: jnp.ndarray     # int32 [] — no visible version (GC'd / absent)
+
+
+def vis_stats(read_mask, found, from_current, from_ovf,
+              active=None) -> VisStats:
+    """Fold per-read visibility outcomes into :class:`VisStats` — shared by
+    the single-shard path and the distributed one (via
+    :class:`repro.core.store.DistRoundOut`'s replicated per-read outputs) so
+    the accounting cannot diverge."""
+    m = read_mask if active is None else read_mask & active[:, None]
+    return VisStats(
+        n_reads=jnp.sum(m.astype(jnp.int32)),
+        n_current=jnp.sum((m & from_current).astype(jnp.int32)),
+        n_ovf=jnp.sum((m & from_ovf).astype(jnp.int32)),
+        n_miss=jnp.sum((m & ~found).astype(jnp.int32)))
+
+
 class RoundResult(NamedTuple):
     table: VersionedTable
     oracle_state: VectorState
@@ -65,6 +94,7 @@ class RoundResult(NamedTuple):
     snapshot_miss: jnp.ndarray  # bool [T] — version GC'd / not found
     read_data: jnp.ndarray      # int32 [T, RS, W] (post-visibility payloads)
     ops: OpCounts
+    vis: VisStats
 
 
 ComputeFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
@@ -233,9 +263,13 @@ def run_round(
                     jnp.sum(do_install), jnp.sum(release_mask),
                     jnp.sum(committed), W, payload_bytes,
                     n_txns=jnp.sum(active.astype(jnp.int32)), active=active)
+    vis = vis_stats(batch.read_mask, vr.found.reshape(T, RS),
+                    vr.from_current.reshape(T, RS),
+                    vr.from_ovf.reshape(T, RS), active)
     del inst_mask
     return RoundResult(table=table, oracle_state=state, committed=committed,
-                       snapshot_miss=~txn_found, read_data=read_data, ops=ops)
+                       snapshot_miss=~txn_found, read_data=read_data, ops=ops,
+                       vis=vis)
 
 
 def run_rounds(table, oracle, state, make_batch, compute_fn, n_rounds: int,

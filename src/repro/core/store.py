@@ -25,7 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
-from repro.core import cas, header as hdr_ops, mvcc
+from repro.core import cas, gc as gc_ops, header as hdr_ops, mvcc
 from repro.core.catalog import Catalog
 from repro.core.mvcc import VersionedTable
 from repro.core.si import TxnBatch
@@ -116,6 +116,8 @@ class DistRoundOut(NamedTuple):
     read_data: jnp.ndarray      # int32 [T, RS, W]
     txn_found: jnp.ndarray      # bool  [T]
     from_current: jnp.ndarray   # bool  [T, RS] — read hit the in-place version
+    from_ovf: jnp.ndarray       # bool  [T, RS] — served by the overflow region
+    read_found: jnp.ndarray     # bool  [T, RS] — raw per-read visibility
     n_installs: jnp.ndarray     # int32 [] — installs across all shards
     n_releases: jnp.ndarray     # int32 [] — abort-path lock releases
 
@@ -188,14 +190,18 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         rd = jnp.where(inside[:, None], vr.data, 0)
         fnd = jnp.where(inside, vr.found, False)
         fcur = jnp.where(inside, vr.from_current, False)
+        fovf = jnp.where(inside, vr.from_ovf, False)
         rh = jax.lax.psum(rh, axis)
         rd = jax.lax.psum(rd, axis)
-        found = jax.lax.psum(fnd.astype(jnp.int32), axis) > 0
+        read_found = (jax.lax.psum(fnd.astype(jnp.int32), axis) > 0) \
+            .reshape(T, RS)
         from_current = (jax.lax.psum(fcur.astype(jnp.int32), axis) > 0) \
+            .reshape(T, RS)
+        from_ovf = (jax.lax.psum(fovf.astype(jnp.int32), axis) > 0) \
             .reshape(T, RS)
         read_hdr = rh.reshape(T, RS, 2).astype(jnp.uint32)
         read_data = rd.reshape(T, RS, W)
-        found = found.reshape(T, RS) | ~batch.read_mask
+        found = read_found | ~batch.read_mask
         txn_found = jnp.all(found, axis=1)
 
         # ---- 3. local transaction logic (replicated, deterministic) ------
@@ -263,7 +269,8 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         out = DistRoundOut(
             committed=committed, snapshot_miss=~txn_found,
             read_data=read_data, txn_found=txn_found,
-            from_current=from_current, n_installs=n_installs,
+            from_current=from_current, from_ovf=from_ovf,
+            read_found=read_found, n_installs=n_installs,
             n_releases=n_releases)
         return table, vec, out
 
@@ -276,7 +283,8 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
     vec_spec = P(axis) if shard_vector else P()
     out_spec = DistRoundOut(
         committed=P(), snapshot_miss=P(), read_data=P(), txn_found=P(),
-        from_current=P(), n_installs=P(), n_releases=P())
+        from_current=P(), from_ovf=P(), read_found=P(), n_installs=P(),
+        n_releases=P())
     fn = jax.jit(shard_map(local_round, mesh=mesh,
                            in_specs=(tbl_spec, vec_spec, batch_spec, P(), P()),
                            out_specs=(tbl_spec, vec_spec, out_spec),
@@ -344,6 +352,66 @@ def distributed_readonly_round(mesh: Mesh, axis: str, shard_records: int, *,
                    in_specs=(tbl_spec, vec_spec, P(), P()),
                    out_specs=out_spec, check_vma=False)
     return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Distributed garbage collection: the per-memory-server §5.3 GC thread
+# ---------------------------------------------------------------------------
+def init_shard_logs(n_shards: int, n_snapshots: int,
+                    n_slots: int) -> gc_ops.SnapshotLog:
+    """Per-shard snapshot logs: one §5.3 :class:`~repro.core.gc.SnapshotLog`
+    per memory server, stacked on a leading shard axis (sharded over the mesh
+    by :func:`distributed_gc_round`'s in-specs)."""
+    return gc_ops.SnapshotLog(
+        times=jnp.full((n_shards, n_snapshots), -1, jnp.int32),
+        vecs=jnp.zeros((n_shards, n_snapshots, n_slots), jnp.uint32))
+
+
+def distributed_gc_round(mesh: Mesh, axis: str, *,
+                         shard_vector: bool = False):
+    """Build a jittable per-shard GC sweep over the sharded pool (§5.3).
+
+    Each memory-server shard runs :func:`repro.core.gc.gc_round` — snapshot
+    the timestamp vector into its OWN :class:`~repro.core.gc.SnapshotLog`,
+    derive the safe vector, sweep + lazily truncate — against only its
+    resident records. With ``shard_vector=True`` the (range-partitioned)
+    vector is first all-gathered, exactly as the round executor's snapshot
+    read: every shard therefore logs the same full vector, so per-shard safe
+    vectors coincide with the single-shard one and the sweep of shard-local
+    rows is bit-identical to the single-shard sweep of the whole pool — GC
+    preserves the placement-not-semantics equivalence contract
+    (tests/test_distributed_equiv.py runs it inside the drivers' GC rounds).
+
+    Returns ``gc_fn(table, vec, logs, now, max_txn_time) -> (table, logs)``
+    with ``logs`` from :func:`init_shard_logs` (leading shard axis); ``now``
+    and ``max_txn_time`` are traced scalars, so one compile serves the run.
+    """
+
+    def local_gc(table: VersionedTable, vec, log_times, log_vecs, now,
+                 max_txn_time):
+        if shard_vector:
+            vec = jax.lax.all_gather(vec, axis, tiled=True)
+        log = gc_ops.SnapshotLog(times=log_times[0], vecs=log_vecs[0])
+        table, log = gc_ops.gc_round(table, vec, log, now, max_txn_time)
+        return table, log.times[None], log.vecs[None]
+
+    tbl_spec = VersionedTable(
+        cur_hdr=P(axis), cur_data=P(axis), old_hdr=P(axis), old_data=P(axis),
+        next_write=P(axis), ovf_hdr=P(axis), ovf_data=P(axis),
+        ovf_next=P(axis))
+    vec_spec = P(axis) if shard_vector else P()
+    fn = jax.jit(shard_map(
+        local_gc, mesh=mesh,
+        in_specs=(tbl_spec, vec_spec, P(axis), P(axis), P(), P()),
+        out_specs=(tbl_spec, P(axis), P(axis)), check_vma=False))
+
+    def gc_fn(table, vec, logs: gc_ops.SnapshotLog, now, max_txn_time):
+        table, times, vecs = fn(table, vec, logs.times, logs.vecs,
+                                jnp.asarray(now, jnp.int32),
+                                jnp.asarray(max_txn_time, jnp.int32))
+        return table, gc_ops.SnapshotLog(times=times, vecs=vecs)
+
+    return gc_fn
 
 
 def pad_table(table: VersionedTable, multiple: int):

@@ -22,8 +22,8 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import header as hdr_ops, locality, mvcc, netmodel, \
-    rangeindex as ri, si, store
+from repro.core import gc as gc_ops, header as hdr_ops, locality, mvcc, \
+    netmodel, rangeindex as ri, si, store
 from repro.core.catalog import Catalog
 from repro.core.si import TxnBatch
 from repro.core.tsoracle import VectorOracle, VectorState
@@ -307,6 +307,14 @@ def _dist_ops(oracle, batch: TxnBatch, out, tbl, active) -> si.OpCounts:
                         n_txns=_n_active(batch, active), active=active)
 
 
+def _dist_vis(batch: TxnBatch, out, active) -> si.VisStats:
+    """Visibility accounting of one distributed round — the exact
+    :func:`si.vis_stats` fold the single-shard path makes (TPC-C batches
+    pre-mask their read masks with ``active``, so the two are identical)."""
+    return si.vis_stats(batch.read_mask, out.read_found, out.from_current,
+                        out.from_ovf, active)
+
+
 # ------------------------------------------------------------- new-order ----
 class NewOrderResult(NamedTuple):
     state: TPCCState
@@ -315,6 +323,7 @@ class NewOrderResult(NamedTuple):
     o_id: jnp.ndarray
     ops: si.OpCounts
     batch: TxnBatch             # the round's requests (locality accounting)
+    vis: si.VisStats            # §5.3 visibility telemetry
 
 
 def _neworder_batch(cfg: TPCCConfig, lay: TPCCLayout,
@@ -437,7 +446,7 @@ def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     return NewOrderResult(
         state=TPCCState(nam=nam, order_index=idx, hist_cursor=st.hist_cursor),
         committed=out.committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
-        ops=out.ops, batch=batch)
+        ops=out.ops, batch=batch, vis=out.vis)
 
 
 # ------------------------------------------- new-order over the NAM mesh ----
@@ -455,6 +464,9 @@ class DistEngine(NamedTuple):
     n_shards: int
     shard_records: int
     shard_vector: bool
+    gc_fn: Optional[Callable] = None   # per-shard §5.3 GC sweep
+    #   (store.distributed_gc_round executor; drivers call it on their
+    #   gc_interval schedule with store.init_shard_logs state)
 
     @property
     def placement(self) -> locality.Placement:
@@ -471,9 +483,10 @@ def make_distributed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
         mesh, axis, oracle,
         lambda rh, rd, vec, aux: _neworder_new_data(rd, aux),
         shard_records, shard_vector=shard_vector)
+    gc_fn = store.distributed_gc_round(mesh, axis, shard_vector=shard_vector)
     return DistEngine(round_fn=round_fn, mesh=mesh, axis=axis,
                       n_shards=n_shards, shard_records=shard_records,
-                      shard_vector=shard_vector)
+                      shard_vector=shard_vector, gc_fn=gc_fn)
 
 
 def distribute_state(engine: DistEngine, st: TPCCState) -> TPCCState:
@@ -531,6 +544,10 @@ class MixedEngine(NamedTuple):
         return self.base.shard_vector
 
     @property
+    def gc_fn(self) -> Callable:
+        return self.base.gc_fn
+
+    @property
     def placement(self) -> locality.Placement:
         return self.base.placement
 
@@ -576,7 +593,33 @@ def neworder_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
     return NewOrderResult(
         state=TPCCState(nam=nam, order_index=idx, hist_cursor=st.hist_cursor),
         committed=out.committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
-        ops=ops, batch=batch)
+        ops=ops, batch=batch, vis=_dist_vis(batch, out, active))
+
+
+# ------------------------------------------------------ sustained-run GC ----
+def _gc_init(oracle, engine, gc_interval: int, gc_snapshots: int):
+    """GC-thread state for a driver run: one §5.3 snapshot log (single-shard
+    reference) or one per memory-server shard (mesh)."""
+    if gc_interval <= 0:
+        return None
+    if engine is None:
+        return gc_ops.init_log(gc_snapshots, oracle.n_slots)
+    return store.init_shard_logs(engine.n_shards, gc_snapshots,
+                                 oracle.n_slots)
+
+
+def _gc_sweep(lay, st: TPCCState, engine, log, now, max_txn_time):
+    """One GC-thread step over the run's pool (snapshot T_R → safe vector →
+    sweep → lazy truncation), single-shard or per-shard on the mesh; returns
+    ``(state, log, reclaimable_fraction)``."""
+    tbl, vec = st.nam.table, st.nam.oracle_state.vec
+    if engine is None:
+        tbl, log = gc_ops.gc_round(tbl, vec, log, now, max_txn_time)
+    else:
+        tbl, log = engine.gc_fn(tbl, vec, log, now, max_txn_time)
+    frac = float(gc_ops.reclaimable_fraction(
+        tbl, n_records=lay.catalog.total_records))
+    return st._replace(nam=st.nam._replace(table=tbl)), log, frac
 
 
 # ----------------------------------------------------- retry-queue driver ----
@@ -614,7 +657,15 @@ def _merge_retries(pending, fresh, retry_mask, T: int):
 
 
 class NewOrderRunStats(NamedTuple):
-    """Aggregates of a multi-round run under the §7.4 retry discipline."""
+    """Aggregates of a multi-round run under the §7.4 retry discipline.
+
+    The trailing fields are the §5.3 sustained-execution telemetry: aborts
+    split by cause (``snapshot_misses`` = a needed version was GC'd /
+    absent, ``contention_aborts`` = CAS lost or install blocked), reads
+    served by the overflow region, and the GC-sweep trajectory of the
+    reclaimable overflow fraction, which the ``--sustain`` bench turns into
+    its steady-state curves.
+    """
     committed: jnp.ndarray      # bool [R, T] — per-round outcomes
     attempts: int               # executed transactions (incl. retries)
     commits: int
@@ -622,6 +673,13 @@ class NewOrderRunStats(NamedTuple):
     abort_rate: float           # steady-state: aborts / attempts
     ops: si.OpCounts            # summed over rounds (python floats)
     local_fraction: float       # measured share of machine-local accesses
+    missed: jnp.ndarray = None  # bool [R, T] — per-round snapshot misses
+    snapshot_misses: int = 0    # GC-induced (snapshot-too-old) aborts
+    contention_aborts: int = 0  # CAS-lost / install-blocked aborts
+    ovf_reads: int = 0          # reads served by the overflow region
+    gc_sweeps: int = 0          # GC-thread steps executed
+    reclaim_traj: tuple = ()    # ((round, reclaimable_fraction), …)
+    ovf_peak: int = 0           # max overflow ring position observed (< KO)
 
 
 def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
@@ -629,7 +687,8 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                         *, logits=None, home_w=None, dist_degree=None,
                         engine: Optional[DistEngine] = None,
                         locality_mode: Optional[str] = None,
-                        move_versions: bool = True):
+                        move_versions: bool = True, gc_interval: int = 0,
+                        max_txn_time: int = 4, gc_snapshots: int = 8):
     """Closed-loop driver: each thread runs new-orders back to back and an
     aborted transaction *re-enters the next round* with its original snapshot
     discarded (§7.4 "the compute server directly triggers a retry after an
@@ -642,6 +701,17 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     measures the machine-local access fraction of the run under the given
     §7.3 routing (it never changes protocol behaviour — locality is an
     optimization, not a requirement).
+
+    ``gc_interval > 0`` turns on sustained execution (§5.3): every
+    ``gc_interval`` rounds the GC thread snapshots the timestamp vector,
+    sweeps versions no snapshot younger than ``max_txn_time`` rounds can
+    read, and lazily truncates them; the version mover then only ever
+    advances into reclaimed overflow slots (``reuse_only``), so long runs
+    reach the paper's steady state with bounded version storage instead of
+    silently shedding old versions. Faithful to the paper's contract,
+    transactions needing versions older than ``max_txn_time`` may abort with
+    ``snapshot_miss`` and re-enter via the retry queue. Wall-clock is the
+    round counter (one round ≙ one unit of E).
     """
     T = cfg.n_threads
     _check_layout_homes(cfg, lay, home_w, locality_mode)
@@ -652,11 +722,17 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     placement = engine.placement if engine is not None else \
         locality.Placement(n_servers=1,
                            shard_records=lay.catalog.total_records)
+    use_gc = gc_interval > 0
+    gc_log = _gc_init(oracle, engine, gc_interval, gc_snapshots)
 
     retry_mask = jnp.zeros((T,), bool)
     pending: Optional[workload.NewOrderInputs] = None
     committed_rounds = []
+    missed_rounds = []
     attempts = commits = retries = 0
+    snapshot_misses = contention_aborts = ovf_reads = 0
+    gc_sweeps = ovf_peak = 0
+    reclaim_traj = []
     ops_sum = [0.0] * len(si.OpCounts._fields)
     lf_sum, lf_n = 0.0, 0
 
@@ -674,14 +750,26 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         st = out.state
         if move_versions:
             st = st._replace(nam=st.nam._replace(
-                table=mvcc.version_mover(st.nam.table)))
+                table=mvcc.version_mover(st.nam.table, reuse_only=use_gc)))
+        if use_gc and (r + 1) % gc_interval == 0:
+            st, gc_log, frac = _gc_sweep(lay, st, engine, gc_log, r,
+                                         max_txn_time)
+            gc_sweeps += 1
+            reclaim_traj.append((r, frac))
 
         c = out.committed
+        miss = out.snapshot_miss
         committed_rounds.append(c)
+        missed_rounds.append(miss)
         n_c = int(jnp.sum(c))
+        n_miss = int(jnp.sum(miss))
         attempts += T
         commits += n_c
         retries += T - n_c
+        snapshot_misses += n_miss
+        contention_aborts += T - n_c - n_miss
+        ovf_reads += int(out.vis.n_ovf)
+        ovf_peak = max(ovf_peak, int(jnp.max(st.nam.table.ovf_next)))
         for i, f in enumerate(out.ops):
             ops_sum[i] += float(f)
         if locality_mode is not None:
@@ -701,7 +789,12 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         attempts=attempts, commits=commits, retries=retries,
         abort_rate=1.0 - commits / max(1, attempts),
         ops=si.OpCounts(*ops_sum),
-        local_fraction=lf_sum / lf_n if lf_n else float("nan"))
+        local_fraction=lf_sum / lf_n if lf_n else float("nan"),
+        missed=jnp.stack(missed_rounds),
+        snapshot_misses=snapshot_misses,
+        contention_aborts=contention_aborts, ovf_reads=ovf_reads,
+        gc_sweeps=gc_sweeps, reclaim_traj=tuple(reclaim_traj),
+        ovf_peak=ovf_peak)
     return st, stats
 
 
@@ -719,6 +812,14 @@ class MixedRunStats(NamedTuple):
     abort_rate: float           # steady-state: 1 - commits/attempts
     local_fraction: float       # access-weighted machine-local share
     delivered: int              # deliveries that found+delivered an order
+    # §5.3 sustained-execution telemetry (write types; read-only types never
+    # validate and here never read stale snapshots, so they carry no misses)
+    snapshot_misses: dict = None    # type -> GC-induced aborts
+    contention_aborts: dict = None  # type -> CAS-lost/install-blocked aborts
+    ovf_reads: dict = None          # type -> reads served by overflow region
+    gc_sweeps: int = 0
+    reclaim_traj: tuple = ()        # ((round, reclaimable_fraction), …)
+    ovf_peak: int = 0               # max overflow ring position observed
 
 
 def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
@@ -726,7 +827,9 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                      *, mix=None, logits=None, home_w=None, dist_degree=None,
                      engine: Optional[MixedEngine] = None,
                      locality_mode: Optional[str] = None,
-                     move_versions: bool = True, stock_last_n: int = 8):
+                     move_versions: bool = True, stock_last_n: int = 8,
+                     gc_interval: int = 0, max_txn_time: int = 4,
+                     gc_snapshots: int = 8):
     """Closed-loop driver for the full TPC-C mix.
 
     Each round, every execution thread draws its next transaction type from
@@ -741,6 +844,11 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
 
     ``engine=None`` runs the single-shard reference; with a
     :class:`MixedEngine` every sub-round goes through the mesh executors.
+
+    ``gc_interval``/``max_txn_time``/``gc_snapshots`` are the §5.3 sustained
+    execution knobs of :func:`run_neworder_rounds`: one GC-thread sweep per
+    ``gc_interval`` rounds (after all five sub-rounds), version mover in
+    reclaimed-slot-only mode, round counter as wall-clock.
     """
     T = cfg.n_threads
     _check_layout_homes(cfg, lay, home_w, locality_mode)
@@ -756,6 +864,13 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     commits = {n: 0 for n in names}
     retries = {n: 0 for n in names}
     ops_sum = {n: [0.0] * len(si.OpCounts._fields) for n in names}
+    snapshot_misses = {n: 0 for n in names}
+    contention_aborts = {n: 0 for n in names}
+    ovf_reads = {n: 0 for n in names}
+    use_gc = gc_interval > 0
+    gc_log = _gc_init(oracle, engine, gc_interval, gc_snapshots)
+    gc_sweeps = ovf_peak = 0
+    reclaim_traj = []
     delivered = 0
     lf_local = lf_total = 0.0
     tids = jnp.arange(T, dtype=jnp.int32)
@@ -777,11 +892,16 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
             placement, srv, slots, mask)) * n_acc
         lf_total += n_acc
 
-    def acc_write(name, act, committed, ops):
+    def acc_write(name, act, committed, ops, snap_miss, vis):
         attempts[name] += int(jnp.sum(act))
         commits[name] += int(jnp.sum(committed))
         aborted = act & ~committed
-        retries[name] += int(jnp.sum(aborted))
+        n_ab = int(jnp.sum(aborted))
+        retries[name] += n_ab
+        n_miss = int(jnp.sum(snap_miss & act))
+        snapshot_misses[name] += n_miss
+        contention_aborts[name] += n_ab - n_miss
+        ovf_reads[name] += int(vis.n_ovf)
         acc_ops(name, ops)
         return aborted
 
@@ -810,7 +930,7 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                                                  round_no=r, active=act)
             st = out.state
             aborted_round |= acc_write("neworder", act, out.committed,
-                                       out.ops)
+                                       out.ops, out.snapshot_miss, out.vis)
             acc_local(inp.neworder.w_id, inp.neworder.d_id,
                       out.batch.read_slots, out.batch.read_mask)
 
@@ -824,7 +944,7 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                                                 inp.payment, active=act)
             st = pay.state
             aborted_round |= acc_write("payment", act, pay.committed,
-                                       pay.ops)
+                                       pay.ops, pay.snapshot_miss, pay.vis)
             acc_local(inp.payment.w_id, inp.payment.d_id,
                       pay.batch.read_slots, pay.batch.read_mask)
 
@@ -837,7 +957,8 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                 dl = delivery_round_distributed(cfg, lay, st, oracle, engine,
                                                 inp.delivery, active=act)
             st = dl.state
-            aborted_round |= acc_write("delivery", act, dl.committed, dl.ops)
+            aborted_round |= acc_write("delivery", act, dl.committed, dl.ops,
+                                       dl.snapshot_miss, dl.vis)
             delivered += int(jnp.sum(dl.delivered))
             acc_local(inp.delivery.w_id, inp.delivery.d_id,
                       dl.batch.read_slots, dl.batch.read_mask)
@@ -870,7 +991,13 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         pending = inp
         if move_versions:
             st = st._replace(nam=st.nam._replace(
-                table=mvcc.version_mover(st.nam.table)))
+                table=mvcc.version_mover(st.nam.table, reuse_only=use_gc)))
+        if use_gc and (r + 1) % gc_interval == 0:
+            st, gc_log, frac = _gc_sweep(lay, st, engine, gc_log, r,
+                                         max_txn_time)
+            gc_sweeps += 1
+            reclaim_traj.append((r, frac))
+        ovf_peak = max(ovf_peak, int(jnp.max(st.nam.table.ovf_next)))
 
     # the last round's aborts never re-entered a later round
     for i, n in enumerate(names):
@@ -883,7 +1010,10 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         total_attempts=total_attempts, total_commits=total_commits,
         abort_rate=1.0 - total_commits / max(1, total_attempts),
         local_fraction=lf_local / lf_total if lf_total else float("nan"),
-        delivered=delivered)
+        delivered=delivered, snapshot_misses=snapshot_misses,
+        contention_aborts=contention_aborts, ovf_reads=ovf_reads,
+        gc_sweeps=gc_sweeps, reclaim_traj=tuple(reclaim_traj),
+        ovf_peak=ovf_peak)
     return st, stats
 
 
@@ -924,6 +1054,8 @@ class PaymentResult(NamedTuple):
     committed: jnp.ndarray
     ops: si.OpCounts
     batch: TxnBatch
+    snapshot_miss: jnp.ndarray  # bool [T] — a required version was GC'd
+    vis: si.VisStats
 
 
 def _payment_batch(cfg: TPCCConfig, lay: TPCCLayout,
@@ -990,7 +1122,8 @@ def payment_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     return PaymentResult(
         state=TPCCState(nam=nam, order_index=st.order_index,
                         hist_cursor=hist_cursor),
-        committed=out.committed, ops=out.ops, batch=batch)
+        committed=out.committed, ops=out.ops, batch=batch,
+        snapshot_miss=out.snapshot_miss, vis=out.vis)
 
 
 def payment_round_distributed(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
@@ -1009,7 +1142,8 @@ def payment_round_distributed(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     return PaymentResult(
         state=TPCCState(nam=nam, order_index=st.order_index,
                         hist_cursor=hist_cursor),
-        committed=out.committed, ops=ops, batch=batch)
+        committed=out.committed, ops=ops, batch=batch,
+        snapshot_miss=out.snapshot_miss, vis=_dist_vis(batch, out, active))
 
 
 # ----------------------------------------------------- read-only queries ----
@@ -1192,6 +1326,8 @@ class DeliveryResult(NamedTuple):
     delivered: jnp.ndarray      # bool [T] — committed AND an order was found
     ops: si.OpCounts
     batch: TxnBatch
+    snapshot_miss: jnp.ndarray  # bool [T] — a required version was GC'd
+    vis: si.VisStats
 
 
 class DeliveryAux(NamedTuple):
@@ -1290,7 +1426,7 @@ def delivery_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         state=TPCCState(nam=nam, order_index=st.order_index,
                         hist_cursor=st.hist_cursor),
         committed=out.committed, delivered=out.committed & found, ops=ops,
-        batch=batch)
+        batch=batch, snapshot_miss=out.snapshot_miss, vis=out.vis)
 
 
 def delivery_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
@@ -1312,4 +1448,5 @@ def delivery_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
         state=TPCCState(nam=nam, order_index=st.order_index,
                         hist_cursor=st.hist_cursor),
         committed=out.committed, delivered=out.committed & found, ops=ops,
-        batch=batch)
+        batch=batch, snapshot_miss=out.snapshot_miss,
+        vis=_dist_vis(batch, out, active))

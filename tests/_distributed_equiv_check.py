@@ -12,6 +12,13 @@ cursors and the order index. Covered workloads, in both pool layouts:
 * payment alone and delivery alone (per-round drivers),
 * the full five-transaction mix through ``run_mixed_rounds`` — per-type
   commit/abort counts and final state must match the single-shard reference.
+
+The driver runs execute with the §5.3 GC thread ON (``gc_interval=1``,
+``max_txn_time=1``): every round the single-shard path takes one snapshot
+and sweeps the whole pool while each mesh shard snapshots into its own log
+and sweeps only its resident records — the per-shard sweep must be
+bit-identical too, and the GC telemetry (snapshot-miss vs contention abort
+split, overflow-read counts, ring peak) must agree exactly.
 """
 import os
 
@@ -28,6 +35,18 @@ from repro.db import tpcc, workload
 CFG = dict(n_warehouses=8, customers_per_district=8, n_items=64,
            n_threads=16, orders_per_thread=16, dist_degree=30.0)
 ROUNDS = 4
+GC = dict(gc_interval=1, max_txn_time=1)   # §5.3 GC thread on, tight E
+
+
+def assert_same_gc_stats(layout, tag, sd, ss):
+    """The sustained-execution telemetry must agree exactly between the
+    sharded and the single-shard run (same fields on both stats types)."""
+    for f in ("snapshot_misses", "contention_aborts", "ovf_reads",
+              "gc_sweeps", "ovf_peak"):
+        a, b = getattr(sd, f), getattr(ss, f)
+        assert a == b, (layout, tag, f, a, b)
+    assert ss.gc_sweeps > 0, (layout, tag)
+    assert sd.reclaim_traj == ss.reclaim_traj, (layout, tag)
 
 
 def assert_same_state(layout, tag, lay, st_d, st_s):
@@ -66,13 +85,17 @@ def run_neworder(layout: str, mesh):
     home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
     lay, (oracle_s, st_s), (oracle_d, st_d, engine) = make_pair(cfg, mesh)
     st_s, stats_s = tpcc.run_neworder_rounds(
-        cfg, lay, st_s, oracle_s, jax.random.PRNGKey(1), ROUNDS, home_w=home)
+        cfg, lay, st_s, oracle_s, jax.random.PRNGKey(1), ROUNDS, home_w=home,
+        **GC)
     st_d, stats_d = tpcc.run_neworder_rounds(
         cfg, lay, st_d, oracle_d, jax.random.PRNGKey(1), ROUNDS,
-        home_w=home, engine=engine)
+        home_w=home, engine=engine, **GC)
     np.testing.assert_array_equal(np.asarray(stats_d.committed),
                                   np.asarray(stats_s.committed))
+    np.testing.assert_array_equal(np.asarray(stats_d.missed),
+                                  np.asarray(stats_s.missed))
     assert stats_d.commits == stats_s.commits and stats_s.commits > 0
+    assert_same_gc_stats(layout, "neworder", stats_d, stats_s)
     assert_same_state(layout, "neworder", lay, st_d, st_s)
     # the ops profiles feeding netmodel agree too
     for f, a, b in zip(tpcc.si.OpCounts._fields, stats_d.ops, stats_s.ops):
@@ -124,10 +147,11 @@ def run_mixed(layout: str, mesh):
     home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
     lay, (oracle_s, st_s), (oracle_d, st_d, engine) = make_pair(cfg, mesh)
     st_s, ms = tpcc.run_mixed_rounds(cfg, lay, st_s, oracle_s,
-                                     jax.random.PRNGKey(9), 3, home_w=home)
+                                     jax.random.PRNGKey(9), 3, home_w=home,
+                                     **GC)
     st_d, md = tpcc.run_mixed_rounds(cfg, lay, st_d, oracle_d,
                                      jax.random.PRNGKey(9), 3, home_w=home,
-                                     engine=engine)
+                                     engine=engine, **GC)
     for name in workload.TXN_TYPES:
         # the run must actually exercise every type through the mesh
         # executors, or the per-type equivalence below is vacuous
@@ -135,9 +159,17 @@ def run_mixed(layout: str, mesh):
         assert ms.attempts[name] == md.attempts[name], (layout, name)
         assert ms.commits[name] == md.commits[name], (layout, name)
         assert ms.retries[name] == md.retries[name], (layout, name)
+        assert ms.snapshot_misses[name] == md.snapshot_misses[name], \
+            (layout, name)
+        assert ms.contention_aborts[name] == md.contention_aborts[name], \
+            (layout, name)
+        assert ms.ovf_reads[name] == md.ovf_reads[name], (layout, name)
         for f, a, b in zip(tpcc.si.OpCounts._fields, md.ops[name],
                            ms.ops[name]):
             assert float(a) == float(b), (layout, name, f)
+    assert ms.gc_sweeps == md.gc_sweeps > 0
+    assert ms.ovf_peak == md.ovf_peak
+    assert ms.reclaim_traj == md.reclaim_traj
     assert ms.delivered == md.delivered
     assert ms.commits["neworder"] > 0 and ms.commits["payment"] > 0
     assert_same_state(layout, "mixed", lay, st_d, st_s)

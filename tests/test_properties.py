@@ -11,6 +11,17 @@ SI protocol (paper §3/§4/§5):
       round commits an update to it.
   P5  visible read returns the newest version ≤ snapshot — against a
       brute-force reference over the full version history.
+
+GC (paper §5.3):
+  P6  GC safety — ``gc.collect`` at the safe vector never marks a version
+      that is the newest visible one at ANY admissible snapshot (any
+      snapshot ≥ the safe vector elementwise, i.e. any snapshot a live
+      transaction younger than E could still hold): reads at every such
+      snapshot are unchanged by the sweep (+ lazy truncation).
+  P7  GC liveness — repeated install → move(reuse_only) → collect →
+      truncate cycles keep the overflow ring pointer bounded in [0, KO),
+      keep installs succeeding (no permanent stall), and actually REUSE
+      slots rather than exhausting them.
 """
 import pytest
 
@@ -23,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import header as hdr, mvcc, si
+from repro.core import gc, header as hdr, mvcc, si
 from repro.core.tsoracle import VectorOracle
 
 hypothesis.settings.register_profile(
@@ -164,6 +175,104 @@ def test_visible_read_matches_bruteforce(seed, n_rounds):
         assert bool(vr.found[r])
         assert int(vr.data[r, 0]) == newest[2]
         assert newest[2] in visible
+
+
+# ---------------------------------------------------------- P6 + P7 ------
+def _run_si_with_snapshots(seed, n_rounds, T=4, n_rec=6, n_old=2, ko=8):
+    """Drive real SI rounds, logging T_R after each round (wall-clock = round
+    index). Returns (table, vec history list, oracle state)."""
+    table = mvcc.init_table(n_rec, payload_width=1, n_old=n_old,
+                            n_overflow=ko)
+    oracle = VectorOracle(T)
+    state = oracle.init()
+    key = jax.random.PRNGKey(seed)
+    vecs = []
+    for rnd in range(n_rounds):
+        key, k1 = jax.random.split(key)
+        slot = jax.random.randint(k1, (T,), 0, n_rec)
+        batch = si.TxnBatch(
+            tid=jnp.arange(T, dtype=jnp.int32),
+            read_slots=slot[:, None].astype(jnp.int32),
+            read_mask=jnp.ones((T, 1), bool),
+            write_ref=jnp.zeros((T, 1), jnp.int32),
+            write_mask=jnp.ones((T, 1), bool))
+
+        def bump(rh, rd, vec, _r=rnd):
+            return rd.astype(jnp.int32) + 1 + _r
+
+        res = si.run_round(table, oracle, state, batch, bump)
+        table, state = res.table, res.oracle_state
+        table = mvcc.version_mover(table, reuse_only=True)
+        vecs.append(np.asarray(state.vec).copy())
+    return table, vecs, state
+
+
+def _check_gc_safety(seed, n_rounds, max_txn_time):
+    """P6 body: collect at the safe vector must not change any read at any
+    snapshot ≥ safe (the snapshots transactions younger than E can hold)."""
+    table, vecs, _ = _run_si_with_snapshots(seed, n_rounds)
+    log = gc.init_log(n_snapshots=n_rounds, n_slots=len(vecs[0]))
+    for t, v in enumerate(vecs):
+        log = gc.take_snapshot(log, t, jnp.asarray(v, jnp.uint32))
+    now = n_rounds - 1
+    safe = gc.safe_vector(log, now, max_txn_time)
+    swept = mvcc.compact_overflow(gc.collect(table, safe))
+    safe_np = np.asarray(safe)
+    admissible = [v for v in vecs if (v >= safe_np).all()]
+    # snapshots younger than E are admissible by construction — non-vacuous
+    assert len(admissible) >= min(len(vecs), max_txn_time)
+    all_slots = jnp.arange(table.n_records, dtype=jnp.int32)
+    for v in admissible:
+        vec = jnp.asarray(v, jnp.uint32)
+        a = mvcc.read_visible(table, all_slots, vec)
+        b = mvcc.read_visible(swept, all_slots, vec)
+        np.testing.assert_array_equal(np.asarray(a.found),
+                                      np.asarray(b.found), err_msg=str(v))
+        np.testing.assert_array_equal(np.asarray(a.hdr), np.asarray(b.hdr),
+                                      err_msg=str(v))
+        np.testing.assert_array_equal(np.asarray(a.data), np.asarray(b.data),
+                                      err_msg=str(v))
+
+
+def _check_gc_liveness(ko, lag, n_steps=None):
+    """P7 body: single hot record, one install per step, mover in
+    reclaimed-slot-only mode, a GC sweep per step at staleness ``lag``."""
+    n_steps = n_steps or 4 * ko
+    tbl = mvcc.init_table(1, 2, n_old=1, n_overflow=ko)
+    s = jnp.array([0], jnp.int32)
+    installed = 0
+    v = 0
+    for step in range(n_steps):
+        v += 1
+        out = mvcc.install(
+            tbl, s, hdr.pack(jnp.uint32(1), jnp.uint32(v))[None],
+            jnp.full((1, 2), v, jnp.int32), jnp.array([True]))
+        installed += int(out.installed[0])
+        if not bool(out.installed[0]):
+            v -= 1                      # aborted: version v never existed
+        tbl = mvcc.version_mover(out.table, reuse_only=True)
+        safe = jnp.array([0, max(0, v - 1 - lag)], jnp.uint32)
+        tbl = mvcc.compact_overflow(gc.collect(tbl, safe))
+        assert 0 <= int(tbl.ovf_next[0]) < ko, "ring pointer escaped [0, KO)"
+    assert installed >= 2 * ko, f"stall: only {installed}/{n_steps} installs"
+    # slots were REUSED: some overflow version's cts exceeds the capacity,
+    # impossible if each of the KO slots had been written at most once
+    assert int(np.asarray(hdr.commit_ts(tbl.ovf_hdr[0])).max()) > ko
+
+
+@given(seed=st.integers(0, 2**31 - 1), n_rounds=st.integers(2, 7),
+       max_txn_time=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_gc_collect_never_marks_newest_visible(seed, n_rounds, max_txn_time):
+    _check_gc_safety(seed, n_rounds, max_txn_time)
+
+
+@given(ko=st.integers(2, 6), lag=st.integers(0, 4))
+@settings(max_examples=10, deadline=None)
+def test_gc_mover_cycles_keep_overflow_ring_bounded(ko, lag):
+    # a retention lag the ring cannot hold stalls by design (backpressure);
+    # liveness is claimed for lag ≤ KO-2 — GC keeping up with the mover
+    _check_gc_liveness(ko, min(lag, ko - 2))
 
 
 # ------------------------------------------------------- MoE invariants ---

@@ -1,8 +1,14 @@
-"""Tests: WAL journaling, recovery replay, abandoned-lock release, GC."""
+"""Tests: WAL journaling, recovery replay, abandoned-lock release, GC —
+including the §5.3 sustained-execution pieces (snapshot-ring wraparound,
+reclaimed-slot version moving, lazy truncation, and the per-shard mesh
+sweep, which runs whenever the process sees ≥2 CPU devices, e.g. under CI's
+8-forced-host-device step)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core import cas, gc, header as hdr, mvcc, si, wal
+from repro import compat
+from repro.core import cas, gc, header as hdr, mvcc, si, store, wal
 from repro.core.tsoracle import VectorOracle
 
 
@@ -123,6 +129,160 @@ def test_gc_collect_marks_only_superseded():
     # reads at the safe snapshot still succeed
     vr = mvcc.read_visible(tbl2, s, safe)
     assert bool(vr.found[0]) and int(hdr.commit_ts(vr.hdr[0])) == 3
+
+
+def test_gc_take_snapshot_prefers_unused_slots():
+    """Bugfix regression: while unused (−1) slots remain, take_snapshot must
+    fill them — never evict a retained snapshot (the old argmin(times) did
+    the right thing only because −1 happens to sort below every valid
+    time)."""
+    log = gc.init_log(4, n_slots=1)
+    log = gc.take_snapshot(log, 10, jnp.array([1], jnp.uint32))
+    log = gc.take_snapshot(log, 20, jnp.array([2], jnp.uint32))
+    times = np.asarray(log.times)
+    assert sorted(times[times >= 0]) == [10, 20]
+    assert (times < 0).sum() == 2  # both retained, two slots still unused
+
+
+def test_gc_snapshot_ring_full_wraparound():
+    """Once the ring is full, each new snapshot evicts exactly the OLDEST
+    retained one; after a full second lap only the newest S survive and
+    safe_vector reflects them."""
+    S = 4
+    log = gc.init_log(S, n_slots=1)
+    for t in range(10, 10 + 2 * S + 1):
+        log = gc.take_snapshot(log, t, jnp.array([t], jnp.uint32))
+        retained = np.asarray(log.times)
+        retained = sorted(retained[retained >= 0])
+        want = list(range(max(10, t - S + 1), t + 1))
+        assert retained == want, (t, retained)
+    # ring now holds times 15..18; at now=20, E=2 the newest qualifying
+    # snapshot is t=18, so the safe vector is its vec
+    safe = gc.safe_vector(log, now=20, max_txn_time=2)
+    np.testing.assert_array_equal(np.asarray(safe), [18])
+
+
+def _install_v(tbl, v):
+    return mvcc.install(tbl, jnp.array([0], jnp.int32),
+                        hdr.pack(jnp.uint32(1), jnp.uint32(v))[None],
+                        jnp.full((1, 2), v, jnp.int32), jnp.array([True]))
+
+
+def test_version_mover_reuse_only_stalls_until_collect():
+    """§5.3 discipline: with reuse_only the mover never overwrites a live
+    overflow version — it stalls, installs backpressure into aborts, and one
+    collect+truncate unblocks the pipeline."""
+    tbl = mvcc.init_table(1, 2, n_old=1, n_overflow=2)
+    for v in (1, 2):
+        out = _install_v(tbl, v)
+        assert bool(out.installed[0])
+        tbl = mvcc.version_mover(out.table, reuse_only=True)
+    # ring now holds v0, v1 (both live); the next move must stall …
+    out = _install_v(tbl, 3)
+    assert bool(out.installed[0])
+    tbl = mvcc.version_mover(out.table, reuse_only=True)
+    ovf_cts = set(np.asarray(hdr.commit_ts(tbl.ovf_hdr[0])).tolist())
+    assert ovf_cts == {0, 1}, "stalled mover must not clobber v0/v1"
+    # … which blocks the NEXT install (old slot not reusable) → abort
+    out = _install_v(tbl, 4)
+    assert not bool(out.installed[0])
+    # GC: safe snapshot sees v1 as newest ⇒ v0 reclaimed, truncated
+    tbl = mvcc.compact_overflow(
+        gc.collect(out.table, jnp.array([0, 1], jnp.uint32)))
+    tbl = mvcc.version_mover(tbl, reuse_only=True)   # v2 → reclaimed slot
+    out = _install_v(tbl, 4)                          # retry now succeeds
+    assert bool(out.installed[0])
+    tbl = out.table
+    assert int(tbl.ovf_next[0]) < 2                   # ring ptr stays bounded
+    # v2 must now be readable from the overflow region at its snapshot
+    vr = mvcc.read_visible(tbl, jnp.array([0], jnp.int32),
+                           jnp.array([0, 2], jnp.uint32))
+    assert bool(vr.found[0]) and int(hdr.commit_ts(vr.hdr[0])) == 2
+    assert bool(vr.from_ovf[0])
+
+
+def test_compact_overflow_resets_deleted_slots_only():
+    tbl = mvcc.init_table(1, 2, n_old=1, n_overflow=4)
+    for v in (1, 2, 3):
+        tbl = mvcc.version_mover(_install_v(tbl, v).table, reuse_only=True)
+    tbl = gc.collect(tbl, jnp.array([0, 3], jnp.uint32))  # dooms v0, v1
+    tbl2 = mvcc.compact_overflow(tbl)
+    dead = np.asarray(hdr.is_deleted(tbl.ovf_hdr[0]))
+    for k in range(4):
+        if dead[k]:   # truncated to the zeroed reusable sentinel
+            assert int(hdr.commit_ts(tbl2.ovf_hdr[0, k])) == 0
+            assert int(np.asarray(tbl2.ovf_data[0, k]).sum()) == 0
+            assert bool(hdr.is_deleted(tbl2.ovf_hdr[0, k]))
+        else:         # live versions untouched
+            np.testing.assert_array_equal(np.asarray(tbl2.ovf_hdr[0, k]),
+                                          np.asarray(tbl.ovf_hdr[0, k]))
+            np.testing.assert_array_equal(np.asarray(tbl2.ovf_data[0, k]),
+                                          np.asarray(tbl.ovf_data[0, k]))
+    # reads at any still-admissible snapshot are unchanged
+    for vec in ([0, 2], [0, 3]):
+        a = mvcc.read_visible(tbl, jnp.array([0]), jnp.array(vec, jnp.uint32))
+        b = mvcc.read_visible(tbl2, jnp.array([0]), jnp.array(vec, jnp.uint32))
+        assert bool(a.found[0]) == bool(b.found[0])
+        np.testing.assert_array_equal(np.asarray(a.data), np.asarray(b.data))
+
+
+@pytest.mark.skipif(len(compat.cpu_devices()) < 2,
+                    reason="needs ≥2 CPU devices (run under the CI mesh "
+                    "step's forced host devices)")
+def test_distributed_gc_round_matches_single_shard():
+    """The per-shard mesh sweep (store.distributed_gc_round) must be
+    bit-identical to gc.gc_round over the whole pool, with every shard's
+    snapshot log agreeing with the single-shard one."""
+    import jax
+
+    n = 2 if len(compat.cpu_devices()) < 4 else 4
+    mesh = jax.sharding.Mesh(np.array(compat.cpu_devices()[:n]), ("mem",))
+    n_records, width, T = 8 * n, 2, 3
+    tbl_s = mvcc.init_table(n_records, width, n_old=1, n_overflow=4)
+    o = VectorOracle(T)
+    st = o.init()
+
+    def fn(rh, rd, rts):
+        return rd[:, :1, :].at[..., 0].add(1)
+
+    import jax.random as jrandom
+    key = jrandom.PRNGKey(3)
+    # grow version history through real SI rounds (single copy)
+    for r in range(6):
+        key, sub = jrandom.split(key)
+        slots = jrandom.randint(sub, (T, 2), 0, n_records)
+        batch = si.TxnBatch(
+            tid=jnp.arange(T, dtype=jnp.int32),
+            read_slots=slots.astype(jnp.int32),
+            read_mask=jnp.ones((T, 2), bool),
+            write_ref=jnp.zeros((T, 1), jnp.int32),
+            write_mask=jnp.ones((T, 1), bool))
+        out = si.run_round(tbl_s, o, st, batch, fn)
+        tbl_s, st = out.table, out.oracle_state
+        tbl_s = mvcc.version_mover(tbl_s, reuse_only=True)
+
+    tbl_d = store.shard_table(mesh, "mem", tbl_s)
+    gc_fn = store.distributed_gc_round(mesh, "mem", shard_vector=False)
+    log_s = gc.init_log(4, n_slots=T)
+    logs_d = store.init_shard_logs(n, 4, n_slots=T)
+    vec = st.vec
+    for now in range(3):
+        tbl_s, log_s = gc.gc_round(tbl_s, vec, log_s, now, 1)
+        tbl_d, logs_d = gc_fn(tbl_d, vec, logs_d, now, 1)
+    import jax
+    for field in mvcc.VersionedTable._fields:
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(getattr(tbl_d, field))),
+            np.asarray(getattr(tbl_s, field)), err_msg=field)
+    for shard in range(n):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(logs_d.times))[shard],
+            np.asarray(log_s.times), err_msg=f"shard {shard} times")
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(logs_d.vecs))[shard],
+            np.asarray(log_s.vecs), err_msg=f"shard {shard} vecs")
+    # the sweep must have reclaimed something, or the equality is vacuous
+    assert float(gc.reclaimable_fraction(tbl_s)) > 0.0
 
 
 def test_gc_reclaimable_fraction_monotone():
