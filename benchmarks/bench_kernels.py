@@ -62,20 +62,23 @@ def run():
     flops = 2 * E * C * Dm * F * 3
     rows.append(("kernel_moe_gmm", us, flops / PEAK_FLOPS * 1e6))
 
-    # hash probe (NAM-DB §5.2 hot spot)
-    from repro.core import hashtable as ht, header as hdr
-    from repro.kernels.hash_probe.ops import hash_probe
-    t = ht.init(4096)
-    keys = jnp.arange(1, 2000, dtype=jnp.uint32) * 7919
-    t, _ = ht.insert(t, keys, jnp.arange(1999, dtype=jnp.int32),
-                     max_probes=64)
-    meta = hdr.pack(jnp.zeros(4096, jnp.uint32), jnp.zeros(4096, jnp.uint32))
-    tsv = jnp.zeros((4,), jnp.uint32)
-    qs = keys[:1024]
-    us = _time(lambda: hash_probe(t.keys, t.vals, meta[:, 0], meta[:, 1],
-                                  tsv, qs, interpret=True))
-    bytes_ = 4096 * 16 + 1024 * 8
-    rows.append(("kernel_hash_probe_1k", us, bytes_ / HBM_BW * 1e6))
+    # hash probe + §5.1 resolution (NAM-DB §5.2 hot spot): the fused
+    # kernel (probe → current → old ring → overflow, locator out + one
+    # payload gather — §5.1's "headers alone first") vs the unfused
+    # production path (hashtable.lookup, then mvcc.read_visible
+    # materializing every ring version's header AND payload). 64 k
+    # buckets/records = the VMEM-resident shard regime; see the --probe
+    # mode of bench_tpcc_scaling.py for the bucket-count sweep + artifact.
+    try:
+        from benchmarks.bench_tpcc_scaling import measure_probe_point
+    except ImportError:           # run as a script from benchmarks/
+        from bench_tpcc_scaling import measure_probe_point
+    pt = measure_probe_point(1 << 16, 8192, iters=15)
+    hdr_bytes = (1 << 16) * (8 + 8 + 8 * 8 + 16 * 8 + 8) + 8192 * 48
+    rows.append(("kernel_hash_probe_unfused_64k", pt["unfused_us"],
+                 hdr_bytes / HBM_BW * 1e6))
+    rows.append(("kernel_hash_probe_fused_64k", pt["fused_us"],
+                 hdr_bytes / HBM_BW * 1e6))
 
     # mamba selective scan
     from repro.kernels.mamba_scan.ops import mamba_scan

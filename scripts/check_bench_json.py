@@ -1,13 +1,14 @@
-"""Schema check for the sustained-execution bench artifact.
+"""Schema check for the bench JSON artifacts.
 
-CI runs ``bench_tpcc_scaling.py --sustain … --smoke`` and uploads the
-emitted ``BENCH_sustain.json``; this script pins the document's shape so the
-bench output format cannot rot silently (a field rename or a dropped
-trajectory would otherwise only surface when someone next tries to plot an
-artifact). Pure stdlib, no repo imports — it must be able to judge the
-artifact from any checkout.
+CI runs ``bench_tpcc_scaling.py --sustain … --smoke`` (emitting
+``BENCH_sustain.json``) and ``--probe --smoke`` (``BENCH_probe.json``) and
+uploads both; this script pins each document's shape — dispatched on the
+``kind`` field — so the bench output formats cannot rot silently (a field
+rename or a dropped trajectory would otherwise only surface when someone
+next tries to plot an artifact). Pure stdlib, no repo imports — it must be
+able to judge the artifact from any checkout.
 
-    python scripts/check_bench_json.py [BENCH_sustain.json]
+    python scripts/check_bench_json.py [BENCH_sustain.json|BENCH_probe.json]
 """
 from __future__ import annotations
 
@@ -58,12 +59,60 @@ def _check_fields(obj: dict, spec: dict, where: str):
             raise SchemaError(f"{where}.{key}: rate {obj[key]!r} not in [0,1]")
 
 
+PROBE_CONFIG_KEYS = {"n_queries": int, "n_old": int, "n_overflow": int,
+                     "max_probes": int, "iters": int, "smoke": bool}
+PROBE_POINT_KEYS = {"n_buckets": int, "n_records": int, "n_queries": int,
+                    "load_factor": float, "n_old": int, "n_overflow": int,
+                    "max_probes": int, "unfused_us": float, "fused_us": float,
+                    "speedup": float}
+PROBE_SUMMARY_KEYS = {"best_speedup_64k": float, "fused_wins_at_64k": bool}
+
+
+def check_probe(doc: dict):
+    """The §5.2 probe-bench artifact: a bucket-count sweep of fused-kernel
+    vs unfused read-path timings, with the ≥64k-bucket win recorded."""
+    _check_fields(doc.get("config"), PROBE_CONFIG_KEYS, "config")
+    _check_fields(doc.get("summary"), PROBE_SUMMARY_KEYS, "summary")
+    points = doc.get("points")
+    if not isinstance(points, list) or not points:
+        raise SchemaError("points: expected non-empty list")
+    best64 = None
+    for i, p in enumerate(points):
+        _check_fields(p, PROBE_POINT_KEYS, f"points[{i}]")
+        if not 0.0 < p["load_factor"] <= 1.0:
+            raise SchemaError(f"points[{i}].load_factor out of (0,1]")
+        for f in ("unfused_us", "fused_us"):
+            if p[f] <= 0:
+                raise SchemaError(f"points[{i}].{f}: non-positive timing")
+        want = p["unfused_us"] / p["fused_us"]
+        if abs(p["speedup"] - want) > 1e-6 * max(1.0, want):
+            raise SchemaError(f"points[{i}].speedup {p['speedup']!r} != "
+                              f"unfused_us/fused_us ({want!r})")
+        if p["n_buckets"] >= 1 << 16:
+            best64 = p["speedup"] if best64 is None \
+                else max(best64, p["speedup"])
+    if best64 is None:
+        raise SchemaError("no point at >=64k buckets — the sweep misses the "
+                          "VMEM-resident regime the kernel targets")
+    s = doc["summary"]
+    if abs(s["best_speedup_64k"] - best64) > 1e-9:
+        raise SchemaError(f"summary.best_speedup_64k {s['best_speedup_64k']!r}"
+                          f" != max over >=64k points ({best64!r})")
+    if s["fused_wins_at_64k"] != (best64 >= 1.0):
+        raise SchemaError("summary.fused_wins_at_64k inconsistent with the "
+                          "recorded speedups")
+
+
 def check(doc: dict):
     if doc.get("schema_version") != SCHEMA_VERSION:
         raise SchemaError(f"schema_version {doc.get('schema_version')!r} != "
                           f"{SCHEMA_VERSION}")
-    if doc.get("kind") != "tpcc_sustain":
-        raise SchemaError(f"kind {doc.get('kind')!r} != 'tpcc_sustain'")
+    kind = doc.get("kind")
+    if kind == "hash_probe":
+        return check_probe(doc)
+    if kind != "tpcc_sustain":
+        raise SchemaError(f"kind {doc.get('kind')!r} not in "
+                          f"('tpcc_sustain', 'hash_probe')")
     _check_fields(doc.get("config"), CONFIG_KEYS, "config")
     _check_fields(doc.get("summary"), SUMMARY_KEYS, "summary")
 
@@ -120,11 +169,16 @@ def main(argv):
               file=sys.stderr)
         return 1
     s = doc["summary"]
-    print(f"check_bench_json: {path} ok — {doc['config']['rounds']} rounds, "
-          f"{s['commits']}/{s['attempts']} committed, "
-          f"ovf {s['ovf_peak']}/{s['ovf_capacity']}, "
-          f"{len(doc['windows'])} windows, "
-          f"{len(doc['reclaimable'])} gc points")
+    if doc["kind"] == "hash_probe":
+        print(f"check_bench_json: {path} ok — {len(doc['points'])} probe "
+              f"points, best >=64k speedup {s['best_speedup_64k']:.2f}x, "
+              f"fused_wins_at_64k={s['fused_wins_at_64k']}")
+    else:
+        print(f"check_bench_json: {path} ok — {doc['config']['rounds']} "
+              f"rounds, {s['commits']}/{s['attempts']} committed, "
+              f"ovf {s['ovf_peak']}/{s['ovf_capacity']}, "
+              f"{len(doc['windows'])} windows, "
+              f"{len(doc['reclaimable'])} gc points")
     return 0
 
 

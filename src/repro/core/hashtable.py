@@ -48,6 +48,12 @@ def lookup(ht: HashTable, keys, max_probes: int = 16):
 
     One gather per probe distance == one one-sided read of the probe cluster;
     ``max_probes`` bounds it exactly like the fixed-size cluster read in [31].
+
+    A key whose entry was invalidated by :func:`delete` (``val < 0``) reports
+    ``found=False`` — the entry still terminates the probe (the key stays in
+    the bucket so later probe chains keep working), but callers must never
+    gather with its negative slot. ``vals`` still carries the raw ``-1`` for
+    such keys; gate every downstream gather on ``found``.
     """
     keys1 = jnp.asarray(keys, jnp.uint32) + jnp.uint32(1)
     base = _hash(keys, ht.n_buckets)
@@ -57,11 +63,12 @@ def lookup(ht: HashTable, keys, max_probes: int = 16):
         vals, found, done = carry
         idx = jnp.mod(base + p, B)
         k = ht.keys[idx]
-        hit = ~done & (k == keys1)
+        key_hit = ~done & (k == keys1)
         empty = ~done & (k == EMPTY)          # probe chain ends → not found
-        vals = jnp.where(hit, ht.vals[idx], vals)
-        found = found | hit
-        done = done | hit | empty
+        v = ht.vals[idx]
+        vals = jnp.where(key_hit, v, vals)
+        found = found | (key_hit & (v >= 0))  # invalidated ⇒ not found
+        done = done | key_hit | empty
         return vals, found, done
 
     vals = jnp.full(keys1.shape, -1, jnp.int32)
@@ -70,6 +77,50 @@ def lookup(ht: HashTable, keys, max_probes: int = 16):
     vals, found, _ = jax.lax.fori_loop(0, max_probes, body,
                                        (vals, found, done))
     return vals, found
+
+
+def lookup_shard(shard_keys, shard_vals, queries, base: int,
+                 n_buckets_total: int, max_probes: int = 16):
+    """One memory server's contribution to a partitioned lookup (§5.2).
+
+    The bucket array is range-partitioned over memory servers exactly like
+    the record pool (``store.shard_table`` discipline): this shard holds
+    buckets ``[base, base + len(shard_keys))`` of the global array. Every
+    server walks the same global probe sequence and examines only its
+    resident buckets; combining across servers reconstructs :func:`lookup`
+    bit-exactly:
+
+      ``key_hit = any-OR``, ``val = sum`` (a stored key occupies exactly one
+      bucket, so at most one shard contributes), ``found = key_hit & val>=0``,
+      and the caller maps no-hit to ``val = -1``.
+
+    The early not-found-on-empty termination needs no cross-shard exchange:
+    under linear probing an insert claims the FIRST empty-or-same-key bucket
+    and :func:`delete` only invalidates values (keys are never removed), so
+    no stored key ever sits beyond an empty bucket on its probe chain —
+    scanning all ``max_probes`` positions finds exactly what the terminating
+    scan finds.
+
+    Returns ``(val_contrib [Q] int32, key_hit [Q] bool)``.
+    """
+    count = shard_keys.shape[0]
+    keys1 = jnp.asarray(queries, jnp.uint32) + jnp.uint32(1)
+    base_h = _hash(queries, n_buckets_total)
+
+    def body(p, carry):
+        vals, hit = carry
+        idx = jnp.mod(base_h + p, n_buckets_total)
+        loc = idx - base
+        inside = (loc >= 0) & (loc < count)
+        safe = jnp.where(inside, loc, 0)
+        here = inside & (shard_keys[safe] == keys1) & ~hit
+        vals = jnp.where(here, shard_vals[safe], vals)
+        return vals, hit | here
+
+    vals = jnp.zeros(keys1.shape, jnp.int32)
+    hit = jnp.zeros(keys1.shape, bool)
+    vals, hit = jax.lax.fori_loop(0, max_probes, body, (vals, hit))
+    return jnp.where(hit, vals, 0), hit
 
 
 def insert(ht: HashTable, keys, vals, mask=None, max_probes: int = 16):

@@ -95,6 +95,91 @@ class VisibleRead(NamedTuple):
     #                            region (a GC-survivor old version)
 
 
+# locate_visible source codes: which region serves the chosen version
+SRC_CURRENT = 0
+SRC_OLD = 1
+SRC_OVF = 2
+
+
+class VersionLoc(NamedTuple):
+    """Locator of the newest version visible under T_R — region + position.
+
+    The definitional §5.1 resolution order (current → old ring → overflow),
+    shared by :func:`read_visible` (which gathers header/payload through it)
+    and by the fused hash-probe kernel's oracle
+    (:func:`repro.kernels.hash_probe.ref.hash_probe_ref`), so the two can
+    never diverge. When ``found`` is False the locator still points at a
+    deterministic position (the newest overflow slot) — callers must gate on
+    ``found`` before trusting the payload, exactly like a GC'd snapshot read.
+    """
+    found: jnp.ndarray   # bool [Q]
+    src: jnp.ndarray     # int32 [Q] — SRC_CURRENT / SRC_OLD / SRC_OVF
+    pos: jnp.ndarray     # int32 [Q] — ring position (0 for SRC_CURRENT)
+
+
+def _ring_scan(region_hdr, next_ptr, slots, ts_vec, *, skip_sentinel: bool):
+    """Newest-first visibility scan of one circular version region — THE
+    selection rule of §5.1, shared by :func:`locate_visible` and
+    :func:`read_visible` so the fused kernel's oracle and the unfused
+    engine path cannot diverge. A version is usable iff visible(⟨i,t⟩, T_R)
+    and not deleted; with ``skip_sentinel`` (the old-version ring) a
+    never-written slot's zero/moved sentinel header — cts 0, thread 0,
+    moved=1 — is excluded even though cts 0 is always visible.
+
+    Returns ``(pos [Q,K], hdr [Q,K,2], ok [Q,K], first [Q], any [Q])``:
+    circular positions newest→oldest, the scanned headers, the usable mask,
+    argmax(ok) (= the newest usable version's age) and its validity.
+    """
+    K = region_hdr.shape[1]
+    nx = next_ptr[slots]                             # [Q]
+    ages = jnp.arange(K, dtype=jnp.int32)            # 0 = newest
+    pos = jnp.mod(nx[:, None] - 1 - ages[None, :], K)  # [Q, K]
+    h = region_hdr[slots[:, None], pos]              # [Q, K, 2]
+    ok = hdr_ops.visible(h, ts_vec) & ~hdr_ops.is_deleted(h)
+    if skip_sentinel:
+        is_sentinel = (hdr_ops.commit_ts(h) == 0) \
+            & (hdr_ops.thread_id(h) == 0) & hdr_ops.is_moved(h)
+        ok = ok & ~is_sentinel
+    return pos, h, ok, jnp.argmax(ok, axis=1), jnp.any(ok, axis=1)
+
+
+def locate_visible(tbl: VersionedTable, slots, ts_vec) -> VersionLoc:
+    """Headers-only §5.1 resolution: (1) current version; (2) old-version
+    ring, newest→oldest by circular position; (3) overflow ring."""
+    slots = jnp.asarray(slots, jnp.int32)
+    cur_h = tbl.cur_hdr[slots]
+    cur_ok = hdr_ops.visible(cur_h, ts_vec) & ~hdr_ops.is_deleted(cur_h)
+    pos, _, _, first, any_old = _ring_scan(
+        tbl.old_hdr, tbl.next_write, slots, ts_vec, skip_sentinel=True)
+    old_pos = jnp.take_along_axis(pos, first[:, None], axis=1)[:, 0]
+    opos, _, _, vfirst, any_ovf = _ring_scan(
+        tbl.ovf_hdr, tbl.ovf_next, slots, ts_vec, skip_sentinel=False)
+    ovf_pos = jnp.take_along_axis(opos, vfirst[:, None], axis=1)[:, 0]
+
+    src = jnp.where(cur_ok, SRC_CURRENT,
+                    jnp.where(any_old, SRC_OLD, SRC_OVF)).astype(jnp.int32)
+    loc_pos = jnp.where(cur_ok, 0, jnp.where(any_old, old_pos, ovf_pos))
+    return VersionLoc(found=cur_ok | any_old | any_ovf, src=src,
+                      pos=loc_pos.astype(jnp.int32))
+
+
+def gather_version(tbl: VersionedTable, slots, loc: VersionLoc):
+    """Fetch (hdr, data) of the version a :class:`VersionLoc` points at —
+    the paper's 'exactly one payload read follows' step: one gather per
+    region instead of materializing every ring version."""
+    slots = jnp.asarray(slots, jnp.int32)
+    cur_h, cur_d = read_current(tbl, slots)
+    old_h = tbl.old_hdr[slots, loc.pos]
+    old_d = tbl.old_data[slots, loc.pos]
+    ovf_h = tbl.ovf_hdr[slots, loc.pos]
+    ovf_d = tbl.ovf_data[slots, loc.pos]
+    is_cur = (loc.src == SRC_CURRENT)[:, None]
+    is_old = (loc.src == SRC_OLD)[:, None]
+    hdr = jnp.where(is_cur, cur_h, jnp.where(is_old, old_h, ovf_h))
+    data = jnp.where(is_cur, cur_d, jnp.where(is_old, old_d, ovf_d))
+    return hdr, data
+
+
 def read_visible(tbl: VersionedTable, slots, ts_vec) -> VisibleRead:
     """Find the newest version visible under T_R (paper §4.1 + §5.1).
 
@@ -102,40 +187,32 @@ def read_visible(tbl: VersionedTable, slots, ts_vec) -> VisibleRead:
     one read; (2) old-version buffer headers, newest→oldest by circular
     position; (3) overflow region. A version is usable if visible(⟨i,t⟩, T_R)
     and not deleted.
+
+    This is the *unfused* rendering: every ring version's header AND payload
+    is materialized before the selection — the batched-vectorized analogue
+    of reading whole version buffers. The fused hash-probe kernel
+    (``repro.kernels.hash_probe``) implements the same resolution via
+    :func:`locate_visible` + :func:`gather_version` — headers alone first,
+    then exactly one payload read (§5.1's stated discipline) — and
+    ``bench_kernels.py`` measures the gap. The two selections share the
+    visibility logic through :func:`locate_visible`'s contract and are
+    proven bit-identical in tests/test_kernels.py.
     """
     slots = jnp.asarray(slots, jnp.int32)
     cur_h, cur_d = read_current(tbl, slots)
     cur_ok = hdr_ops.visible(cur_h, ts_vec) & ~hdr_ops.is_deleted(cur_h)
 
     # ---- old-version circular buffer, scanned newest first -------------
-    K = tbl.n_old
-    nw = tbl.next_write[slots]                       # [Q]
-    ages = jnp.arange(K, dtype=jnp.int32)            # 0 = newest old version
-    pos = jnp.mod(nw[:, None] - 1 - ages[None, :], K)  # [Q, K]
-    oh = tbl.old_hdr[slots[:, None], pos]            # [Q, K, 2]
+    pos, oh, ok, first, any_old = _ring_scan(
+        tbl.old_hdr, tbl.next_write, slots, ts_vec, skip_sentinel=True)
     od = tbl.old_data[slots[:, None], pos]           # [Q, K, W]
-    ok = hdr_ops.visible(oh, ts_vec) & ~hdr_ops.is_deleted(oh)
-    # A never-written slot holds the zero header with moved=1 (sentinel); its
-    # cts is 0 which is visible — exclude slots that merely hold the moved
-    # sentinel AND have cts 0 AND thread 0 while the record has real history.
-    is_sentinel = (hdr_ops.commit_ts(oh) == 0) & (hdr_ops.thread_id(oh) == 0) \
-        & hdr_ops.is_moved(oh)
-    ok = ok & ~is_sentinel
-    first = jnp.argmax(ok, axis=1)                   # newest visible
-    any_old = jnp.any(ok, axis=1)
     old_h = jnp.take_along_axis(oh, first[:, None, None], axis=1)[:, 0]
     old_d = jnp.take_along_axis(od, first[:, None, None], axis=1)[:, 0]
 
     # ---- overflow region (oldest versions) ------------------------------
-    KO = tbl.ovf_hdr.shape[1]
-    on = tbl.ovf_next[slots]
-    oages = jnp.arange(KO, dtype=jnp.int32)
-    opos = jnp.mod(on[:, None] - 1 - oages[None, :], KO)
-    vh = tbl.ovf_hdr[slots[:, None], opos]
+    opos, vh, vok, vfirst, any_ovf = _ring_scan(
+        tbl.ovf_hdr, tbl.ovf_next, slots, ts_vec, skip_sentinel=False)
     vd = tbl.ovf_data[slots[:, None], opos]
-    vok = hdr_ops.visible(vh, ts_vec) & ~hdr_ops.is_deleted(vh)
-    vfirst = jnp.argmax(vok, axis=1)
-    any_ovf = jnp.any(vok, axis=1)
     ovf_h = jnp.take_along_axis(vh, vfirst[:, None, None], axis=1)[:, 0]
     ovf_d = jnp.take_along_axis(vd, vfirst[:, None, None], axis=1)[:, 0]
 

@@ -29,7 +29,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import cas, header as hdr_ops, mvcc
+from repro.core import cas, hashtable as ht, header as hdr_ops, mvcc
 from repro.core.mvcc import VersionedTable
 from repro.core.tsoracle import VectorOracle, VectorState
 
@@ -46,6 +46,21 @@ class TxnBatch(NamedTuple):
     read_mask: jnp.ndarray    # bool   [T, RS]
     write_ref: jnp.ndarray    # int32  [T, WS] — index into read-set
     write_mask: jnp.ndarray   # bool   [T, WS]
+
+
+class KeyedReads(NamedTuple):
+    """Key-addressed read-set annotation (§5.2 hash-index read path).
+
+    Where ``mask`` is set, the read's record slot is NOT taken from
+    ``TxnBatch.read_slots`` but resolved by probing the partitioned hash
+    index with ``keys[t, r]`` — the compute server addresses the record by
+    key with one one-sided index read, exactly Pilaf's get. Where the
+    directory misses (absent or invalidated key) the read reports
+    not-found — never a negative-slot gather — and the transaction aborts
+    via ``snapshot_miss`` like any vanished version.
+    """
+    keys: jnp.ndarray   # uint32 [T, RS]
+    mask: jnp.ndarray   # bool   [T, RS]
 
 
 class OpCounts(NamedTuple):
@@ -101,10 +116,13 @@ ComputeFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 # (read_hdr [T,RS,2], read_data [T,RS,W], rts_vec) -> new_data [T,WS,W]
 
 
+DIR_PROBE_BYTES = 8  # one §5.2 bucket-cluster read: uint32 key + int32 slot
+
+
 def count_ops(oracle, batch: TxnBatch, txn_found, from_current, n_installs,
               n_releases, n_committed, payload_width: int,
               payload_bytes: int = 0, n_txns=None,
-              active=None) -> OpCounts:
+              active=None, n_index_probes=0) -> OpCounts:
     """RDMA-op accounting for one round (shared by the single-shard path and
     :func:`repro.core.store.distributed_round`, so the two produce identical
     profiles for the cost model).
@@ -114,7 +132,9 @@ def count_ops(oracle, batch: TxnBatch, txn_found, from_current, n_installs,
     threads — only those fetch the timestamp vector). Defaults to the batch
     width. ``active`` masks the batch's read/write masks the same way the
     protocol does, so inactive lanes count no ops even when the caller did
-    not pre-mask the batch.
+    not pre-mask the batch. ``n_index_probes`` charges one extra one-sided
+    read per key-addressed record (the §5.2 hash-index probe that resolves
+    the slot before the record read).
     """
     T, RS = batch.read_slots.shape
     if n_txns is None:
@@ -130,22 +150,26 @@ def count_ops(oracle, batch: TxnBatch, txn_found, from_current, n_installs,
     return OpCounts(
         ts_reads=jnp.asarray(n_txns),
         ts_read_bytes=jnp.asarray(n_txns * vec_bytes),
-        record_reads=n_active_r + jnp.sum(~from_current & read_mask),
+        record_reads=n_active_r + jnp.sum(~from_current & read_mask)
+        + n_index_probes,
         cas_ops=n_active_w,
         writes=2 * n_installs + n_releases + n_committed,
         bytes_moved=(n_active_r + 2 * n_installs) * rec_bytes
-        + jnp.asarray(n_txns * vec_bytes),
+        + jnp.asarray(n_txns * vec_bytes)
+        + n_index_probes * DIR_PROBE_BYTES,
     )
 
 
 def count_readonly_ops(oracle, read_mask, from_current, n_txns,
-                       payload_width: int, payload_bytes: int = 0) -> OpCounts:
+                       payload_width: int, payload_bytes: int = 0,
+                       n_index_probes=0) -> OpCounts:
     """RDMA-op accounting for a round of *read-only* transactions.
 
     Read-only transactions never validate and never write under SI (§1.2 of
     the paper): one timestamp-vector fetch per transaction plus one one-sided
     read per record (old-version probes counted like the write path's), zero
-    CAS and zero installs. Shared by the single-shard and the sharded
+    CAS and zero installs; ``n_index_probes`` charges the §5.2 hash-index
+    probes of key-addressed reads. Shared by the single-shard and the sharded
     (:func:`repro.core.store.distributed_readonly_round`) paths.
     """
     n_reads = jnp.sum(read_mask)
@@ -154,10 +178,12 @@ def count_readonly_ops(oracle, read_mask, from_current, n_txns,
     return OpCounts(
         ts_reads=jnp.asarray(n_txns),
         ts_read_bytes=jnp.asarray(n_txns * vec_bytes),
-        record_reads=n_reads + jnp.sum(~from_current & read_mask),
+        record_reads=n_reads + jnp.sum(~from_current & read_mask)
+        + n_index_probes,
         cas_ops=jnp.asarray(0),
         writes=jnp.asarray(0),
-        bytes_moved=n_reads * rec_bytes + jnp.asarray(n_txns * vec_bytes),
+        bytes_moved=n_reads * rec_bytes + jnp.asarray(n_txns * vec_bytes)
+        + n_index_probes * DIR_PROBE_BYTES,
     )
 
 
@@ -171,6 +197,9 @@ def run_round(
     rts_vec: Optional[jnp.ndarray] = None,
     payload_bytes: int = 0,
     active: Optional[jnp.ndarray] = None,
+    directory: Optional[ht.HashTable] = None,
+    keyed: Optional[KeyedReads] = None,
+    dir_max_probes: int = 16,
 ) -> RoundResult:
     """Execute one vectorized round of the SI protocol.
 
@@ -180,6 +209,14 @@ def run_round(
     protocol no-ops — no reads counted, no CAS issued, no commit published
     (their T_R slot is not bumped) — so sub-rounds compose into exactly one
     transaction per thread per round.
+
+    ``directory`` + ``keyed`` switch the marked reads to the §5.2
+    key-addressed path: their record slots are resolved by probing the hash
+    index (one extra one-sided read each, op-counted) instead of taken from
+    ``batch.read_slots``; writes referencing a key-addressed read validate
+    and install at the *resolved* slot. A directory miss behaves exactly
+    like a GC'd version: the read reports not-found and the transaction
+    aborts with ``snapshot_miss``.
     """
     T, RS = batch.read_slots.shape
     WS = batch.write_ref.shape[1]
@@ -191,12 +228,31 @@ def run_round(
     if rts_vec is None:
         rts_vec = oracle.read(state)
 
-    # ---- 2. visible reads -------------------------------------------------
+    # ---- 2. key resolution (§5.2) + visible reads -------------------------
     flat_slots = batch.read_slots.reshape(-1)
+    if directory is not None:
+        assert keyed is not None, "key-addressed mode needs KeyedReads"
+        kvals, kfound = ht.lookup(directory, keyed.keys.reshape(-1),
+                                  max_probes=dir_max_probes)
+        km = keyed.mask.reshape(-1)
+        flat_slots = jnp.where(km, jnp.where(kfound, kvals, 0), flat_slots)
+        key_ok = ~km | kfound
+        n_index_probes = jnp.sum(keyed.mask & batch.read_mask
+                                 & active[:, None])
+    else:
+        key_ok = jnp.ones(flat_slots.shape, bool)
+        n_index_probes = 0
+    read_slots = flat_slots.reshape(T, RS)    # resolved slots, used below
     vr = mvcc.read_visible(table, flat_slots, rts_vec)
     read_hdr = vr.hdr.reshape(T, RS, 2)
     read_data = vr.data.reshape(T, RS, W)
-    found = vr.found.reshape(T, RS) | ~batch.read_mask
+    # a directory miss resolves to the safe slot 0 — mask its visibility
+    # outcomes wholesale so the miss is not telemetried (or op-counted) as
+    # a served read of record 0
+    read_found = (vr.found & key_ok).reshape(T, RS)
+    from_current = (vr.from_current & key_ok).reshape(T, RS)
+    from_ovf = (vr.from_ovf & key_ok).reshape(T, RS)
+    found = read_found | ~batch.read_mask
     txn_found = jnp.all(found, axis=1)
 
     # ---- 3. transaction logic (local to the compute server) --------------
@@ -217,7 +273,7 @@ def run_round(
 
     # ---- 5. validate + lock (one CAS per write record) --------------------
     wref = jnp.clip(batch.write_ref, 0, RS - 1)
-    write_slots = jnp.take_along_axis(batch.read_slots, wref, axis=1)
+    write_slots = jnp.take_along_axis(read_slots, wref, axis=1)
     expected = jnp.take_along_axis(read_hdr, wref[:, :, None], axis=1)
     req_active = (batch.write_mask
                   & (txn_found & active)[:, None]).reshape(-1)
@@ -259,13 +315,13 @@ def run_round(
     state = oracle.make_visible(state, batch.tid, cts, committed)
 
     # ---- op accounting -----------------------------------------------------
-    ops = count_ops(oracle, batch, txn_found, vr.from_current.reshape(T, RS),
+    ops = count_ops(oracle, batch, txn_found, from_current,
                     jnp.sum(do_install), jnp.sum(release_mask),
                     jnp.sum(committed), W, payload_bytes,
-                    n_txns=jnp.sum(active.astype(jnp.int32)), active=active)
-    vis = vis_stats(batch.read_mask, vr.found.reshape(T, RS),
-                    vr.from_current.reshape(T, RS),
-                    vr.from_ovf.reshape(T, RS), active)
+                    n_txns=jnp.sum(active.astype(jnp.int32)), active=active,
+                    n_index_probes=n_index_probes)
+    vis = vis_stats(batch.read_mask, read_found, from_current, from_ovf,
+                    active)
     del inst_mask
     return RoundResult(table=table, oracle_state=state, committed=committed,
                        snapshot_miss=~txn_found, read_data=read_data, ops=ops,

@@ -25,7 +25,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
-from repro.core import cas, gc as gc_ops, header as hdr_ops, mvcc
+from repro.core import cas, gc as gc_ops, hashtable as ht, header as hdr_ops, \
+    mvcc
 from repro.core.catalog import Catalog
 from repro.core.mvcc import VersionedTable
 from repro.core.si import TxnBatch
@@ -100,6 +101,48 @@ def allocate(extends: ExtendState, tid, region, n, region_base, extend_size,
 
 
 # ---------------------------------------------------------------------------
+# §5.2 hash index: the store-level directory over the record pool
+# ---------------------------------------------------------------------------
+def build_directory(keys, slots, n_buckets: int, *,
+                    max_probes: int = 16) -> ht.HashTable:
+    """Bulk-build the key → record-slot hash index (paper §5.2).
+
+    Uses the same ``max_probes`` the lookups will use, so every entry that
+    places is guaranteed findable. Probe exhaustion
+    (``hashtable.insert``'s ``placed_at == -1``) is a *load* error, not a
+    condition a caller may silently drop — an unplaced key would make every
+    later lookup of it report not-found and the engine would treat a loaded
+    record as nonexistent. Raise instead; callers size ``n_buckets`` up.
+    """
+    keys = jnp.asarray(keys, jnp.uint32)
+    slots = jnp.asarray(slots, jnp.int32)
+    table = ht.init(n_buckets)
+    table, placed = ht.insert(table, keys, slots, max_probes=max_probes)
+    n_dropped = int(jnp.sum(placed < 0))
+    if n_dropped:
+        raise ValueError(
+            f"directory build dropped {n_dropped}/{keys.shape[0]} keys: "
+            f"probe chains exceeded max_probes={max_probes} at "
+            f"{n_buckets} buckets (load factor "
+            f"{keys.shape[0] / n_buckets:.2f}) — grow the bucket array")
+    return table
+
+
+def shard_directory(mesh: Mesh, axis: str, directory: ht.HashTable):
+    """Range-partition the bucket array over the memory-server mesh axis —
+    the §5.2 placement (``hashtable.partition_of`` names the owner of a
+    key's home bucket under this split). The bucket count must divide
+    evenly, as with :func:`pad_table` for records."""
+    n_shards = mesh.shape[axis]
+    if directory.n_buckets % n_shards:
+        raise ValueError(f"directory has {directory.n_buckets} buckets, not "
+                         f"divisible over {n_shards} memory servers")
+    def put(x):
+        return jax.device_put(x, NamedSharding(mesh, P(axis)))
+    return ht.HashTable(keys=put(directory.keys), vals=put(directory.vals))
+
+
+# ---------------------------------------------------------------------------
 # Distributed execution: one SI round under shard_map
 # ---------------------------------------------------------------------------
 class DistRoundOut(NamedTuple):
@@ -131,7 +174,8 @@ def _local_slots(slots, base, count):
 
 def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
                       compute_fn: Callable, shard_records: int, *,
-                      shard_vector: bool = False):
+                      shard_vector: bool = False, n_dir_buckets: int = 0,
+                      dir_max_probes: int = 16):
     """Build a jittable ``round(table_sharded, vec, batch, aux)`` executor.
 
     ``table_sharded``: VersionedTable with leading record axis sharded over
@@ -154,6 +198,18 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
     back only its own part. Semantics are identical to the replicated vector
     — the partitioning is a placement decision, exactly as in the paper.
 
+    ``n_dir_buckets > 0`` enables the §5.2 key-addressed read path: the hash
+    index's bucket array is range-partitioned over the same axis (each
+    memory server owns ``n_dir_buckets / n_shards`` contiguous buckets, see
+    :func:`shard_directory`) and ``round_fn`` grows keyword arguments
+    ``directory`` (the sharded :class:`~repro.core.hashtable.HashTable`),
+    ``read_keys`` and ``key_mask`` (replicated ``[T, RS]``): marked reads
+    resolve their record slot by probing the partitioned directory — every
+    server walks the probe sequence over its resident buckets
+    (:func:`~repro.core.hashtable.lookup_shard`) and an all-reduce
+    reconstructs the lookup — then validate/install at the resolved slot,
+    bit-identical to :func:`repro.core.si.run_round`'s key mode.
+
     Returns ``(round_fn, n_shards)`` with
     ``round_fn(table, vec, batch, aux, active=None) -> (table, vec,
     DistRoundOut)``. ``active`` (bool [T], default all-true) marks the
@@ -168,9 +224,12 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
                 f"shard_vector needs n_slots ({oracle.n_slots}) divisible by "
                 f"the mesh axis ({n_shards})")
         part_slots = oracle.n_slots // n_shards
+    if n_dir_buckets and n_dir_buckets % n_shards:
+        raise ValueError(f"n_dir_buckets ({n_dir_buckets}) must divide over "
+                         f"the mesh axis ({n_shards})")
 
     def local_round(table: VersionedTable, vec: jnp.ndarray, batch: TxnBatch,
-                    aux, active):
+                    aux, active, *dir_args):
         shard_id = jax.lax.axis_index(axis)
         base = shard_id * shard_records
         T, RS = batch.read_slots.shape
@@ -181,8 +240,26 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         if shard_vector:
             vec = jax.lax.all_gather(vec, axis, tiled=True)
 
-        # ---- 2. one-sided visible reads (masked local + all-reduce) ------
-        flat = batch.read_slots.reshape(-1)
+        # ---- 2a. key resolution against the partitioned directory (§5.2) -
+        if n_dir_buckets:
+            dir_keys, dir_vals, read_keys, key_mask = dir_args
+            dir_base = shard_id * (n_dir_buckets // n_shards)
+            vsum, khit = ht.lookup_shard(
+                dir_keys, dir_vals, read_keys.reshape(-1), dir_base,
+                n_dir_buckets, max_probes=dir_max_probes)
+            vsum = jax.lax.psum(vsum, axis)
+            khit = jax.lax.psum(khit.astype(jnp.int32), axis) > 0
+            kfound = khit & (vsum >= 0)
+            km = key_mask.reshape(-1)
+            flat = jnp.where(km, jnp.where(kfound, vsum, 0),
+                             batch.read_slots.reshape(-1))
+            key_ok = ~km | kfound
+        else:
+            flat = batch.read_slots.reshape(-1)
+            key_ok = jnp.ones(flat.shape, bool)
+        read_slots = flat.reshape(T, RS)     # resolved slots, used below
+
+        # ---- 2b. one-sided visible reads (masked local + all-reduce) -----
         loc, inside = _local_slots(flat, base, shard_records)
         safe = jnp.where(inside, loc, 0)
         vr = mvcc.read_visible(table, safe, vec)
@@ -193,12 +270,15 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         fovf = jnp.where(inside, vr.from_ovf, False)
         rh = jax.lax.psum(rh, axis)
         rd = jax.lax.psum(rd, axis)
-        read_found = (jax.lax.psum(fnd.astype(jnp.int32), axis) > 0) \
-            .reshape(T, RS)
-        from_current = (jax.lax.psum(fcur.astype(jnp.int32), axis) > 0) \
-            .reshape(T, RS)
-        from_ovf = (jax.lax.psum(fovf.astype(jnp.int32), axis) > 0) \
-            .reshape(T, RS)
+        # key_ok masks a directory miss's visibility outcomes wholesale
+        # (the miss resolved to the safe slot 0) — identically to
+        # si.run_round, so the two paths' telemetry cannot diverge
+        read_found = ((jax.lax.psum(fnd.astype(jnp.int32), axis) > 0)
+                      & key_ok).reshape(T, RS)
+        from_current = ((jax.lax.psum(fcur.astype(jnp.int32), axis) > 0)
+                        & key_ok).reshape(T, RS)
+        from_ovf = ((jax.lax.psum(fovf.astype(jnp.int32), axis) > 0)
+                    & key_ok).reshape(T, RS)
         read_hdr = rh.reshape(T, RS, 2).astype(jnp.uint32)
         read_data = rd.reshape(T, RS, W)
         found = read_found | ~batch.read_mask
@@ -220,7 +300,7 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
 
         # ---- 5. validate+lock on the owning shard ------------------------
         wref = jnp.clip(batch.write_ref, 0, RS - 1)
-        wslots = jnp.take_along_axis(batch.read_slots, wref, axis=1)
+        wslots = jnp.take_along_axis(read_slots, wref, axis=1)
         expected = jnp.take_along_axis(read_hdr, wref[:, :, None], axis=1)
         req_slots_g = wslots.reshape(-1)
         wloc, winside = _local_slots(req_slots_g, base, shard_records)
@@ -285,14 +365,20 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         committed=P(), snapshot_miss=P(), read_data=P(), txn_found=P(),
         from_current=P(), from_ovf=P(), read_found=P(), n_installs=P(),
         n_releases=P())
+    dir_specs = (P(axis), P(axis), P(), P()) if n_dir_buckets else ()
     fn = jax.jit(shard_map(local_round, mesh=mesh,
-                           in_specs=(tbl_spec, vec_spec, batch_spec, P(), P()),
+                           in_specs=(tbl_spec, vec_spec, batch_spec, P(), P())
+                           + dir_specs,
                            out_specs=(tbl_spec, vec_spec, out_spec),
                            check_vma=False))
 
-    def round_fn(table, vec, batch, aux, active=None):
+    def round_fn(table, vec, batch, aux, active=None, *, directory=None,
+                 read_keys=None, key_mask=None):
         if active is None:
             active = jnp.ones((batch.tid.shape[0],), bool)
+        if n_dir_buckets:
+            return fn(table, vec, batch, aux, active, directory.keys,
+                      directory.vals, read_keys, key_mask)
         return fn(table, vec, batch, aux, active)
 
     return round_fn, n_shards
@@ -306,7 +392,9 @@ class ReadOnlyOut(NamedTuple):
 
 
 def distributed_readonly_round(mesh: Mesh, axis: str, shard_records: int, *,
-                               shard_vector: bool = False):
+                               shard_vector: bool = False,
+                               n_dir_buckets: int = 0,
+                               dir_max_probes: int = 16):
     """Build a jittable snapshot-read executor over the sharded pool.
 
     Read-only transactions never validate under SI (paper §1.2): their whole
@@ -316,27 +404,53 @@ def distributed_readonly_round(mesh: Mesh, axis: str, shard_records: int, *,
     combined with an all-reduce, no CAS, no install, no visibility write; the
     table and vector pass through untouched.
 
+    ``n_dir_buckets > 0`` adds the §5.2 key-addressed path (same contract as
+    :func:`distributed_round`): ``ro_fn`` grows keyword arguments
+    ``directory``/``read_keys``/``key_mask``, marked reads resolve their
+    slots by probing the partitioned bucket array, and a directory miss
+    reports not-found.
+
     Returns ``ro_fn(table, vec, read_slots, read_mask) -> ReadOnlyOut`` with
     ``read_slots`` int32 [T, RS] and ``read_mask`` bool [T, RS] replicated.
     """
+    n_shards = mesh.shape[axis]
+    if n_dir_buckets and n_dir_buckets % n_shards:
+        raise ValueError(f"n_dir_buckets ({n_dir_buckets}) must divide over "
+                         f"the mesh axis ({n_shards})")
 
     def local_read(table: VersionedTable, vec: jnp.ndarray, read_slots,
-                   read_mask):
+                   read_mask, *dir_args):
         shard_id = jax.lax.axis_index(axis)
         base = shard_id * shard_records
         T, RS = read_slots.shape
         W = table.payload_width
         if shard_vector:
             vec = jax.lax.all_gather(vec, axis, tiled=True)
-        flat = read_slots.reshape(-1)
+        if n_dir_buckets:
+            dir_keys, dir_vals, read_keys, key_mask = dir_args
+            dir_base = shard_id * (n_dir_buckets // n_shards)
+            vsum, khit = ht.lookup_shard(
+                dir_keys, dir_vals, read_keys.reshape(-1), dir_base,
+                n_dir_buckets, max_probes=dir_max_probes)
+            vsum = jax.lax.psum(vsum, axis)
+            khit = jax.lax.psum(khit.astype(jnp.int32), axis) > 0
+            kfound = khit & (vsum >= 0)
+            km = key_mask.reshape(-1)
+            flat = jnp.where(km, jnp.where(kfound, vsum, 0),
+                             read_slots.reshape(-1))
+            key_ok = ~km | kfound
+        else:
+            flat = read_slots.reshape(-1)
+            key_ok = jnp.ones(flat.shape, bool)
         loc, inside = _local_slots(flat, base, shard_records)
         vr = mvcc.read_visible(table, jnp.where(inside, loc, 0), vec)
         rd = jax.lax.psum(jnp.where(inside[:, None], vr.data, 0), axis)
-        fnd = jax.lax.psum(
-            jnp.where(inside, vr.found, False).astype(jnp.int32), axis) > 0
-        fcur = jax.lax.psum(
+        fnd = (jax.lax.psum(
+            jnp.where(inside, vr.found, False).astype(jnp.int32), axis) > 0) \
+            & key_ok
+        fcur = (jax.lax.psum(
             jnp.where(inside, vr.from_current, False).astype(jnp.int32),
-            axis) > 0
+            axis) > 0) & key_ok
         return ReadOnlyOut(
             read_data=rd.reshape(T, RS, W),
             found=fnd.reshape(T, RS) | ~read_mask,
@@ -348,10 +462,23 @@ def distributed_readonly_round(mesh: Mesh, axis: str, shard_records: int, *,
         ovf_next=P(axis))
     vec_spec = P(axis) if shard_vector else P()
     out_spec = ReadOnlyOut(read_data=P(), found=P(), from_current=P())
-    fn = shard_map(local_read, mesh=mesh,
-                   in_specs=(tbl_spec, vec_spec, P(), P()),
-                   out_specs=out_spec, check_vma=False)
-    return jax.jit(fn)
+    dir_specs = (P(axis), P(axis), P(), P()) if n_dir_buckets else ()
+    fn = jax.jit(shard_map(local_read, mesh=mesh,
+                           in_specs=(tbl_spec, vec_spec, P(), P())
+                           + dir_specs,
+                           out_specs=out_spec, check_vma=False))
+    if not n_dir_buckets:
+        return fn
+
+    def ro_fn(table, vec, read_slots, read_mask, *, directory=None,
+              read_keys=None, key_mask=None):
+        if read_keys is None:       # slot-addressed call on a key engine
+            read_keys = jnp.zeros(read_slots.shape, jnp.uint32)
+            key_mask = jnp.zeros(read_slots.shape, bool)
+        return fn(table, vec, read_slots, read_mask, directory.keys,
+                  directory.vals, read_keys, key_mask)
+
+    return ro_fn
 
 
 # ---------------------------------------------------------------------------

@@ -22,8 +22,8 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import gc as gc_ops, header as hdr_ops, locality, mvcc, \
-    netmodel, rangeindex as ri, si, store
+from repro.core import gc as gc_ops, hashtable as ht, header as hdr_ops, \
+    locality, mvcc, netmodel, rangeindex as ri, si, store
 from repro.core.catalog import Catalog
 from repro.core.si import TxnBatch
 from repro.core.tsoracle import VectorOracle, VectorState
@@ -60,6 +60,8 @@ class TPCCConfig:
     n_old_versions: int = 2
     n_overflow: int = 2
     layout: str = "table_major"      # or "warehouse_major" (§7.3 locality)
+    key_addressed: bool = False      # §5.2: resolve item/stock/customer
+    #   reads through the hash index instead of analytic slots
 
 
 class TPCCLayout(NamedTuple):
@@ -98,6 +100,9 @@ class TPCCState(NamedTuple):
     nam: store.NAMStore
     order_index: ri.RangeIndex
     hist_cursor: jnp.ndarray    # int32 [n_threads]
+    directory: Optional[ht.HashTable] = None   # §5.2 hash index over the
+    #   item/stock/customer records (built iff cfg.key_addressed); static
+    #   for the run — these tables are updated in place, never re-slotted
 
 
 def make_layout(cfg: TPCCConfig) -> TPCCLayout:
@@ -225,6 +230,80 @@ def order_key(w, d, o_id):
     return ((w * DISTRICTS + d) * MAX_O_PER_DISTRICT + o_id).astype(jnp.uint32)
 
 
+# --------------------------------------------------- §5.2 hash directory ----
+# Key encodings for the hash index: per-table tag in the top bits, dense
+# rank below. The directory's key space is independent of the range index's.
+DIR_TAG_STOCK = jnp.uint32(1 << 29)
+DIR_TAG_ITEM = jnp.uint32(2 << 29)
+DIR_TAG_CUSTOMER = jnp.uint32(3 << 29)
+DIR_PROBES = 32   # shared by build + every lookup (build guarantees
+#                   placement distance < DIR_PROBES, see store.build_directory)
+
+
+def stock_key(cfg: TPCCConfig, w, i):
+    return DIR_TAG_STOCK | (jnp.asarray(w, jnp.uint32) * cfg.n_items
+                            + jnp.asarray(i, jnp.uint32))
+
+
+def item_key(cfg: TPCCConfig, lay: TPCCLayout, w, i):
+    """Item lookup key. The warehouse-major layout replicates the read-only
+    item table per warehouse (§7.3) — the key names the executing
+    warehouse's replica; table-major has one item table, keyed by item."""
+    if lay.mode == "warehouse_major":
+        return DIR_TAG_ITEM | (jnp.asarray(w, jnp.uint32) * cfg.n_items
+                               + jnp.asarray(i, jnp.uint32))
+    return DIR_TAG_ITEM | jnp.asarray(i, jnp.uint32)
+
+
+def customer_key(cfg: TPCCConfig, w, d, c):
+    rank = (jnp.asarray(w, jnp.uint32) * DISTRICTS + jnp.asarray(d, jnp.uint32)) \
+        * cfg.customers_per_district + jnp.asarray(c, jnp.uint32)
+    return DIR_TAG_CUSTOMER | rank
+
+
+def directory_buckets(cfg: TPCCConfig, lay: TPCCLayout) -> int:
+    """Bucket-array size of the TPC-C hash index: next power of two ≥ 2× the
+    entry count (load factor ≤ 0.5, Pilaf's regime) — a power of two also
+    divides evenly over any power-of-two memory-server mesh."""
+    items = cfg.n_warehouses * cfg.n_items \
+        if lay.mode == "warehouse_major" else cfg.n_items
+    entries = items + cfg.n_warehouses * cfg.n_items \
+        + cfg.n_warehouses * DISTRICTS * cfg.customers_per_district
+    b = 64
+    while b < 2 * entries:
+        b *= 2
+    return b
+
+
+def build_tpcc_directory(cfg: TPCCConfig, lay: TPCCLayout) -> ht.HashTable:
+    """Load the §5.2 hash index over every item/stock/customer record.
+
+    Built once at load time from the same slot math the loader uses; from
+    then on the key-addressed read path resolves slots exclusively through
+    it (the slot functions remain the locality-accounting oracle)."""
+    W_, I, D, C = cfg.n_warehouses, cfg.n_items, DISTRICTS, \
+        cfg.customers_per_district
+    wi_w = jnp.repeat(jnp.arange(W_), I)
+    wi_i = jnp.tile(jnp.arange(I), W_)
+    keys = [stock_key(cfg, wi_w, wi_i)]
+    slots = [s_slot(lay, cfg, wi_w, wi_i)]
+    if lay.mode == "warehouse_major":
+        keys.append(item_key(cfg, lay, wi_w, wi_i))
+        slots.append(i_slot(lay, wi_i, wi_w))
+    else:
+        keys.append(item_key(cfg, lay, 0, jnp.arange(I)))
+        slots.append(i_slot(lay, jnp.arange(I)))
+    cw = jnp.repeat(jnp.arange(W_), D * C)
+    cd = jnp.tile(jnp.repeat(jnp.arange(D), C), W_)
+    cc = jnp.tile(jnp.arange(C), W_ * D)
+    keys.append(customer_key(cfg, cw, cd, cc))
+    slots.append(c_slot(lay, cfg, cw, cd, cc))
+    return store.build_directory(
+        jnp.concatenate(keys), jnp.concatenate([jnp.asarray(s, jnp.int32)
+                                                for s in slots]),
+        directory_buckets(cfg, lay), max_probes=DIR_PROBES)
+
+
 # ---------------------------------------------------------------- loader ----
 def init_tpcc(cfg: TPCCConfig, oracle: VectorOracle,
               key: jax.Array) -> Tuple[TPCCLayout, TPCCState]:
@@ -275,8 +354,10 @@ def init_tpcc(cfg: TPCCConfig, oracle: VectorOracle,
     idx = ri.build(jnp.zeros((0,), jnp.uint32), jnp.zeros((0,), jnp.int32),
                    capacity=cfg.n_threads * cfg.orders_per_thread,
                    delta_capacity=4 * cfg.n_threads)
+    directory = build_tpcc_directory(cfg, lay) if cfg.key_addressed else None
     return lay, TPCCState(nam=nam, order_index=idx,
-                          hist_cursor=jnp.zeros((cfg.n_threads,), jnp.int32))
+                          hist_cursor=jnp.zeros((cfg.n_threads,), jnp.int32),
+                          directory=directory)
 
 
 def _insert_install(tbl, slots, tid_slots, cts, data, mask):
@@ -297,14 +378,25 @@ def _active_or_ones(T: int, active):
     return jnp.ones((T,), bool) if active is None else active
 
 
-def _dist_ops(oracle, batch: TxnBatch, out, tbl, active) -> si.OpCounts:
+def _n_probes(batch: TxnBatch, keyed, active):
+    """§5.2 index probes issued this round — the identical expression
+    :func:`si.run_round` evaluates, so both paths charge the same."""
+    if keyed is None:
+        return 0
+    act = _active_or_ones(batch.tid.shape[0], active)
+    return jnp.sum(keyed.mask & batch.read_mask & act[:, None])
+
+
+def _dist_ops(oracle, batch: TxnBatch, out, tbl, active,
+              keyed=None) -> si.OpCounts:
     """Op accounting of one distributed round — the exact
     :func:`si.count_ops` call the single-shard path makes, shared by every
     ``*_round_distributed`` so the accounting cannot diverge per type."""
     return si.count_ops(oracle, batch, out.txn_found, out.from_current,
                         out.n_installs, out.n_releases,
                         jnp.sum(out.committed), tbl.payload_width,
-                        n_txns=_n_active(batch, active), active=active)
+                        n_txns=_n_active(batch, active), active=active,
+                        n_index_probes=_n_probes(batch, keyed, active))
 
 
 def _dist_vis(batch: TxnBatch, out, active) -> si.VisStats:
@@ -328,12 +420,20 @@ class NewOrderResult(NamedTuple):
 
 def _neworder_batch(cfg: TPCCConfig, lay: TPCCLayout,
                     inp: workload.NewOrderInputs,
-                    active: Optional[jnp.ndarray] = None) -> TxnBatch:
+                    active: Optional[jnp.ndarray] = None):
     """Read-set (RS=33): [district, warehouse, customer, item*15, stock*15];
     write-set (WS=16): district (d_next_o_id++) + up to 15 stocks.
 
     ``active`` masks the threads running a new-order this round (mixed-mix
-    sub-round); inactive threads get all-false read/write masks."""
+    sub-round); inactive threads get all-false read/write masks.
+
+    Returns ``(batch, keyed)``: with ``cfg.key_addressed`` the item and
+    stock reads are annotated with their §5.2 index keys
+    (:class:`~repro.core.si.KeyedReads`) and the engine resolves those slots
+    through the hash directory — ``batch.read_slots`` still carries the
+    analytic slots for the key lanes, but only as the locality-accounting
+    oracle: the protocol never reads them where ``keyed.mask`` is set.
+    ``keyed`` is None in slot-addressed mode."""
     T = inp.w_id.shape[0]
     act = _active_or_ones(T, active)
     line = jnp.arange(MAX_OL)[None, :]
@@ -352,9 +452,19 @@ def _neworder_batch(cfg: TPCCConfig, lay: TPCCLayout,
         [jnp.zeros((T, 1), jnp.int32), 18 + jnp.broadcast_to(line, (T, MAX_OL))],
         axis=1)
     write_mask = jnp.concatenate([act[:, None], line_mask], axis=1)
-    return TxnBatch(tid=jnp.arange(T, dtype=jnp.int32),
-                    read_slots=read_slots, read_mask=read_mask,
-                    write_ref=write_ref, write_mask=write_mask)
+    batch = TxnBatch(tid=jnp.arange(T, dtype=jnp.int32),
+                     read_slots=read_slots, read_mask=read_mask,
+                     write_ref=write_ref, write_mask=write_mask)
+    keyed = None
+    if cfg.key_addressed:
+        ikeys = item_key(cfg, lay, inp.w_id[:, None], inp.item_ids)
+        skeys = stock_key(cfg, inp.supply_w, inp.item_ids)
+        keyed = si.KeyedReads(
+            keys=jnp.concatenate(
+                [jnp.zeros((T, 3), jnp.uint32), ikeys, skeys], axis=1),
+            mask=jnp.concatenate(
+                [jnp.zeros((T, 3), bool), line_mask, line_mask], axis=1))
+    return batch, keyed
 
 
 def _neworder_new_data(rd, inp: workload.NewOrderInputs):
@@ -434,17 +544,19 @@ def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                    rts_vec=None, round_no=0, active=None) -> NewOrderResult:
     """One vectorized round of new-order transactions through SI
     (single-shard reference path)."""
-    batch = _neworder_batch(cfg, lay, inp, active)
+    batch, keyed = _neworder_batch(cfg, lay, inp, active)
     out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
                        lambda rh, rd, vec: _neworder_new_data(rd, inp),
-                       rts_vec=rts_vec, active=active)
+                       rts_vec=rts_vec, active=active,
+                       directory=st.directory if keyed is not None else None,
+                       keyed=keyed, dir_max_probes=DIR_PROBES)
     tbl, idx, extends, o_id = _neworder_inserts(
         cfg, lay, st, oracle, out.table, out.oracle_state.vec, out.committed,
         out.read_data, inp, round_no)
     nam = st.nam._replace(table=tbl, oracle_state=out.oracle_state,
                           extends=extends)
     return NewOrderResult(
-        state=TPCCState(nam=nam, order_index=idx, hist_cursor=st.hist_cursor),
+        state=st._replace(nam=nam, order_index=idx),
         committed=out.committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
         ops=out.ops, batch=batch, vis=out.vis)
 
@@ -467,6 +579,8 @@ class DistEngine(NamedTuple):
     gc_fn: Optional[Callable] = None   # per-shard §5.3 GC sweep
     #   (store.distributed_gc_round executor; drivers call it on their
     #   gc_interval schedule with store.init_shard_logs state)
+    n_dir_buckets: int = 0             # §5.2 partitioned hash index size
+    #   (0 = slot-addressed engine; >0 = round_fn takes directory/read_keys)
 
     @property
     def placement(self) -> locality.Placement:
@@ -479,26 +593,33 @@ def make_distributed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
                             shard_vector: bool = False) -> DistEngine:
     n_shards = mesh.shape[axis]
     shard_records = -(-lay.catalog.total_records // n_shards)
+    n_dir = directory_buckets(cfg, lay) if cfg.key_addressed else 0
     round_fn, _ = store.distributed_round(
         mesh, axis, oracle,
         lambda rh, rd, vec, aux: _neworder_new_data(rd, aux),
-        shard_records, shard_vector=shard_vector)
+        shard_records, shard_vector=shard_vector, n_dir_buckets=n_dir,
+        dir_max_probes=DIR_PROBES)
     gc_fn = store.distributed_gc_round(mesh, axis, shard_vector=shard_vector)
     return DistEngine(round_fn=round_fn, mesh=mesh, axis=axis,
                       n_shards=n_shards, shard_records=shard_records,
-                      shard_vector=shard_vector, gc_fn=gc_fn)
+                      shard_vector=shard_vector, gc_fn=gc_fn,
+                      n_dir_buckets=n_dir)
 
 
 def distribute_state(engine: DistEngine, st: TPCCState) -> TPCCState:
-    """Pad + range-partition the record pool (and optionally T_R) over the
-    mesh: the loaded single-host state becomes the NAM deployment."""
+    """Pad + range-partition the record pool (and optionally T_R, and the
+    §5.2 hash index's bucket array) over the mesh: the loaded single-host
+    state becomes the NAM deployment."""
     tbl, _ = store.pad_table(st.nam.table, engine.n_shards)
     tbl = store.shard_table(engine.mesh, engine.axis, tbl)
     vec = st.nam.oracle_state.vec
     if engine.shard_vector:
         vec = store.shard_vector(engine.mesh, engine.axis, vec)
+    directory = st.directory
+    if directory is not None and engine.n_dir_buckets:
+        directory = store.shard_directory(engine.mesh, engine.axis, directory)
     return st._replace(nam=st.nam._replace(
-        table=tbl, oracle_state=VectorState(vec=vec)))
+        table=tbl, oracle_state=VectorState(vec=vec)), directory=directory)
 
 
 class MixedEngine(NamedTuple):
@@ -548,6 +669,10 @@ class MixedEngine(NamedTuple):
         return self.base.gc_fn
 
     @property
+    def n_dir_buckets(self) -> int:
+        return self.base.n_dir_buckets
+
+    @property
     def placement(self) -> locality.Placement:
         return self.base.placement
 
@@ -567,8 +692,9 @@ def make_mixed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
         mesh, axis, oracle,
         lambda rh, rd, vec, aux: _delivery_new_data(rd, aux),
         base.shard_records, shard_vector=shard_vector)
-    ro_fn = store.distributed_readonly_round(mesh, axis, base.shard_records,
-                                             shard_vector=shard_vector)
+    ro_fn = store.distributed_readonly_round(
+        mesh, axis, base.shard_records, shard_vector=shard_vector,
+        n_dir_buckets=base.n_dir_buckets, dir_max_probes=DIR_PROBES)
     return MixedEngine(base=base, payment_fn=pay_fn, delivery_fn=del_fn,
                        readonly_fn=ro_fn)
 
@@ -581,17 +707,23 @@ def neworder_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
     """One new-order round through :func:`store.distributed_round` — the
     multi-memory-server rendering of :func:`neworder_round`, bit-identical
     to it (tests/test_distributed_equiv.py)."""
-    batch = _neworder_batch(cfg, lay, inp, active)
-    tbl, vec, out = engine.round_fn(st.nam.table, st.nam.oracle_state.vec,
-                                    batch, inp, active)
-    ops = _dist_ops(oracle, batch, out, tbl, active)
+    batch, keyed = _neworder_batch(cfg, lay, inp, active)
+    if keyed is not None:
+        tbl, vec, out = engine.round_fn(
+            st.nam.table, st.nam.oracle_state.vec, batch, inp, active,
+            directory=st.directory, read_keys=keyed.keys,
+            key_mask=keyed.mask)
+    else:
+        tbl, vec, out = engine.round_fn(st.nam.table, st.nam.oracle_state.vec,
+                                        batch, inp, active)
+    ops = _dist_ops(oracle, batch, out, tbl, active, keyed)
     tbl, idx, extends, o_id = _neworder_inserts(
         cfg, lay, st, oracle, tbl, vec, out.committed, out.read_data, inp,
         round_no)
     nam = st.nam._replace(table=tbl, oracle_state=VectorState(vec=vec),
                           extends=extends)
     return NewOrderResult(
-        state=TPCCState(nam=nam, order_index=idx, hist_cursor=st.hist_cursor),
+        state=st._replace(nam=nam, order_index=idx),
         committed=out.committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
         ops=ops, batch=batch, vis=_dist_vis(batch, out, active))
 
@@ -1120,8 +1252,7 @@ def payment_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                                        inp)
     nam = st.nam._replace(table=tbl, oracle_state=out.oracle_state)
     return PaymentResult(
-        state=TPCCState(nam=nam, order_index=st.order_index,
-                        hist_cursor=hist_cursor),
+        state=st._replace(nam=nam, hist_cursor=hist_cursor),
         committed=out.committed, ops=out.ops, batch=batch,
         snapshot_miss=out.snapshot_miss, vis=out.vis)
 
@@ -1140,8 +1271,7 @@ def payment_round_distributed(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                                        out.committed, inp)
     nam = st.nam._replace(table=tbl, oracle_state=VectorState(vec=vec))
     return PaymentResult(
-        state=TPCCState(nam=nam, order_index=st.order_index,
-                        hist_cursor=hist_cursor),
+        state=st._replace(nam=nam, hist_cursor=hist_cursor),
         committed=out.committed, ops=ops, batch=batch,
         snapshot_miss=out.snapshot_miss, vis=_dist_vis(batch, out, active))
 
@@ -1194,19 +1324,39 @@ class ReadOnlyRoundResult(NamedTuple):
     read_mask: jnp.ndarray
 
 
-def _snapshot_read(st: TPCCState, engine, vec, slots, mask):
+def _snapshot_read(st: TPCCState, engine, vec, slots, mask, keys=None,
+                   key_mask=None):
     """Visible reads of ``slots`` [T, A] — through the sharded pool when an
     engine is given, plain single-pool reads otherwise. Returns
-    (data [T,A,W], found [T,A], from_current [T,A])."""
+    (data [T,A,W], found [T,A], from_current [T,A]).
+
+    ``keys``/``key_mask`` switch the marked reads to the §5.2 key-addressed
+    path: the slot comes from a hash-directory probe (sharded directory
+    under an engine, ``st.directory`` single-shard) and a directory miss
+    reads as not-found."""
     T, A = slots.shape
     if engine is not None:
-        out = engine.readonly_fn(st.nam.table, st.nam.oracle_state.vec,
-                                 slots, mask)
+        if getattr(engine, "n_dir_buckets", 0):
+            out = engine.readonly_fn(st.nam.table, st.nam.oracle_state.vec,
+                                     slots, mask, directory=st.directory,
+                                     read_keys=keys, key_mask=key_mask)
+        else:
+            out = engine.readonly_fn(st.nam.table, st.nam.oracle_state.vec,
+                                     slots, mask)
         return out.read_data, out.found, out.from_current
-    vr = mvcc.read_visible(st.nam.table, slots.reshape(-1), vec)
+    flat = slots.reshape(-1)
+    if keys is not None:
+        kvals, kfound = ht.lookup(st.directory, keys.reshape(-1),
+                                  max_probes=DIR_PROBES)
+        km = key_mask.reshape(-1)
+        flat = jnp.where(km, jnp.where(kfound, kvals, 0), flat)
+        key_ok = ~km | kfound
+    else:
+        key_ok = jnp.ones(flat.shape, bool)
+    vr = mvcc.read_visible(st.nam.table, flat, vec)
     W = st.nam.table.payload_width
-    return (vr.data.reshape(T, A, W), vr.found.reshape(T, A),
-            vr.from_current.reshape(T, A))
+    return (vr.data.reshape(T, A, W), (vr.found & key_ok).reshape(T, A),
+            (vr.from_current & key_ok).reshape(T, A))
 
 
 def orderstatus_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
@@ -1223,7 +1373,15 @@ def orderstatus_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     found = found & act
     slots = jnp.stack([csl, jnp.where(found, oslot, 0)], axis=1)
     mask = jnp.stack([act, found], axis=1)
-    data, _, fcur = _snapshot_read(st, engine, vec, slots, mask)
+    keys = kmask = None
+    n_probes = 0
+    if cfg.key_addressed:   # the customer is fetched by key (§5.2); the
+        #   order rides the range index, its slot is already resolved
+        keys = jnp.stack([customer_key(cfg, inp.w_id, inp.d_id, inp.c_id),
+                          jnp.zeros((T,), jnp.uint32)], axis=1)
+        kmask = jnp.stack([act, jnp.zeros((T,), bool)], axis=1)
+        n_probes = jnp.sum(kmask & mask)
+    data, _, fcur = _snapshot_read(st, engine, vec, slots, mask, keys, kmask)
     order = data[:, 1, :]
     safe_o = o_slot_ext(lay, cfg, jnp.int32(0), jnp.int32(0))
     olslot = ol_slots_of_order(lay, cfg, jnp.where(found, oslot, safe_o))[
@@ -1236,7 +1394,8 @@ def orderstatus_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     fcur = jnp.concatenate([fcur, ol_cur], axis=1)
     ops = si.count_readonly_ops(oracle, mask, fcur,
                                 jnp.sum(act.astype(jnp.int32)),
-                                st.nam.table.payload_width)
+                                st.nam.table.payload_width,
+                                n_index_probes=n_probes)
     return ReadOnlyRoundResult(result=order, found=found, ops=ops,
                                read_slots=slots, read_mask=mask)
 
@@ -1268,9 +1427,17 @@ def stocklevel_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     ol_data, ol_found, ol_cur = _snapshot_read(st, engine, vec, ol, ol_mask)
     ol_ok = ol_found & ol_mask
     items = ol_data[:, :, OL_COL["i_id"]]
-    ssl = s_slot(lay, cfg, jnp.broadcast_to(inp.w_id[:, None], items.shape),
-                 jnp.where(ol_ok, items, 0))
-    s_data, s_found, s_cur = _snapshot_read(st, engine, vec, ssl, ol_ok)
+    w_bc = jnp.broadcast_to(inp.w_id[:, None], items.shape)
+    safe_items = jnp.where(ol_ok, items, 0)
+    ssl = s_slot(lay, cfg, w_bc, safe_items)
+    skeys = skmask = None
+    n_probes = 0
+    if cfg.key_addressed:   # stocks are fetched by key (§5.2)
+        skeys = stock_key(cfg, w_bc, safe_items)
+        skmask = ol_ok
+        n_probes = jnp.sum(skmask & ol_ok)
+    s_data, s_found, s_cur = _snapshot_read(st, engine, vec, ssl, ol_ok,
+                                            skeys, skmask)
     low = ol_ok & s_found \
         & (s_data[:, :, S_COL["quantity"]] < inp.threshold[:, None])
     marked = jnp.zeros((T, cfg.n_items), jnp.int32).at[
@@ -1282,7 +1449,8 @@ def stocklevel_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     slots = jnp.concatenate([dsl[:, None], ol, ssl], axis=1)
     ops = si.count_readonly_ops(oracle, mask, fcur,
                                 jnp.sum(act.astype(jnp.int32)),
-                                st.nam.table.payload_width)
+                                st.nam.table.payload_width,
+                                n_index_probes=n_probes)
     return ReadOnlyRoundResult(result=counts, found=act, ops=ops,
                                read_slots=slots, read_mask=mask)
 
@@ -1423,8 +1591,7 @@ def delivery_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     ops = _delivery_preread_ops(out.ops, _n_active(batch, active),
                                 out.table.payload_width)
     return DeliveryResult(
-        state=TPCCState(nam=nam, order_index=st.order_index,
-                        hist_cursor=st.hist_cursor),
+        state=st._replace(nam=nam),
         committed=out.committed, delivered=out.committed & found, ops=ops,
         batch=batch, snapshot_miss=out.snapshot_miss, vis=out.vis)
 
@@ -1445,8 +1612,7 @@ def delivery_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
                                 tbl.payload_width)
     nam = st.nam._replace(table=tbl, oracle_state=VectorState(vec=nvec))
     return DeliveryResult(
-        state=TPCCState(nam=nam, order_index=st.order_index,
-                        hist_cursor=st.hist_cursor),
+        state=st._replace(nam=nam),
         committed=out.committed, delivered=out.committed & found, ops=ops,
         batch=batch, snapshot_miss=out.snapshot_miss,
         vis=_dist_vis(batch, out, active))

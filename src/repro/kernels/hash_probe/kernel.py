@@ -1,17 +1,26 @@
-"""Batched hash-table probe + MVCC visibility Pallas TPU kernel.
+"""Fused hash-probe + full §5.1 version resolution Pallas TPU kernel.
 
-NAM-DB's read hot spot (§5.2): for a batch of keys, probe the open-addressed
-bucket array and check version visibility — the per-transaction work that a
-compute server issues thousands of times per second. TPU adaptation: the
-table SHARD (keys/values/version headers) is staged once into VMEM (a 64 k
-bucket shard ≈ 1 MB — VMEM-resident, the RNIC-side "bucket cluster read" of
-[31] becomes a single HBM→VMEM stream), and each grid step probes a block of
-queries with VPU-vectorized dynamic gathers, iterating probe distances in a
-``fori_loop``. No per-probe HBM round trips — the TPU analogue of Pilaf's
-"one RDMA read per lookup".
+NAM-DB's read hot path is key-addressed (§5.2, after Pilaf [31]): a compute
+server probes the partitioned hash index with one one-sided read, then
+resolves MVCC visibility against the record's version chain (§5.1): current
+version → old-version ring (newest first) → overflow ring. This kernel fuses
+the whole resolution: the directory SHARD (bucket keys/values) and the
+record-header regions (current/old/overflow headers + ring counters) are
+staged once into VMEM — a 64 k-bucket shard with K=4/KO=8 rings is a few MB,
+comfortably VMEM-resident — and each grid step resolves a block of queries
+with VPU-vectorized dynamic gathers. Directory probing iterates probe
+distances in a ``fori_loop``; the version rings are unrolled (K, KO are
+small static constants). No per-probe HBM round trips and **no payload
+traffic at all**: the kernel emits a version *locator* ``(slot, found, src,
+pos)`` and exactly one payload gather follows outside (the paper's
+"headers are fetched alone first … then exactly one payload read").
 
-Visibility: a hit is accepted iff ``cts <= ts_vec[thread]`` (paper §4.1) —
-the timestamp vector rides along in VMEM (SMEM-sized, ≤ few KB).
+Lock-step oracle: ``repro.kernels.hash_probe.ref.hash_probe_ref`` — the
+production-code composition ``hashtable.lookup`` + ``mvcc.locate_visible``.
+Every branch here mirrors that composition bit-exactly, including the
+deleted-directory-entry rule (``val < 0`` ⇒ not found), the old-ring
+never-written sentinel skip, and the deterministic not-found locator
+(newest overflow position).
 """
 from __future__ import annotations
 
@@ -20,81 +29,127 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 EMPTY = 0
 
 
-def _probe_kernel(tkeys_ref, tvals_ref, meta_ref, cts_ref, tsvec_ref,
-                  q_ref, o_val_ref, o_found_ref, *, max_probes: int,
-                  n_buckets: int, thread_shift: int):
+def _probe_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
+                  vm_ref, vc_ref, vn_ref, ts_ref, q_ref,
+                  o_slot_ref, o_found_ref, o_src_ref, o_pos_ref, *,
+                  max_probes: int, n_buckets: int, n_old: int, n_ovf: int,
+                  thread_shift: int, deleted_bit: int, moved_bit: int):
     keys1 = q_ref[...] + jnp.uint32(1)                  # [bq]
     h = (keys1 - jnp.uint32(1)) * jnp.uint32(2654435769)
     base = (h % jnp.uint32(n_buckets)).astype(jnp.int32)
-    tkeys = tkeys_ref[...]
-    tvals = tvals_ref[...]
-    metas = meta_ref[...]
-    ctss = cts_ref[...]
-    tsvec = tsvec_ref[...]
+    dkeys = dk_ref[...]
+    dvals = dv_ref[...]
 
+    # ---- 1. directory probe (open addressing, linear) -------------------
+    # The loop tracks only the hit BUCKET; the value is gathered once after
+    # the loop — half the per-probe gather traffic of the unfused lookup,
+    # which fetches the bucket's key AND value at every probe distance.
     def body(p, carry):
-        vals, found, done = carry
+        hit_idx, key_hit, done = carry
         idx = jnp.mod(base + p, n_buckets)
-        k = tkeys[idx]                                   # VPU dynamic gather
-        key_hit = ~done & (k == keys1)
-        # MVCC visibility: version ⟨thread, cts⟩ visible under ts_vec
-        tid = (metas[idx] >> thread_shift).astype(jnp.int32)
-        visible = ctss[idx] <= tsvec[tid]
-        deleted = (metas[idx] & jnp.uint32(2)) != 0
-        hit = key_hit & visible & ~deleted
+        k = dkeys[idx]                                   # VPU dynamic gather
+        hit = ~done & (k == keys1)
         empty = ~done & (k == EMPTY)
-        vals = jnp.where(hit, tvals[idx], vals)
-        found = found | hit
-        done = done | hit | empty | key_hit  # stop at key even if invisible
-        return vals, found, done
+        hit_idx = jnp.where(hit, idx, hit_idx)
+        key_hit = key_hit | hit
+        done = done | hit | empty    # stop at the key even if invalidated
+        return hit_idx, key_hit, done
 
-    vals = jnp.full(keys1.shape, -1, jnp.int32)
-    found = jnp.zeros(keys1.shape, jnp.bool_)
+    hit_idx = jnp.zeros(keys1.shape, jnp.int32)
+    key_hit = jnp.zeros(keys1.shape, jnp.bool_)
     done = jnp.zeros(keys1.shape, jnp.bool_)
-    vals, found, _ = jax.lax.fori_loop(0, max_probes, body,
-                                       (vals, found, done))
-    o_val_ref[...] = vals
-    o_found_ref[...] = found
+    hit_idx, key_hit, _ = jax.lax.fori_loop(0, max_probes, body,
+                                            (hit_idx, key_hit, done))
+    val = jnp.where(key_hit, dvals[hit_idx], -1)
+    got = key_hit & (val >= 0)       # deleted entries (val<0) ⇒ not found
+    slot = jnp.where(got, val, 0)    # safe index for the header gathers
+
+    tsvec = ts_ref[...]
+
+    def usable(meta, cts):
+        tid = (meta >> thread_shift).astype(jnp.int32)
+        vis = cts <= tsvec[tid]
+        return vis & ((meta & jnp.uint32(deleted_bit)) == 0)
+
+    # ---- 2. current version (the common-case single read) ---------------
+    cur_ok = usable(cm_ref[...][slot], cc_ref[...][slot])
+
+    # ---- 3. old-version ring, newest → oldest (one [bq, K] gather) ------
+    om = om_ref[...]
+    oc = oc_ref[...]
+    nw = nw_ref[...][slot]
+    ages = jnp.arange(n_old, dtype=jnp.int32)[None, :]   # 0 = newest
+    pos = jnp.mod(nw[:, None] - 1 - ages, n_old)         # [bq, K]
+    oidx = slot[:, None] * n_old + pos
+    m = om[oidx]
+    c = oc[oidx]
+    # never-written slots: zero header with moved=1 (sentinel) — skip
+    sentinel = (c == 0) & ((m >> thread_shift) == 0) \
+        & ((m & jnp.uint32(moved_bit)) != 0)
+    ok = usable(m, c) & ~sentinel
+    any_old = jnp.any(ok, axis=1)
+    first = jnp.argmax(ok, axis=1)
+    old_pos = jnp.take_along_axis(pos, first[:, None], axis=1)[:, 0]
+
+    # ---- 4. overflow ring, newest → oldest (one [bq, KO] gather) --------
+    vm = vm_ref[...]
+    vc = vc_ref[...]
+    on = vn_ref[...][slot]
+    oages = jnp.arange(n_ovf, dtype=jnp.int32)[None, :]
+    vpos = jnp.mod(on[:, None] - 1 - oages, n_ovf)       # [bq, KO]
+    vidx = slot[:, None] * n_ovf + vpos
+    vok = usable(vm[vidx], vc[vidx])
+    any_ovf = jnp.any(vok, axis=1)
+    vfirst = jnp.argmax(vok, axis=1)
+    ovf_pos = jnp.take_along_axis(vpos, vfirst[:, None], axis=1)[:, 0]
+
+    src = jnp.where(cur_ok, 0, jnp.where(any_old, 1, 2)).astype(jnp.int32)
+    pos = jnp.where(cur_ok, 0, jnp.where(any_old, old_pos, ovf_pos))
+    o_slot_ref[...] = jnp.where(got, val, -1)
+    o_found_ref[...] = got & (cur_ok | any_old | any_ovf)
+    o_src_ref[...] = jnp.where(got, src, 0)
+    o_pos_ref[...] = jnp.where(got, pos, 0).astype(jnp.int32)
 
 
-def hash_probe(table_keys, table_vals, hdr_meta, hdr_cts, ts_vec, queries, *,
-               max_probes: int = 16, bq: int = 256,
+def hash_probe(dir_keys, dir_vals, cur_meta, cur_cts, old_meta, old_cts,
+               next_write, ovf_meta, ovf_cts, ovf_next, ts_vec, queries, *,
+               n_old: int, n_ovf: int, max_probes: int = 16, bq: int = 256,
                interpret: bool = False):
-    """table_keys: uint32 [B'] (key+1; 0 empty); table_vals: int32 [B'];
-    hdr_meta/hdr_cts: uint32 [B'] record headers of the pointed-to records;
-    ts_vec: uint32 [n_slots]; queries: uint32 [Q].
-    Returns (vals int32 [Q], found bool [Q])."""
-    from repro.core.header import THREAD_SHIFT
+    """dir_keys: uint32 [B] (key+1; 0 empty); dir_vals: int32 [B];
+    cur_meta/cur_cts: uint32 [R]; old_meta/old_cts: uint32 [R*K] (row-major
+    flattened rings); next_write: int32 [R]; ovf_meta/ovf_cts: uint32 [R*KO];
+    ovf_next: int32 [R]; ts_vec: uint32 [n_slots]; queries: uint32 [Q].
+    Returns the locator (slot int32, found bool, src int32, pos int32), each
+    [Q] — see ``repro.core.mvcc.VersionLoc`` for the src/pos contract."""
+    from repro.core.header import DELETED_BIT, MOVED_BIT, THREAD_SHIFT
     Q = queries.shape[0]
-    nb = table_keys.shape[0]
+    nb = dir_keys.shape[0]
     bq = min(bq, Q)
     n_q = -(-Q // bq)
     pad = n_q * bq - Q
     if pad:
         queries = jnp.pad(queries, (0, pad))
 
-    kernel = functools.partial(_probe_kernel, max_probes=max_probes,
-                               n_buckets=nb, thread_shift=THREAD_SHIFT)
-    vals, found = pl.pallas_call(
+    kernel = functools.partial(
+        _probe_kernel, max_probes=max_probes, n_buckets=nb, n_old=n_old,
+        n_ovf=n_ovf, thread_shift=THREAD_SHIFT,
+        deleted_bit=int(DELETED_BIT), moved_bit=int(MOVED_BIT))
+    whole = [dir_keys, dir_vals, cur_meta, cur_cts, old_meta, old_cts,
+             next_write, ovf_meta, ovf_cts, ovf_next, ts_vec]
+    outs = pl.pallas_call(
         kernel,
         grid=(n_q,),
-        in_specs=[
-            pl.BlockSpec(table_keys.shape, lambda qi: (0,)),   # whole shard
-            pl.BlockSpec(table_vals.shape, lambda qi: (0,)),
-            pl.BlockSpec(hdr_meta.shape, lambda qi: (0,)),
-            pl.BlockSpec(hdr_cts.shape, lambda qi: (0,)),
-            pl.BlockSpec(ts_vec.shape, lambda qi: (0,)),
-            pl.BlockSpec((bq,), lambda qi: (qi,)),
-        ],
-        out_specs=[pl.BlockSpec((bq,), lambda qi: (qi,)),
-                   pl.BlockSpec((bq,), lambda qi: (qi,))],
+        in_specs=[pl.BlockSpec(a.shape, lambda qi: (0,)) for a in whole]
+        + [pl.BlockSpec((bq,), lambda qi: (qi,))],
+        out_specs=[pl.BlockSpec((bq,), lambda qi: (qi,)) for _ in range(4)],
         out_shape=[jax.ShapeDtypeStruct((n_q * bq,), jnp.int32),
-                   jax.ShapeDtypeStruct((n_q * bq,), jnp.bool_)],
+                   jax.ShapeDtypeStruct((n_q * bq,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n_q * bq,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_q * bq,), jnp.int32)],
         interpret=interpret,
-    )(table_keys, table_vals, hdr_meta, hdr_cts, ts_vec, queries)
-    return vals[:Q], found[:Q]
+    )(*whole, queries)
+    return tuple(o[:Q] for o in outs)

@@ -1,19 +1,40 @@
-"""Jit'd wrapper for the hash-probe + visibility kernel."""
+"""Jit'd wrapper for the fused hash-probe + §5.1 resolution kernel.
+
+Takes the directory and the :class:`~repro.core.mvcc.VersionedTable`
+directly and splits them into the flat header regions the kernel stages
+into VMEM (headers only — payloads never enter the kernel; gather them with
+:func:`repro.core.mvcc.gather_version` from the returned locator).
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.core import header as hdr_ops
+from repro.core.mvcc import VersionedTable
 from repro.kernels.hash_probe.kernel import hash_probe as _kernel
 
 
 @functools.partial(jax.jit, static_argnames=("max_probes", "bq",
                                              "interpret"))
-def hash_probe(table_keys, table_vals, hdr_meta, hdr_cts, ts_vec, queries,
+def hash_probe(dir_keys, dir_vals, table: VersionedTable, ts_vec, queries,
                *, max_probes=16, bq=256, interpret=None):
+    """Fused probe + visibility resolution. Returns (slot int32 [Q],
+    found bool [Q], src int32 [Q], pos int32 [Q]) matching
+    ``repro.kernels.hash_probe.ref.hash_probe_ref`` bit-exactly."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return _kernel(table_keys, table_vals, hdr_meta, hdr_cts, ts_vec,
-                   queries, max_probes=max_probes, bq=bq,
-                   interpret=interpret)
+    K = table.n_old
+    KO = table.ovf_hdr.shape[1]
+    return _kernel(
+        dir_keys, dir_vals,
+        table.cur_hdr[:, hdr_ops.META], table.cur_hdr[:, hdr_ops.CTS],
+        table.old_hdr[..., hdr_ops.META].reshape(-1),
+        table.old_hdr[..., hdr_ops.CTS].reshape(-1),
+        table.next_write,
+        table.ovf_hdr[..., hdr_ops.META].reshape(-1),
+        table.ovf_hdr[..., hdr_ops.CTS].reshape(-1),
+        table.ovf_next, ts_vec, queries,
+        n_old=K, n_ovf=KO, max_probes=max_probes, bq=bq,
+        interpret=interpret)

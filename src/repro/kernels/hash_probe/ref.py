@@ -1,36 +1,36 @@
-"""Pure-jnp oracle: hashtable.lookup + header visibility (production code)."""
+"""Pure-jnp oracle for the fused probe kernel: the production-code
+composition ``hashtable.lookup`` → ``mvcc.locate_visible``.
+
+The kernel and this oracle emit the same version *locator* — the fused
+kernel can therefore be differentially tested against (and benchmarked
+versus) the exact unfused path the SI engine runs when no TPU is present.
+Divergences the pre-fusion oracle had are resolved here by construction:
+
+* a probe that hits the key but finds the *current* version invisible no
+  longer reports not-found — resolution continues into the old-version ring
+  and the overflow ring, exactly as ``mvcc.read_visible`` serves old
+  versions;
+* a deleted directory entry (``val < 0`` after ``hashtable.delete``)
+  reports ``found=False`` with ``slot=-1`` — never a negative slot a caller
+  could gather with.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import hashtable as ht, header as hdr_ops
+from repro.core import hashtable as ht, mvcc
 
 
-def hash_probe_ref(table_keys, table_vals, hdr_meta, hdr_cts, ts_vec,
+def hash_probe_ref(dir_keys, dir_vals, table: mvcc.VersionedTable, ts_vec,
                    queries, *, max_probes: int = 16):
-    table = ht.HashTable(keys=table_keys, vals=table_vals)
-    keys1 = queries + jnp.uint32(1)
-    base = ht._hash(queries, table.n_buckets)
-    B = table.n_buckets
-
-    def body(p, carry):
-        vals, found, done = carry
-        idx = jnp.mod(base + p, B)
-        k = table.keys[idx]
-        key_hit = ~done & (k == keys1)
-        hdr = jnp.stack([hdr_meta[idx], hdr_cts[idx]], axis=-1)
-        visible = hdr_ops.visible(hdr, ts_vec) & ~hdr_ops.is_deleted(hdr)
-        hit = key_hit & visible
-        empty = ~done & (k == jnp.uint32(0))
-        vals = jnp.where(hit, table.vals[idx], vals)
-        found = found | hit
-        done = done | hit | empty | key_hit
-        return vals, found, done
-
-    vals = jnp.full(queries.shape, -1, jnp.int32)
-    found = jnp.zeros(queries.shape, bool)
-    done = jnp.zeros(queries.shape, bool)
-    vals, found, _ = jax.lax.fori_loop(0, max_probes, body,
-                                       (vals, found, done))
-    return vals, found
+    """Returns (slot int32 [Q], found bool [Q], src int32 [Q], pos int32 [Q])
+    — the :class:`repro.core.mvcc.VersionLoc` contract, plus the resolved
+    record slot (-1 when the key is absent or invalidated)."""
+    vals, kfound = ht.lookup(ht.HashTable(keys=dir_keys, vals=dir_vals),
+                             queries, max_probes=max_probes)
+    safe = jnp.where(kfound, vals, 0)
+    loc = mvcc.locate_visible(table, safe, ts_vec)
+    return (jnp.where(kfound, vals, -1),
+            kfound & loc.found,
+            jnp.where(kfound, loc.src, 0),
+            jnp.where(kfound, loc.pos, 0))

@@ -77,6 +77,8 @@ def make_pair(cfg, mesh, *, seed=0):
     engine = tpcc.make_mixed_engine(cfg, lay_d, mesh, "mem", oracle_d,
                                     shard_vector=True)
     st_d = tpcc.distribute_state(engine, st_d)
+    if cfg.key_addressed:
+        assert engine.n_dir_buckets > 0 and st_d.directory is not None
     return lay, (oracle_s, st_s), (oracle_d, st_d, engine)
 
 
@@ -140,10 +142,13 @@ def run_payment_delivery(layout, cfg, lay, single, dist):
     print(f"{layout}: payment+delivery — sharded == single")
 
 
-def run_mixed(layout: str, mesh):
+def run_mixed(layout: str, mesh, key_addressed: bool = False):
     """Full five-transaction mix: per-type commit/abort counts and final
-    state must match the single-shard reference exactly."""
-    cfg = tpcc.TPCCConfig(layout=layout, **CFG)
+    state must match the single-shard reference exactly. With
+    ``key_addressed`` the item/stock and orderstatus/stocklevel reads
+    resolve through the (sharded) §5.2 hash index; the caller additionally
+    proves the keyed run equals the slot-addressed one."""
+    cfg = tpcc.TPCCConfig(layout=layout, key_addressed=key_addressed, **CFG)
     home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
     lay, (oracle_s, st_s), (oracle_d, st_d, engine) = make_pair(cfg, mesh)
     st_s, ms = tpcc.run_mixed_rounds(cfg, lay, st_s, oracle_s,
@@ -173,8 +178,34 @@ def run_mixed(layout: str, mesh):
     assert ms.delivered == md.delivered
     assert ms.commits["neworder"] > 0 and ms.commits["payment"] > 0
     assert_same_state(layout, "mixed", lay, st_d, st_s)
-    print(f"{layout}: mixed {ms.total_commits}/{ms.total_attempts} "
+    tag = "key-addressed mixed" if key_addressed else "mixed"
+    print(f"{layout}: {tag} {ms.total_commits}/{ms.total_attempts} "
           f"committed ({dict(ms.commits)}) — sharded == single")
+    return lay, st_s, ms
+
+
+def check_key_equals_slot(layout, lay, slot_run, key_run):
+    """The §5.2 key-addressed engine is an access path, not a semantics
+    change: same seeds through the hash index must land the exact same
+    final state and per-type outcomes as the analytic slot engine — on the
+    mesh AND single-shard (each already proven sharded == single above).
+    Op profiles differ only by the charged index probes."""
+    st_s, ms = slot_run
+    st_k, mk = key_run
+    assert ms.attempts == mk.attempts and ms.commits == mk.commits, \
+        (layout, ms.commits, mk.commits)
+    assert ms.retries == mk.retries and ms.delivered == mk.delivered
+    assert ms.snapshot_misses == mk.snapshot_misses
+    assert ms.contention_aborts == mk.contention_aborts
+    assert_same_state(layout, "key-vs-slot", lay, st_k, st_s)
+    assert float(mk.ops["neworder"].record_reads) > \
+        float(ms.ops["neworder"].record_reads), (layout, "no probes?")
+    for name in ("orderstatus", "stocklevel"):   # may read zero keyed
+        # records in a short run (empty districts) — never fewer reads
+        assert float(mk.ops[name].record_reads) >= \
+            float(ms.ops[name].record_reads), (layout, name)
+    print(f"{layout}: key-addressed == slot-addressed (bit-identical state, "
+          f"+probes in ops)")
 
 
 def main():
@@ -183,7 +214,9 @@ def main():
     for layout in ("table_major", "warehouse_major"):
         cfg, lay, single, dist = run_neworder(layout, mesh)
         run_payment_delivery(layout, cfg, lay, single, dist)
-        run_mixed(layout, mesh)
+        lay_m, st_slot, ms = run_mixed(layout, mesh)
+        lay_k, st_key, mk = run_mixed(layout, mesh, key_addressed=True)
+        check_key_equals_slot(layout, lay_m, (st_slot, ms), (st_key, mk))
     print("DISTRIBUTED_EQUIV_OK")
 
 

@@ -54,6 +54,74 @@ def test_hashtable_fills_to_capacity():
     got, found = ht.lookup(t, keys, max_probes=n)
     assert bool(found.all())
     np.testing.assert_array_equal(np.asarray(got), np.arange(n))
+    # the store-level directory build must surface probe exhaustion loudly:
+    # same keys into the same capacity is fine …
+    d = store_mod.build_directory(keys, jnp.arange(n, dtype=jnp.int32), n,
+                                  max_probes=n)
+    got, found = ht.lookup(d, keys, max_probes=n)
+    assert bool(found.all())
+    # … one key beyond capacity (or a too-short probe budget) is an error,
+    # never a silently dropped entry (insert's placed_at == -1)
+    over = jnp.concatenate([keys, jnp.array([9999], jnp.uint32)])
+    with pytest.raises(ValueError, match="probe chains exceeded"):
+        store_mod.build_directory(over, jnp.arange(n + 1, dtype=jnp.int32),
+                                  n, max_probes=n + 1)
+    # two keys sharing a home bucket cannot both place with max_probes=1
+    collide = [k for k in range(1, 2000)
+               if (k * 2654435769 % (1 << 32)) % n == 0][:2]
+    with pytest.raises(ValueError, match="probe chains exceeded"):
+        store_mod.build_directory(jnp.asarray(collide, jnp.uint32),
+                                  jnp.array([0, 1], jnp.int32), n,
+                                  max_probes=1)
+
+
+def test_hashtable_delete_lookup_reinsert():
+    """Regression: delete-then-lookup used to return found=True, val=-1 —
+    any caller gathering with that slot silently read the last pool record."""
+    t = ht.init(32)
+    t, _ = ht.insert(t, jnp.array([5, 9], jnp.uint32),
+                     jnp.array([50, 90], jnp.int32))
+    t, was_there = ht.delete(t, jnp.array([5], jnp.uint32))
+    assert bool(was_there[0])
+    got, found = ht.lookup(t, jnp.array([5, 9], jnp.uint32))
+    assert not bool(found[0]), "deleted key must report found=False"
+    assert bool(found[1]) and int(got[1]) == 90
+    # the invalidated entry still terminates the probe chain and supports
+    # update-in-place reinsertion
+    t, placed = ht.insert(t, jnp.array([5], jnp.uint32),
+                          jnp.array([55], jnp.int32))
+    assert int(placed[0]) >= 0
+    got, found = ht.lookup(t, jnp.array([5], jnp.uint32))
+    assert bool(found[0]) and int(got[0]) == 55
+
+
+def test_hashtable_lookup_shard_matches_lookup():
+    """Partitioned probing (every shard walks the global probe sequence over
+    its resident bucket range) reconstructs lookup() bit-exactly — including
+    deleted entries and missing keys."""
+    B, n_shards = 64, 4
+    t = ht.init(B)
+    keys = jnp.arange(1, 40, dtype=jnp.uint32) * 97
+    t, _ = ht.insert(t, keys, jnp.arange(39, dtype=jnp.int32), max_probes=B)
+    t, _ = ht.delete(t, keys[5:9])
+    qs = jnp.concatenate([keys, jnp.array([7, 100000], jnp.uint32)])
+    want_v, want_f = ht.lookup(t, qs, max_probes=B)
+    per = B // n_shards
+    vsum = jnp.zeros(qs.shape, jnp.int32)
+    khit = jnp.zeros(qs.shape, bool)
+    for s in range(n_shards):
+        v, h = ht.lookup_shard(t.keys[s * per:(s + 1) * per],
+                               t.vals[s * per:(s + 1) * per], qs, s * per,
+                               B, max_probes=B)
+        vsum = vsum + v
+        khit = khit | h
+    got_f = khit & (vsum >= 0)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    np.testing.assert_array_equal(np.asarray(jnp.where(got_f, vsum, -1)),
+                                  np.asarray(jnp.where(want_f, want_v, -1)))
+    # owner of each key's home bucket agrees with partition_of
+    owners = ht.partition_of(keys, B, n_shards)
+    assert int(jnp.max(owners)) < n_shards and int(jnp.min(owners)) >= 0
 
 
 # ----------------------------------------------------------- range index ----

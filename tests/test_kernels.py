@@ -94,28 +94,160 @@ def test_moe_gmm_sweep(E, C, D, F, act, dtype):
 
 
 # ------------------------------------------------------------- probe -------
+def _probe_table(n_records, key, n_old=2, n_ovf=4, width=4):
+    """A versioned table with populated old/overflow rings for probe tests."""
+    from repro.core import header as hdr, mvcc
+    r = jnp.arange(n_records)
+    tbl = mvcc.init_table(n_records, width, n_old=n_old, n_overflow=n_ovf)
+    # current: thread (r%2), cts 7 on odd records (invisible under low T_R)
+    tbl = tbl._replace(cur_hdr=hdr.pack(
+        (r % 2).astype(jnp.uint32),
+        jnp.where(r % 2 == 0, 0, 7).astype(jnp.uint32)))
+    # every 3rd record: an old version ⟨0, 2⟩ (served when current invisible)
+    tbl = tbl._replace(
+        next_write=tbl.next_write.at[::3].set(1),
+        old_hdr=tbl.old_hdr.at[::3, 0].set(hdr.pack(jnp.uint32(0),
+                                                    jnp.uint32(2))))
+    # every 5th record: an overflow version ⟨0, 1⟩
+    tbl = tbl._replace(
+        ovf_hdr=tbl.ovf_hdr.at[::5, 0].set(hdr.pack(jnp.uint32(0),
+                                                    jnp.uint32(1))),
+        ovf_next=tbl.ovf_next.at[::5].set(1))
+    # every 7th record: current version deleted
+    tbl = tbl._replace(cur_hdr=hdr.with_deleted(tbl.cur_hdr,
+                                                (r % 7 == 0)))
+    data = jax.random.randint(key, (n_records, width), 0, 1000)
+    return tbl._replace(
+        cur_data=data,
+        old_data=tbl.old_data.at[:, 0].set(data + 10000),
+        ovf_data=tbl.ovf_data.at[:, 0].set(data + 20000))
+
+
+def _assert_kernel_matches_ref(t, tbl, tsvec, qs, max_probes, bq=32):
+    ker = hash_probe(t.keys, t.vals, tbl, tsvec, qs, bq=bq,
+                     max_probes=max_probes, interpret=True)
+    ref = hash_probe_ref(t.keys, t.vals, tbl, tsvec, qs,
+                         max_probes=max_probes)
+    for name, a, b in zip(("slot", "found", "src", "pos"), ker, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    return ker
+
+
 @pytest.mark.parametrize("n_buckets,n_keys,bq", [(64, 29, 8), (256, 100, 32)])
 def test_hash_probe_sweep(n_buckets, n_keys, bq):
-    from repro.core import hashtable as ht, header as hdr
+    """Kernel vs ref across visibility regimes: invisible current versions
+    fall through to the old ring / overflow instead of reporting not-found
+    (the pre-fusion oracle's divergence from mvcc.read_visible), deleted
+    records and deleted directory entries read as absent."""
+    from repro.core import hashtable as ht
+    tbl = _probe_table(n_buckets, jax.random.PRNGKey(4))
     t = ht.init(n_buckets)
     keys = (jnp.arange(1, n_keys + 1, dtype=jnp.uint32) * 7919)
     t, _ = ht.insert(t, keys, jnp.arange(n_keys, dtype=jnp.int32),
                      max_probes=n_buckets)
-    # headers: half the records stamped by thread 1 at cts 5 (visibility)
-    meta = hdr.pack(
-        jnp.where(jnp.arange(n_buckets) % 2 == 0, 0, 1).astype(jnp.uint32),
-        jnp.where(jnp.arange(n_buckets) % 2 == 0, 0, 5).astype(jnp.uint32))
-    hm, hc = meta[:, 0], meta[:, 1]
+    t, _ = ht.delete(t, keys[2:5])           # invalidated directory entries
+    qs = jnp.concatenate([keys, jnp.array([3, 12345], jnp.uint32)])
     for tsvec in (jnp.array([9, 9], jnp.uint32),    # all visible
-                  jnp.array([9, 0], jnp.uint32)):   # thread-1 versions hidden
-        qs = jnp.concatenate([keys[: n_keys // 2],
-                              jnp.array([3, 12345], jnp.uint32)])
-        v1, f1 = hash_probe(t.keys, t.vals, hm, hc, tsvec, qs, bq=bq,
-                            max_probes=n_buckets, interpret=True)
-        v2, f2 = hash_probe_ref(t.keys, t.vals, hm, hc, tsvec, qs,
-                                max_probes=n_buckets)
-        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
-        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+                  jnp.array([9, 0], jnp.uint32),    # thread-1 current hidden
+                  jnp.array([0, 0], jnp.uint32)):   # only cts≤0 versions
+        slot, found, src, pos = _assert_kernel_matches_ref(
+            t, tbl, tsvec, qs, n_buckets, bq)
+        fnd = np.asarray(found)
+        assert not fnd[-1] and not fnd[-2]           # absent keys
+        assert not fnd[2] and not fnd[3] and not fnd[4]   # deleted entries
+        assert np.asarray(slot)[np.asarray(slot) < 0].size == 0 or \
+            not fnd[np.asarray(slot) < 0].any()      # no found negative slot
+    # hidden-current regime must still serve old/overflow versions
+    _, found, src, _ = _assert_kernel_matches_ref(
+        t, tbl, jnp.array([9, 0], jnp.uint32), qs, n_buckets, bq)
+    assert int(jnp.sum(found & (src > 0))) > 0, \
+        "no read fell through to an old version — test is vacuous"
+
+
+def test_hash_probe_matches_unfused_read_path():
+    """The fused locator, payload-gathered, equals the unfused production
+    path (hashtable.lookup → mvcc.read_visible) wherever a version exists."""
+    from repro.core import hashtable as ht, mvcc
+    n = 128
+    tbl = _probe_table(n, jax.random.PRNGKey(5))
+    t = ht.init(2 * n)
+    keys = jnp.arange(1, n + 1, dtype=jnp.uint32) * 31
+    t, _ = ht.insert(t, keys, jnp.arange(n, dtype=jnp.int32), max_probes=64)
+    tsvec = jnp.array([9, 0], jnp.uint32)
+    slot, found, src, pos = hash_probe(t.keys, t.vals, tbl, tsvec, keys,
+                                       max_probes=64, interpret=True)
+    vals, kf = ht.lookup(t, keys, max_probes=64)
+    vr = mvcc.read_visible(tbl, jnp.where(kf, vals, 0), tsvec)
+    np.testing.assert_array_equal(np.asarray(found), np.asarray(vr.found & kf))
+    loc = mvcc.VersionLoc(found=found, src=src, pos=pos)
+    _, data = mvcc.gather_version(tbl, jnp.where(found, slot, 0), loc)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(found[:, None], data, 0)),
+        np.asarray(jnp.where((vr.found & kf)[:, None], vr.data, 0)))
+    np.testing.assert_array_equal(np.asarray(found & (src == 0)),
+                                  np.asarray(vr.from_current & kf))
+    np.testing.assert_array_equal(np.asarray(found & (src == 2)),
+                                  np.asarray(vr.from_ovf & kf))
+
+
+def test_hash_probe_wraparound():
+    """Probe chains that wrap past the end of the bucket array resolve
+    identically in the kernel and the ref (mod-B index arithmetic)."""
+    from repro.core import hashtable as ht
+    B = 8
+    tbl = _probe_table(B, jax.random.PRNGKey(6))
+    t = ht.init(B)
+    # engineer a colliding cluster at the LAST bucket: its probe chain must
+    # cross the B-1 → 0 boundary
+    home = [k for k in range(1, 2000)
+            if (k * 2654435769 % (1 << 32)) % B == B - 1][:4]
+    filler = [k for k in range(1, 2000)
+              if (k * 2654435769 % (1 << 32)) % B == B - 3][:3]
+    keys = jnp.asarray(home + filler, jnp.uint32)
+    t, placed = ht.insert(t, keys, jnp.arange(7, dtype=jnp.int32),
+                          max_probes=B)
+    assert int((placed >= 0).sum()) == 7
+    base = np.asarray(jnp.mod(jnp.asarray(
+        [int(k) * 2654435769 % (1 << 32) for k in keys], jnp.uint32), B))
+    assert (np.asarray(placed) < base).any(), "no chain wrapped — weaken keys"
+    qs = jnp.concatenate([keys, jnp.array([4, 104729], jnp.uint32)])
+    for tsvec in (jnp.array([9, 9], jnp.uint32), jnp.array([9, 0], jnp.uint32)):
+        _assert_kernel_matches_ref(t, tbl, tsvec, qs, B, bq=4)
+
+
+def test_hash_probe_hypothesis_sweep():
+    """Property sweep: kernel == ref for arbitrary bucket counts, load
+    factors, probe budgets, deletions and snapshot vectors (incl. near-full
+    tables where almost every chain collides and wraps)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(data=st.data(),
+           n_buckets=st.sampled_from([16, 32, 64, 128]),
+           load=st.floats(0.2, 0.95),
+           max_probes=st.sampled_from([4, 8, 16]))
+    @settings(max_examples=20, deadline=None)
+    def run(data, n_buckets, load, max_probes):
+        from repro.core import hashtable as ht
+        n_keys = max(1, int(n_buckets * load))
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        key = jax.random.PRNGKey(seed)
+        tbl = _probe_table(n_buckets, key)
+        keys = jnp.asarray(
+            np.random.RandomState(seed).choice(
+                1 << 16, size=n_keys, replace=False) + 1, jnp.uint32)
+        t = ht.init(n_buckets)
+        t, _ = ht.insert(t, keys, jnp.arange(n_keys, dtype=jnp.int32) %
+                         n_buckets, max_probes=n_buckets)
+        n_del = data.draw(st.integers(0, n_keys))
+        t, _ = ht.delete(t, keys[:n_del], max_probes=n_buckets)
+        tsvec = jnp.asarray(
+            np.random.RandomState(seed + 1).randint(0, 9, size=2), jnp.uint32)
+        qs = jnp.concatenate([keys, jnp.array([104729], jnp.uint32)])
+        _assert_kernel_matches_ref(t, tbl, tsvec, qs, max_probes, bq=16)
+
+    run()
 
 
 # -------------------------------------------------------------- mamba ------

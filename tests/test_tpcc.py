@@ -335,3 +335,63 @@ def test_contention_raises_aborts():
             total += cfg.n_threads
         rates[alpha] = 1.0 - commits / total
     assert rates[2.0] > rates[None]
+
+
+def test_key_addressed_matches_slot_addressed():
+    """§5.2 key-addressed execution (item/stock reads + the orderstatus
+    customer and stocklevel stock reads resolved through the hash index)
+    must be bit-identical to the analytic slot-addressed engine: the index
+    is an access path, not a semantics change. Also asserts the directory
+    probes are charged to the op profile."""
+    base = dict(n_warehouses=2, customers_per_district=8, n_items=64,
+                n_threads=8, orders_per_thread=16, dist_degree=50.0)
+    runs = {}
+    for ka in (False, True):
+        cfg = tpcc.TPCCConfig(key_addressed=ka, **base)
+        oracle = VectorOracle(cfg.n_threads)
+        lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
+        st, stats = tpcc.run_mixed_rounds(cfg, lay, st, oracle,
+                                          jax.random.PRNGKey(3), 3)
+        runs[ka] = (lay, st, stats)
+    lay, st_s, ms = runs[False]
+    _, st_k, mk = runs[True]
+    assert st_k.directory is not None and st_s.directory is None
+    for field in mvcc.VersionedTable._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_k.nam.table, field)),
+            np.asarray(getattr(st_s.nam.table, field)), err_msg=field)
+    np.testing.assert_array_equal(np.asarray(st_k.nam.oracle_state.vec),
+                                  np.asarray(st_s.nam.oracle_state.vec))
+    assert ms.commits == mk.commits and ms.attempts == mk.attempts
+    assert ms.retries == mk.retries and ms.delivered == mk.delivered
+    assert mk.commits["neworder"] > 0
+    # key mode charges one §5.2 index probe per item/stock read on top of
+    # the identical record-read profile
+    assert mk.ops["neworder"].record_reads > ms.ops["neworder"].record_reads
+    assert mk.ops["payment"].record_reads == ms.ops["payment"].record_reads
+
+
+def test_key_addressed_directory_miss_aborts():
+    """A key the directory cannot resolve must read as not-found → the
+    transaction aborts with snapshot_miss; no negative slot is ever
+    gathered."""
+    cfg = tpcc.TPCCConfig(n_warehouses=2, customers_per_district=8,
+                          n_items=64, n_threads=4, orders_per_thread=8,
+                          key_addressed=True)
+    oracle = VectorOracle(cfg.n_threads)
+    lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
+    from repro.core import hashtable as ht
+    # invalidate one stock key: every new-order touching (w=0, i=7) aborts
+    st = st._replace(directory=ht.delete(
+        st.directory, tpcc.stock_key(cfg, jnp.uint32(0), jnp.uint32(7))[None]
+    )[0])
+    logits = workload.zipf_logits(cfg.n_items, cfg.skew_alpha)
+    inp = workload.gen_neworder(jax.random.PRNGKey(1), cfg.n_threads,
+                                cfg.n_warehouses, cfg.n_items,
+                                cfg.customers_per_district, None, 0.0, logits)
+    inp = inp._replace(item_ids=jnp.full_like(inp.item_ids, 7),
+                       supply_w=jnp.zeros_like(inp.supply_w),
+                       w_id=jnp.zeros_like(inp.w_id))
+    out = tpcc.neworder_round(cfg, lay, st, oracle, inp)
+    assert not bool(np.asarray(out.committed).any())
+    assert bool(np.asarray(out.snapshot_miss).all())
