@@ -39,16 +39,28 @@ version). Emits ``BENCH_probe.json`` (validated by
 unfused path at ≥64k buckets — the VMEM-resident shard regime the kernel
 is designed for.
 
+``--kill`` switches to the §6.2 crash-recovery bench: the full mix runs
+through the mesh executors with the per-thread commit journal replicated
+across the memory servers and a checkpoint taken after every GC sweep; one
+memory server is killed mid-run (in-flight intents locked but undetermined),
+recovery restores the last checkpoint, replays the surviving journal
+replicas and releases the abandoned locks, and the run resumes. Emits
+``BENCH_recovery.json`` with the recovery timings and fails loudly unless
+the recovered run is bit-identical to an uninterrupted run of the same
+seeds (the committed seed point lives in ``benchmarks/data/``).
+
     python benchmarks/bench_tpcc_scaling.py --shards 8
     python benchmarks/bench_tpcc_scaling.py --smoke     # CI: tiny, 2 shards
     python benchmarks/bench_tpcc_scaling.py --sustain 200 --smoke
     python benchmarks/bench_tpcc_scaling.py --probe [--smoke]
+    python benchmarks/bench_tpcc_scaling.py --kill [--smoke]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import statistics
+import tempfile
 import time
 
 import jax
@@ -56,7 +68,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.core import hashtable as hashtable_mod, locality, mvcc, netmodel
+from repro.core import hashtable as hashtable_mod, locality, mvcc, \
+    netmodel, store
 from repro.core.tsoracle import PartitionedVectorOracle, VectorOracle
 from repro.db import tpcc, workload
 
@@ -299,6 +312,122 @@ def run_sustain(n_rounds: int, n_shards: int, n_threads: int, *,
     return doc
 
 
+# ------------------------------------------------- §6.2 recovery bench ----
+def run_recovery(n_rounds: int, n_shards: int, n_threads: int, *,
+                 kill_round: int | None = None, dead_server: int | None = None,
+                 mode: str = "aware", gc_interval: int = 2,
+                 max_txn_time: int = 1, smoke: bool = False,
+                 out_path: str = "BENCH_recovery.json"):
+    """§6.2 crash-recovery bench at a fixed shard count.
+
+    Runs the journalled full mix twice from the same seeds — once
+    uninterrupted, once with ``FailureInjector`` killing one memory server
+    mid-run — and emits ``BENCH_recovery.json`` with the recovery timings
+    (checkpoint restore + journal replay + lock release) and the recovered
+    run's throughput. Bit-identity of the two final states is the bench's
+    contract: it fails loudly if recovery changed ANY installed version,
+    the timestamp vector, or a single telemetry counter.
+    """
+    if kill_round is None:
+        # default to an odd round: with gc_interval=2 the checkpoints land
+        # after odd rounds, so an odd kill sits one full round past the last
+        # checkpoint and recovery actually replays journal entries
+        kill_round = (n_rounds // 2) | 1
+    dead_server = n_shards - 1 if dead_server is None else dead_server
+    layout = "warehouse_major" if mode == "aware" else "table_major"
+    cfg = tpcc.TPCCConfig(
+        n_warehouses=n_threads, customers_per_district=8,
+        n_items=128 if smoke else 512, n_threads=n_threads,
+        orders_per_thread=max(64, n_rounds * 2), dist_degree=20.0,
+        layout=layout)
+    home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
+    mix = SMOKE_MIX if smoke else None
+
+    def journalled_run(failure):
+        oracle = PartitionedVectorOracle(cfg.n_threads, n_parts=n_shards)
+        lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
+        mesh = jax.sharding.Mesh(np.array(compat.cpu_devices()[:n_shards]),
+                                 ("mem",))
+        engine = tpcc.make_mixed_engine(cfg, lay, mesh, "mem", oracle,
+                                        shard_vector=True, with_journal=True)
+        st = tpcc.distribute_state(engine, st)
+        jnl = tpcc.make_journal(cfg, oracle, capacity_rounds=n_rounds + 2,
+                                n_replicas=n_shards)
+        jnl = store.shard_journal(mesh, "mem", jnl)
+        with tempfile.TemporaryDirectory() as d:
+            t0 = time.perf_counter()
+            st, stats = tpcc.run_mixed_rounds(
+                cfg, lay, st, oracle, jax.random.PRNGKey(1), n_rounds,
+                home_w=home, engine=engine, locality_mode=mode, mix=mix,
+                journal=jnl, checkpoint_dir=d, failure=failure,
+                gc_interval=gc_interval, max_txn_time=max_txn_time)
+            wall_s = time.perf_counter() - t0
+        return st, stats, wall_s
+
+    st_ref, ms_ref, wall_ref = journalled_run(None)
+    st_rec, ms_rec, wall_rec = journalled_run(
+        tpcc.FailureInjector(kill_round=kill_round, dead_server=dead_server))
+    (rep,) = ms_rec.recovery
+
+    identical = True
+    for field in tpcc.mvcc.VersionedTable._fields:
+        identical &= bool(np.array_equal(
+            np.asarray(jax.device_get(getattr(st_ref.nam.table, field))),
+            np.asarray(jax.device_get(getattr(st_rec.nam.table, field)))))
+    identical &= bool(np.array_equal(
+        np.asarray(jax.device_get(st_ref.nam.oracle_state.vec)),
+        np.asarray(jax.device_get(st_rec.nam.oracle_state.vec))))
+    identical &= ms_ref.attempts == ms_rec.attempts
+    identical &= ms_ref.commits == ms_rec.commits
+    identical &= ms_ref.retries == ms_rec.retries
+    identical &= ms_ref.delivered == ms_rec.delivered
+    identical &= ms_ref.ops == ms_rec.ops
+
+    doc = {
+        "schema_version": 1,
+        "kind": "tpcc_recovery",
+        "config": {"rounds": n_rounds, "shards": n_shards,
+                   "threads": n_threads, "mode": mode,
+                   "kill_round": kill_round, "dead_server": dead_server,
+                   "gc_interval": gc_interval, "max_txn_time": max_txn_time,
+                   "smoke": smoke},
+        "recovery": {
+            "checkpoint_round": rep.checkpoint_round,
+            "replayed_entries": rep.replayed_entries,
+            "undetermined": rep.undetermined,
+            "released_locks": rep.released_locks,
+            "recovery_seconds": rep.recovery_seconds},
+        "summary": {
+            "attempts": ms_rec.total_attempts,
+            "commits": ms_rec.total_commits,
+            "abort_rate": ms_rec.abort_rate,
+            "gc_sweeps": ms_rec.gc_sweeps,
+            "wall_uninterrupted_s": wall_ref,
+            "wall_recovered_s": wall_rec,
+            "txn_per_s_recovered": ms_rec.total_attempts / wall_rec,
+            "bit_identical": identical},
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"tpcc_recovery_{n_shards}shard_{mode},"
+          f"{rep.recovery_seconds * 1e6:.0f},"
+          f"{ms_rec.total_attempts / wall_rec:.0f}")
+    print(f"#   killed server {dead_server}/{n_shards} at round {kill_round} "
+          f"of {n_rounds}: checkpoint {rep.checkpoint_round}, "
+          f"{rep.replayed_entries} entries replayed, "
+          f"{rep.undetermined} undetermined dropped, "
+          f"{rep.released_locks} locks released in {rep.recovery_seconds:.2f}s")
+    print(f"#   wall uninterrupted {wall_ref:.2f}s vs recovered {wall_rec:.2f}s"
+          f" ({ms_rec.total_commits}/{ms_rec.total_attempts} committed) "
+          f"-> {out_path}")
+    if not identical:
+        raise SystemExit(
+            "recovered run is NOT bit-identical to the uninterrupted run — "
+            "§6.2 recovery lost or invented a transaction")
+    print("# recovered state bit-identical to the uninterrupted run")
+    return doc
+
+
 # ---------------------------------------------------- §5.2 probe bench ----
 def measure_probe_point(n_buckets: int, n_queries: int, *, n_old: int = 8,
                         n_overflow: int = 16, width: int = 8,
@@ -434,6 +563,11 @@ def main():
                     help="§5.2 probe bench: fused probe+visibility kernel "
                     "vs unfused lookup+read_visible over a bucket-count "
                     "sweep; emits BENCH_probe.json")
+    ap.add_argument("--kill", action="store_true",
+                    help="§6.2 recovery bench: journalled full mix, one "
+                    "memory server killed mid-run, recovered from checkpoint"
+                    " + journal replay; emits BENCH_recovery.json and fails "
+                    "unless the recovered run is bit-identical")
     args = ap.parse_args()
     if args.smoke:
         args.shards, args.rounds, args.threads = 2, 3, 4
@@ -445,6 +579,12 @@ def main():
 
     if args.shards > 1:
         compat.ensure_host_devices(args.shards)
+
+    if args.kill:
+        print("name,us_per_call,derived")
+        run_recovery(args.rounds if not args.smoke else 4,
+                     args.shards, args.threads, smoke=args.smoke)
+        return
 
     if args.sustain is not None:
         print("name,us_per_call,derived")

@@ -1,14 +1,15 @@
 """Schema check for the bench JSON artifacts.
 
 CI runs ``bench_tpcc_scaling.py --sustain … --smoke`` (emitting
-``BENCH_sustain.json``) and ``--probe --smoke`` (``BENCH_probe.json``) and
-uploads both; this script pins each document's shape — dispatched on the
-``kind`` field — so the bench output formats cannot rot silently (a field
-rename or a dropped trajectory would otherwise only surface when someone
-next tries to plot an artifact). Pure stdlib, no repo imports — it must be
-able to judge the artifact from any checkout.
+``BENCH_sustain.json``), ``--probe --smoke`` (``BENCH_probe.json``) and
+``--kill --smoke`` (``BENCH_recovery.json``) and uploads all three; this
+script pins each document's shape — dispatched on the ``kind`` field — so
+the bench output formats cannot rot silently (a field rename or a dropped
+trajectory would otherwise only surface when someone next tries to plot an
+artifact). Pure stdlib, no repo imports — it must be able to judge the
+artifact from any checkout.
 
-    python scripts/check_bench_json.py [BENCH_sustain.json|BENCH_probe.json]
+    python scripts/check_bench_json.py [BENCH_*.json]
 """
 from __future__ import annotations
 
@@ -57,6 +58,51 @@ def _check_fields(obj: dict, spec: dict, where: str):
     for key in (k for k in RATES if k in spec):
         if not 0.0 <= obj[key] <= 1.0:
             raise SchemaError(f"{where}.{key}: rate {obj[key]!r} not in [0,1]")
+
+
+RECOVERY_CONFIG_KEYS = {"rounds": int, "shards": int, "threads": int,
+                        "mode": str, "kill_round": int, "dead_server": int,
+                        "gc_interval": int, "max_txn_time": int, "smoke": bool}
+RECOVERY_KEYS = {"checkpoint_round": int, "replayed_entries": int,
+                 "undetermined": int, "released_locks": int,
+                 "recovery_seconds": float}
+RECOVERY_SUMMARY_KEYS = {"attempts": int, "commits": int, "abort_rate": float,
+                         "gc_sweeps": int, "wall_uninterrupted_s": float,
+                         "wall_recovered_s": float,
+                         "txn_per_s_recovered": float, "bit_identical": bool}
+
+
+def check_recovery(doc: dict):
+    """The §6.2 recovery-bench artifact: one mid-run memory-server kill,
+    checkpoint + journal-replay recovery timings, and the bit-identity
+    verdict against the uninterrupted run — which must be True; a recovery
+    that changed state is a correctness bug, not a data point."""
+    _check_fields(doc.get("config"), RECOVERY_CONFIG_KEYS, "config")
+    _check_fields(doc.get("recovery"), RECOVERY_KEYS, "recovery")
+    _check_fields(doc.get("summary"), RECOVERY_SUMMARY_KEYS, "summary")
+    cfg, rec, s = doc["config"], doc["recovery"], doc["summary"]
+    if not 0 <= cfg["kill_round"] < cfg["rounds"]:
+        raise SchemaError(f"config.kill_round {cfg['kill_round']!r} outside "
+                          f"[0, {cfg['rounds']})")
+    if not 0 <= cfg["dead_server"] < cfg["shards"]:
+        raise SchemaError(f"config.dead_server {cfg['dead_server']!r} outside "
+                          f"[0, {cfg['shards']})")
+    if not -1 <= rec["checkpoint_round"] < cfg["kill_round"]:
+        raise SchemaError(f"recovery.checkpoint_round "
+                          f"{rec['checkpoint_round']!r} not in "
+                          f"[-1, kill_round) — recovered from the future?")
+    for f in ("replayed_entries", "undetermined", "released_locks"):
+        if rec[f] < 0:
+            raise SchemaError(f"recovery.{f}: negative count {rec[f]!r}")
+    if rec["recovery_seconds"] <= 0:
+        raise SchemaError("recovery.recovery_seconds: non-positive timing")
+    if s["commits"] > s["attempts"]:
+        raise SchemaError(f"summary: {s['commits']} commits out of "
+                          f"{s['attempts']} attempts")
+    if s["bit_identical"] is not True:
+        raise SchemaError("summary.bit_identical is not True — the recovered "
+                          "run diverged from the uninterrupted one; §6.2 "
+                          "recovery lost or invented a transaction")
 
 
 PROBE_CONFIG_KEYS = {"n_queries": int, "n_old": int, "n_overflow": int,
@@ -110,9 +156,11 @@ def check(doc: dict):
     kind = doc.get("kind")
     if kind == "hash_probe":
         return check_probe(doc)
+    if kind == "tpcc_recovery":
+        return check_recovery(doc)
     if kind != "tpcc_sustain":
         raise SchemaError(f"kind {doc.get('kind')!r} not in "
-                          f"('tpcc_sustain', 'hash_probe')")
+                          f"('tpcc_sustain', 'hash_probe', 'tpcc_recovery')")
     _check_fields(doc.get("config"), CONFIG_KEYS, "config")
     _check_fields(doc.get("summary"), SUMMARY_KEYS, "summary")
 
@@ -173,6 +221,13 @@ def main(argv):
         print(f"check_bench_json: {path} ok — {len(doc['points'])} probe "
               f"points, best >=64k speedup {s['best_speedup_64k']:.2f}x, "
               f"fused_wins_at_64k={s['fused_wins_at_64k']}")
+    elif doc["kind"] == "tpcc_recovery":
+        r = doc["recovery"]
+        print(f"check_bench_json: {path} ok — killed server "
+              f"{doc['config']['dead_server']} at round "
+              f"{doc['config']['kill_round']}, {r['replayed_entries']} "
+              f"entries replayed, {r['released_locks']} locks released in "
+              f"{r['recovery_seconds']:.2f}s, bit_identical=True")
     else:
         print(f"check_bench_json: {path} ok — {doc['config']['rounds']} "
               f"rounds, {s['commits']}/{s['attempts']} committed, "

@@ -29,7 +29,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import cas, hashtable as ht, header as hdr_ops, mvcc
+from repro.core import cas, hashtable as ht, header as hdr_ops, mvcc, wal
 from repro.core.mvcc import VersionedTable
 from repro.core.tsoracle import VectorOracle, VectorState
 
@@ -110,6 +110,7 @@ class RoundResult(NamedTuple):
     read_data: jnp.ndarray      # int32 [T, RS, W] (post-visibility payloads)
     ops: OpCounts
     vis: VisStats
+    journal: Optional[wal.Journal] = None  # §6.2 — set iff one was passed in
 
 
 ComputeFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
@@ -200,6 +201,9 @@ def run_round(
     directory: Optional[ht.HashTable] = None,
     keyed: Optional[KeyedReads] = None,
     dir_max_probes: int = 16,
+    journal: Optional[wal.Journal] = None,
+    journal_round=0,
+    journal_seq=0,
 ) -> RoundResult:
     """Execute one vectorized round of the SI protocol.
 
@@ -217,6 +221,12 @@ def run_round(
     and install at the *resolved* slot. A directory miss behaves exactly
     like a GC'd version: the read reports not-found and the transaction
     aborts with ``snapshot_miss``.
+
+    ``journal`` switches the §6.2 WAL on: the round's intent records (T,
+    resolved write slots, headers, payloads, effective write mask) are
+    appended *before* install and the outcome record after the commit
+    decision, stamped ``(journal_round, journal_seq)`` for replay ordering.
+    The updated journal rides back on ``RoundResult.journal``.
     """
     T, RS = batch.read_slots.shape
     WS = batch.write_ref.shape[1]
@@ -298,6 +308,14 @@ def run_round(
     committed = cas.all_granted_per_txn(effective, txn_of_req, T, req_active)
     committed = committed & txn_found & active
 
+    # ---- 6. append the WAL intent records (§6.2 — *before* install) -------
+    if journal is not None:
+        journal = wal.append_intent(
+            journal, batch.tid, rts_vec,
+            *wal.pad_writes(journal, write_slots, new_hdr, new_data,
+                            req_active.reshape(T, WS)),
+            round_no=journal_round, seq=journal_seq)
+
     # ---- 7. install write-sets of committed transactions ------------------
     inst_mask = res.granted & committed[txn_of_req]   # they hold these locks
     do_install = effective & committed[txn_of_req]
@@ -314,6 +332,11 @@ def run_round(
     # ---- 9. make visible: bump own slot of T_R ----------------------------
     state = oracle.make_visible(state, batch.tid, cts, committed)
 
+    # the outcome record lands after the decision (§3.2: until it does the
+    # transaction is undetermined and its locks are the monitor's)
+    if journal is not None:
+        journal = wal.append_outcome(journal, batch.tid, committed)
+
     # ---- op accounting -----------------------------------------------------
     ops = count_ops(oracle, batch, txn_found, from_current,
                     jnp.sum(do_install), jnp.sum(release_mask),
@@ -325,7 +348,7 @@ def run_round(
     del inst_mask
     return RoundResult(table=table, oracle_state=state, committed=committed,
                        snapshot_miss=~txn_found, read_data=read_data, ops=ops,
-                       vis=vis)
+                       vis=vis, journal=journal)
 
 
 def run_rounds(table, oracle, state, make_batch, compute_fn, n_rounds: int,

@@ -26,7 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core import cas, gc as gc_ops, hashtable as ht, header as hdr_ops, \
-    mvcc
+    mvcc, wal
 from repro.core.catalog import Catalog
 from repro.core.mvcc import VersionedTable
 from repro.core.si import TxnBatch
@@ -175,7 +175,7 @@ def _local_slots(slots, base, count):
 def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
                       compute_fn: Callable, shard_records: int, *,
                       shard_vector: bool = False, n_dir_buckets: int = 0,
-                      dir_max_probes: int = 16):
+                      dir_max_probes: int = 16, with_journal: bool = False):
     """Build a jittable ``round(table_sharded, vec, batch, aux)`` executor.
 
     ``table_sharded``: VersionedTable with leading record axis sharded over
@@ -210,12 +210,22 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
     reconstructs the lookup — then validate/install at the resolved slot,
     bit-identical to :func:`repro.core.si.run_round`'s key mode.
 
+    ``with_journal=True`` wires the §6.2 WAL through the round: ``round_fn``
+    grows keyword arguments ``journal`` (a :class:`~repro.core.wal.Journal`
+    whose replica axis is mapped over the mesh axis — one resident replica
+    per memory server, see :func:`shard_journal`), ``round_no`` and ``seq``;
+    every server appends the round's intent records to its own replica
+    *before* install and the outcome record after the global commit
+    decision (identical per-server content — the broadcast journal write),
+    and the updated journal is returned as a fourth output. A server
+    failure therefore leaves surviving replicas to replay from.
+
     Returns ``(round_fn, n_shards)`` with
     ``round_fn(table, vec, batch, aux, active=None) -> (table, vec,
-    DistRoundOut)``. ``active`` (bool [T], default all-true) marks the
-    threads running a transaction this round — the mixed-workload sub-round
-    mask of :func:`repro.core.si.run_round`: inactive threads issue no CAS
-    and publish no commit timestamp.
+    DistRoundOut[, journal])``. ``active`` (bool [T], default all-true)
+    marks the threads running a transaction this round — the mixed-workload
+    sub-round mask of :func:`repro.core.si.run_round`: inactive threads
+    issue no CAS and publish no commit timestamp.
     """
     n_shards = mesh.shape[axis]
     if shard_vector:
@@ -229,7 +239,12 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
                          f"the mesh axis ({n_shards})")
 
     def local_round(table: VersionedTable, vec: jnp.ndarray, batch: TxnBatch,
-                    aux, active, *dir_args):
+                    aux, active, *extra):
+        if with_journal:
+            journal, jround, jseq = extra[:3]
+            dir_args = extra[3:]
+        else:
+            journal, dir_args = None, extra
         shard_id = jax.lax.axis_index(axis)
         base = shard_id * shard_records
         T, RS = batch.read_slots.shape
@@ -327,6 +342,17 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         fails = jax.lax.psum(fails, axis)
         committed = (fails == 0) & txn_found & active
 
+        # ---- 6b. append the WAL intent records (§6.2 — before install) ---
+        # every memory server writes the identical entry into its resident
+        # replica: the "journal to more than one server" broadcast. Slots
+        # are logged GLOBAL so any survivor can replay the whole pool.
+        if with_journal:
+            journal = wal.append_intent(
+                journal, batch.tid, vec,
+                *wal.pad_writes(journal, wslots, new_hdr,
+                                new_data, req_active.reshape(T, WS)),
+                round_no=jround, seq=jseq)
+
         # ---- 7./8. install / release on the owning shard -----------------
         do_install = effective & committed[txn_of_req]
         inst = mvcc.install(table, wloc, new_hdr.reshape(-1, 2),
@@ -340,6 +366,8 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
                                   axis)
 
         # ---- 9. make visible (identical update as the reference path) ----
+        if with_journal:   # outcome record after the global decision (§3.2)
+            journal = wal.append_outcome(journal, batch.tid, committed)
         vec = oracle.make_visible(
             VectorState(vec=vec), batch.tid, cts, committed).vec
         if shard_vector:
@@ -352,6 +380,8 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
             from_current=from_current, from_ovf=from_ovf,
             read_found=read_found, n_installs=n_installs,
             n_releases=n_releases)
+        if with_journal:
+            return table, vec, out, journal
         return table, vec, out
 
     tbl_spec = VersionedTable(
@@ -365,21 +395,37 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         committed=P(), snapshot_miss=P(), read_data=P(), txn_found=P(),
         from_current=P(), from_ovf=P(), read_found=P(), n_installs=P(),
         n_releases=P())
+    # one journal replica resident per memory server; the append cursor is
+    # maintained identically on every server (replicated)
+    jnl_spec = wal.Journal(
+        ts_vec=P(axis), slots=P(axis), new_hdr=P(axis), new_data=P(axis),
+        write_mask=P(axis), committed=P(axis), resolved=P(axis),
+        round_no=P(axis), seq=P(axis), used=P())
+    jnl_specs = (jnl_spec, P(), P()) if with_journal else ()
     dir_specs = (P(axis), P(axis), P(), P()) if n_dir_buckets else ()
+    out_specs = (tbl_spec, vec_spec, out_spec) \
+        + ((jnl_spec,) if with_journal else ())
     fn = jax.jit(shard_map(local_round, mesh=mesh,
                            in_specs=(tbl_spec, vec_spec, batch_spec, P(), P())
-                           + dir_specs,
-                           out_specs=(tbl_spec, vec_spec, out_spec),
-                           check_vma=False))
+                           + jnl_specs + dir_specs,
+                           out_specs=out_specs, check_vma=False))
 
-    def round_fn(table, vec, batch, aux, active=None, *, directory=None,
-                 read_keys=None, key_mask=None):
+    def round_fn(table, vec, batch, aux, active=None, *, journal=None,
+                 round_no=0, seq=0, directory=None, read_keys=None,
+                 key_mask=None):
         if active is None:
             active = jnp.ones((batch.tid.shape[0],), bool)
+        if (journal is not None) != with_journal:
+            raise ValueError(
+                "journal argument does not match the executor: build "
+                f"distributed_round(with_journal={with_journal}) and pass "
+                "a journal iff it is True")
+        jargs = (journal, jnp.asarray(round_no, jnp.int32),
+                 jnp.asarray(seq, jnp.int32)) if with_journal else ()
         if n_dir_buckets:
-            return fn(table, vec, batch, aux, active, directory.keys,
+            return fn(table, vec, batch, aux, active, *jargs, directory.keys,
                       directory.vals, read_keys, key_mask)
-        return fn(table, vec, batch, aux, active)
+        return fn(table, vec, batch, aux, active, *jargs)
 
     return round_fn, n_shards
 
@@ -575,3 +621,26 @@ def shard_vector(mesh: Mesh, axis: str, vec: jnp.ndarray) -> jnp.ndarray:
     """Place the timestamp vector range-partitioned over the mesh axis
     (§4.2 "Partitioning of T_R" — pair with ``shard_vector=True``)."""
     return jax.device_put(vec, NamedSharding(mesh, P(axis)))
+
+
+def shard_journal(mesh: Mesh, axis: str, journal: wal.Journal) -> wal.Journal:
+    """Place a §6.2 journal with its replica axis mapped over the mesh axis:
+    one journal replica resident on each memory server, so a server failure
+    leaves ``n_shards - 1`` identical survivors. ``n_replicas`` must equal
+    the mesh-axis size; the append cursor stays replicated."""
+    n_shards = mesh.shape[axis]
+    if journal.n_replicas != n_shards:
+        raise ValueError(
+            f"journal has {journal.n_replicas} replicas but the {axis!r} "
+            f"axis holds {n_shards} memory servers — init the journal with "
+            f"n_replicas={n_shards}")
+
+    def put(x):
+        return jax.device_put(
+            x, NamedSharding(mesh, P(*([axis] + [None] * (x.ndim - 1)))))
+
+    entry_fields = ("ts_vec", "slots", "new_hdr", "new_data", "write_mask",
+                    "committed", "resolved", "round_no", "seq")
+    return journal._replace(
+        used=jax.device_put(journal.used, NamedSharding(mesh, P())),
+        **{f: put(getattr(journal, f)) for f in entry_fields})

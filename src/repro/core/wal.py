@@ -4,29 +4,61 @@ Each transaction-execution thread writes a *private log journal* with RDMA
 writes to more than one memory server **before** installing its write-set.
 An entry is ``⟨T, S⟩``: the read timestamp vector the transaction used and
 the executed statement with all parameters (we log the physical write-set —
-slots, headers, payloads — which is the fully-bound statement).
+slots, headers, payloads — which is the fully-bound statement). Logging is
+two records per transaction, matching §3.2's undetermined-transaction
+semantics:
+
+* :func:`append_intent` — written *before* install: T, slots, headers,
+  payloads, write mask, plus the driver round and an intra-round sequence
+  number (which sub-round of the round this entry belongs to).
+* :func:`append_outcome` — written after the commit decision: the boolean
+  outcome. An entry with an intent but no outcome is an *undetermined*
+  transaction: replay must skip it (the decision is unknown) and the
+  monitoring server must release any locks it left behind.
 
 Recovery: after a memory-server failure the system halts, restores the last
 checkpoint, then one dedicated compute server replays the merged private
 journals *partially ordered by their logged read timestamps T*. We realize
-the partial order with the linear extension ``sort by (sum(T), thread)`` —
-``sum`` is strictly monotone w.r.t. vector dominance, so any T ≤ T' replays
-in order; concurrent entries (incomparable T) land in a deterministic but
-arbitrary order, which is exactly what GSI permits.
+the partial order with a linear extension by ``sum(T)`` — strictly monotone
+w.r.t. vector dominance, so any T ≤ T' replays in order. The sum is taken
+exactly (a (hi, lo) base-2^16 digit pair; a plain uint32 sum wraps for long
+runs) and ties are broken by the logged (round, seq) so that entries of the
+same driver round replay in the engine's sub-round order; concurrent entries
+(incomparable T) land in a deterministic but arbitrary order, which is
+exactly what GSI permits. The version-mover thread runs between *rounds* of
+the replay (it runs once per round in the live engine), so the recovered
+overflow rings are laid out exactly as the uninterrupted run's.
+
+Each journal is a fixed-capacity per-thread ring: position ``used % capacity``
+holds the next entry. Replay only trusts the *live window* — the last
+``min(used, capacity)`` appends — and the caller passes ``since`` (the
+per-thread append count at the checkpoint) so that replay fails loudly when
+the ring has wrapped past an unreplayed entry instead of silently replaying
+overwritten positions.
 
 Compute-server failures: servers are stateless; a *monitoring* compute server
 detects the failure and releases abandoned locks using the journal's intent
-records (slots + expected headers).
+records — every unresolved entry in the live window, not just the latest
+(a thread can die with multiple in-flight sub-round entries unresolved).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import cas, header as hdr_ops, mvcc
 from repro.core.mvcc import VersionedTable
+
+# sentinel sort keys for entries replay must skip (uncommitted, undetermined
+# or outside the live window): strictly above any legitimate key.  The (hi,
+# lo) digit sum of a real entry has lo < 2^16 and hi ≤ n_slots (bounded by
+# init_journal's n_slots < 2^16 check), so 0xFFFFFFFF cannot collide — the
+# old single-key sentinel collided with a committed sum of 0xFFFFFFFF.
+_KEY_SENTINEL = jnp.uint32(0xFFFFFFFF)
+_SEQ_SENTINEL = jnp.int32(0x7FFFFFFF)
 
 
 class Journal(NamedTuple):
@@ -34,23 +66,36 @@ class Journal(NamedTuple):
 
     Replication is a leading axis: entry writes are broadcast (the paper's
     "writes its journal to more than one memory server"); recovery reads any
-    surviving replica.
+    surviving replica. In the distributed engine the axis is mapped across
+    the memory-server mesh (one replica resident per server — see
+    ``store.shard_journal``) so a server failure leaves survivors.
     """
     ts_vec: jnp.ndarray     # uint32 [Rep, Th, Cap, n_slots] — logged T
     slots: jnp.ndarray      # int32  [Rep, Th, Cap, WS]
     new_hdr: jnp.ndarray    # uint32 [Rep, Th, Cap, WS, 2]
     new_data: jnp.ndarray   # int32  [Rep, Th, Cap, WS, W]
     write_mask: jnp.ndarray  # bool  [Rep, Th, Cap, WS]
-    committed: jnp.ndarray  # bool   [Rep, Th, Cap]
-    used: jnp.ndarray       # int32  [Th]
+    committed: jnp.ndarray  # bool   [Rep, Th, Cap] — outcome record
+    resolved: jnp.ndarray   # bool   [Rep, Th, Cap] — outcome was written
+    round_no: jnp.ndarray   # int32  [Rep, Th, Cap] — driver round of entry
+    seq: jnp.ndarray        # int32  [Rep, Th, Cap] — sub-round within round
+    used: jnp.ndarray       # int32  [Th] — total appends (ring cursor)
 
     @property
     def capacity(self) -> int:
         return self.ts_vec.shape[2]
 
+    @property
+    def n_replicas(self) -> int:
+        return self.ts_vec.shape[0]
+
 
 def init_journal(n_threads: int, capacity: int, n_slots: int, ws: int,
                  width: int, n_replicas: int = 2) -> Journal:
+    if n_slots >= 1 << 16:
+        raise ValueError(
+            f"journal order key supports < 2^16 timestamp slots, got "
+            f"{n_slots} (the (hi, lo) digit sum would overflow)")
     R, T, C = n_replicas, n_threads, capacity
     return Journal(
         ts_vec=jnp.zeros((R, T, C, n_slots), jnp.uint32),
@@ -59,90 +104,261 @@ def init_journal(n_threads: int, capacity: int, n_slots: int, ws: int,
         new_data=jnp.zeros((R, T, C, ws, width), jnp.int32),
         write_mask=jnp.zeros((R, T, C, ws), bool),
         committed=jnp.zeros((R, T, C), bool),
+        resolved=jnp.zeros((R, T, C), bool),
+        round_no=jnp.zeros((R, T, C), jnp.int32),
+        seq=jnp.zeros((R, T, C), jnp.int32),
         used=jnp.zeros((T,), jnp.int32),
     )
 
 
-def append(j: Journal, tid, ts_vec, slots, new_hdr, new_data, write_mask,
-           committed) -> Journal:
-    """Log one round's entries for threads ``tid`` (before install).
+def _put_entry(field, rep, tid, pos, val):
+    """Broadcast one per-thread entry value across the replica axis."""
+    return field.at[rep[:, None], tid[None, :], pos[None, :]].set(
+        jnp.broadcast_to(val, (rep.shape[0],) + val.shape))
 
-    ``committed`` is written after the decision (outcome record); replay only
-    applies committed entries — an entry without outcome is an *undetermined*
-    transaction whose locks the monitor must release (§3.2 problem 4).
+
+def pad_writes(j: Journal, slots, new_hdr, new_data, write_mask):
+    """Pad a write-set narrower than the journal's WS with masked-off slots
+    (an entry logs a fixed-width statement; unused columns carry mask=False
+    and the safe slot 0)."""
+    ws = j.slots.shape[3]
+    T, w = slots.shape
+    if w == ws:
+        return slots, new_hdr, new_data, write_mask
+    if w > ws:
+        raise ValueError(f"write-set width {w} exceeds journal WS {ws}")
+    pad = ws - w
+    return (
+        jnp.concatenate([slots, jnp.zeros((T, pad), jnp.int32)], axis=1),
+        jnp.concatenate([new_hdr, jnp.zeros((T, pad, 2), jnp.uint32)], axis=1),
+        jnp.concatenate(
+            [new_data, jnp.zeros((T, pad, new_data.shape[-1]), jnp.int32)],
+            axis=1),
+        jnp.concatenate([write_mask, jnp.zeros((T, pad), bool)], axis=1),
+    )
+
+
+def append_intent(j: Journal, tid, ts_vec, slots, new_hdr, new_data,
+                  write_mask, *, round_no=0, seq=0) -> Journal:
+    """Log the intent records ⟨T, S⟩ of one sub-round, *before* install.
+
+    The entry is written undetermined (no outcome yet): ``committed=False``,
+    ``resolved=False``. ``ts_vec`` is the shared read snapshot [n_slots];
+    ``round_no``/``seq`` stamp the driver round and the sub-round so replay
+    can break sum(T) ties in execution order and run the version mover at
+    round boundaries. Bumps the ring cursor.
     """
+    tid = jnp.asarray(tid, jnp.int32)
+    T = tid.shape[0]
     pos = j.used[tid] % j.capacity
     rep = jnp.arange(j.ts_vec.shape[0])
 
     def put(field, val):
-        return field.at[rep[:, None], tid[None, :], pos[None, :]].set(
-            jnp.broadcast_to(val, (rep.shape[0],) + val.shape))
+        return _put_entry(field, rep, tid, pos, val)
 
-    return Journal(
-        ts_vec=put(j.ts_vec, jnp.broadcast_to(ts_vec, (tid.shape[0],)
-                                              + ts_vec.shape)),
+    return j._replace(
+        ts_vec=put(j.ts_vec, jnp.broadcast_to(ts_vec, (T,) + ts_vec.shape)),
         slots=put(j.slots, slots),
         new_hdr=put(j.new_hdr, new_hdr),
         new_data=put(j.new_data, new_data),
         write_mask=put(j.write_mask, write_mask),
-        committed=put(j.committed, committed),
+        committed=put(j.committed, jnp.zeros((T,), bool)),
+        resolved=put(j.resolved, jnp.zeros((T,), bool)),
+        round_no=put(j.round_no, jnp.broadcast_to(
+            jnp.asarray(round_no, jnp.int32), (T,))),
+        seq=put(j.seq, jnp.broadcast_to(jnp.asarray(seq, jnp.int32), (T,))),
         used=j.used.at[tid].add(1),
     )
 
 
+def append_outcome(j: Journal, tid, committed) -> Journal:
+    """Write the outcome record of each thread's *latest* intent entry.
+
+    Resolves the entry appended by the matching :func:`append_intent`:
+    replay applies it iff ``committed``; until this record lands the
+    transaction is undetermined (§3.2) and its locks are the monitor's to
+    release.
+    """
+    tid = jnp.asarray(tid, jnp.int32)
+    T = tid.shape[0]
+    pos = (j.used[tid] - 1) % j.capacity
+    rep = jnp.arange(j.ts_vec.shape[0])
+    return j._replace(
+        committed=_put_entry(j.committed, rep, tid, pos, committed),
+        resolved=_put_entry(j.resolved, rep, tid, pos, jnp.ones((T,), bool)),
+    )
+
+
+def _live_window(j: Journal, since=None) -> jnp.ndarray:
+    """bool [Th, Cap]: ring positions whose latest entry has append index
+    ≥ ``since`` (per-thread). With ``since=None``, the whole live window —
+    the last ``min(used, capacity)`` appends; positions never written (or
+    overwritten since) are excluded."""
+    Cap = j.capacity
+    u = j.used[:, None]
+    p = jnp.arange(Cap, dtype=jnp.int32)[None, :]
+    # append index of the latest entry at ring position p (< 0: never used)
+    idx = u - 1 - jnp.mod(u - 1 - p, Cap)
+    lo = (jnp.zeros_like(j.used) if since is None
+          else jnp.asarray(since, jnp.int32))
+    return (idx >= 0) & (idx >= lo[:, None])
+
+
+def _check_window_coverage(j: Journal, since) -> None:
+    """Fail loudly when the ring wrapped past an unreplayed entry: replaying
+    the live window would then silently skip overwritten writes (the old
+    code replayed raw positions ``< used`` and happily produced a wrong
+    table once ``used > capacity``)."""
+    used = np.asarray(jax.device_get(j.used))
+    lo = (np.zeros_like(used) if since is None
+          else np.asarray(jax.device_get(since)))
+    over = used - lo > j.capacity
+    if over.any():
+        worst = int((used - lo).max())
+        raise ValueError(
+            f"journal ring overwrote unreplayed entries for threads "
+            f"{np.nonzero(over)[0].tolist()}: {worst} appends since the "
+            f"checkpoint exceed capacity {j.capacity} — grow the journal "
+            f"or checkpoint more often")
+
+
+def _pick_replica(j: Journal, replica, survivors) -> int:
+    if survivors is None:
+        return replica
+    survivors = np.asarray(jax.device_get(jnp.asarray(survivors)))
+    if not survivors.any():
+        raise ValueError("no surviving journal replica — unrecoverable")
+    return int(np.argmax(survivors))
+
+
+def _order_keys(j: Journal, replica: int):
+    """Exact sum(T) as a (hi, lo) base-2^16 digit pair, flat [Th*Cap].
+
+    ``sum(T)`` over uint32 wraps once the vector entries are large (long
+    runs, many threads) — the old single uint32 key then *inverted* the
+    dominance order. Summing the low and high 16-bit halves separately is
+    exact for < 2^16 slots and stays in uint32.
+    """
+    ts = j.ts_vec[replica]
+    lo16 = jnp.sum(ts & jnp.uint32(0xFFFF), axis=-1, dtype=jnp.uint32)
+    hi16 = jnp.sum(ts >> 16, axis=-1, dtype=jnp.uint32)
+    hi = hi16 + (lo16 >> 16)
+    lo = lo16 & jnp.uint32(0xFFFF)
+    return hi.reshape(-1), lo.reshape(-1)
+
+
+def entry_status(j: Journal, replica: int = 0, *, since=None):
+    """(replayable, undetermined) bool [Th, Cap] masks over the live window.
+
+    ``replayable``: committed entries replay will install. ``undetermined``:
+    intent written, outcome never resolved — §3.2's unknown-decision
+    transactions; the monitor releases their locks and replay skips them.
+    """
+    live = _live_window(j, since)
+    return (j.committed[replica] & j.resolved[replica] & live,
+            ~j.resolved[replica] & live)
+
+
 def replay(j: Journal, table: VersionedTable, replica: int = 0,
-           survivors=None) -> VersionedTable:
+           survivors=None, *, since=None, reuse_only: bool = False,
+           move_versions: bool = True) -> VersionedTable:
     """Rebuild ``table`` from a checkpoint by replaying the merged journals.
 
     ``survivors``: optional bool [Rep] — which replicas survived; the first
     surviving replica is used (they are identical by construction).
+    ``since``: per-thread append counts at the checkpoint ([Th] int32) —
+    only entries appended after it replay; raises if the ring wrapped past
+    one. Only committed+resolved entries install (undetermined entries are
+    skipped). Entries replay ordered by the exact sum(T) key with (round,
+    seq) tie-breaks; the version mover runs at round boundaries with the
+    engine's mode (``reuse_only`` mirrors the driver's GC flag), so the
+    recovered overflow rings match the uninterrupted run bit for bit.
     """
-    if survivors is not None:
-        replica = int(jnp.argmax(jnp.asarray(survivors)))
+    replica = _pick_replica(j, replica, survivors)
+    _check_window_coverage(j, since)
     Th, Cap = j.ts_vec.shape[1], j.capacity
-    order_key = jnp.sum(j.ts_vec[replica], axis=-1)          # [Th, Cap]
-    flat_key = order_key.reshape(-1)
-    # never-used entries sort last
-    entry_idx = jnp.arange(Th * Cap)
-    used = (entry_idx % Cap)[None, :] < 0  # placeholder
-    valid = (jnp.arange(Cap)[None, :] < j.used[:, None]).reshape(-1)
-    com = j.committed[replica].reshape(-1) & valid
-    sort_key = jnp.where(com, flat_key, jnp.uint32(0xFFFFFFFF))
-    order = jnp.argsort(sort_key, stable=True)
+    hi, lo = _order_keys(j, replica)
+    com = entry_status(j, replica, since=since)[0].reshape(-1)
+    hi = jnp.where(com, hi, _KEY_SENTINEL)
+    lo = jnp.where(com, lo, _KEY_SENTINEL)
+    rno = jnp.where(com, j.round_no[replica].reshape(-1), _SEQ_SENTINEL)
+    sq = jnp.where(com, j.seq[replica].reshape(-1), _SEQ_SENTINEL)
+    order = jnp.lexsort((sq, rno, lo, hi))
     slots = j.slots[replica].reshape(Th * Cap, -1)[order]
     hdrs = j.new_hdr[replica].reshape(Th * Cap, -1, 2)[order]
     data = j.new_data[replica].reshape(Th * Cap, -1,
                                        j.new_data.shape[-1])[order]
     wm = j.write_mask[replica].reshape(Th * Cap, -1)[order]
     com = com[order]
+    rno = rno[order]
+    # memory servers keep their version-mover threads running during
+    # recovery; the live engine moves once per driver round, so the replay
+    # moves at round boundaries (trailing True covers the final round)
+    boundary = jnp.concatenate(
+        [rno[:-1] != rno[1:], jnp.ones((1,), bool)])
 
     def body(tbl, ent):
-        s, h, d, m, c = ent
-        out = mvcc.install(tbl, s, h, d, m & c)
-        # memory servers keep their version-mover threads running during
-        # recovery, so circular slots are continuously freed for the replay
-        return mvcc.version_mover(out.table), None
+        s, h, d, m, c, b = ent
+        tbl = mvcc.install(tbl, s, h, d, m & c).table
+        if move_versions:
+            tbl = jax.lax.cond(
+                b, lambda t: mvcc.version_mover(t, reuse_only=reuse_only),
+                lambda t: t, tbl)
+        return tbl, None
 
-    table, _ = jax.lax.scan(body, table, (slots, hdrs, data, wm, com))
-    del used
+    table, _ = jax.lax.scan(
+        body, table, (slots, hdrs, data, wm, com, boundary))
     return table
 
 
-def release_abandoned_locks(j: Journal, table: VersionedTable, dead_tid: int,
-                            replica: int = 0) -> VersionedTable:
-    """Monitoring-compute-server path (§6.2): unlock what the dead server's
-    threads locked but never resolved.
+def replay_vector(j: Journal, vec: jnp.ndarray, replica: int = 0,
+                  survivors=None, *, since=None) -> jnp.ndarray:
+    """Rebuild the timestamp vector at the crash point from the checkpoint's
+    vector plus the journals' committed entries.
 
-    A lock is released iff the record is locked AND its header (modulo the
-    lock bit) matches a header the dead thread was about to install *or* had
-    read — i.e. the dead thread is the only possible holder: had another
-    transaction held it, the installed version would differ.
+    ``make_visible`` is a monotone per-slot bump, so the vector at the crash
+    is the per-slot max of the checkpoint vector and every committed commit
+    timestamp since — both are logged in the intent headers (⟨slot, cts⟩).
     """
-    last = (j.used[dead_tid] - 1) % j.capacity
-    slots = j.slots[replica, dead_tid, last]
-    mask = j.write_mask[replica, dead_tid, last]
-    resolved = j.committed[replica, dead_tid, last]
-    mask = mask & ~resolved
-    locked = hdr_ops.is_locked(table.cur_hdr[jnp.where(mask, slots, 0)])
+    replica = _pick_replica(j, replica, survivors)
+    _check_window_coverage(j, since)
+    com = entry_status(j, replica, since=since)[0].reshape(-1)
+    h = j.new_hdr[replica][:, :, 0, :]              # [Th, Cap, 2]
+    slot = hdr_ops.thread_id(h).astype(jnp.int32).reshape(-1)
+    cts = hdr_ops.commit_ts(h).reshape(-1)
+    slot = jnp.clip(jnp.where(com, slot, 0), 0, vec.shape[0] - 1)
+    return vec.at[slot].max(jnp.where(com, cts, jnp.uint32(0)))
+
+
+def release_abandoned_locks(j: Journal, table: VersionedTable, dead_tid,
+                            replica: int = 0) -> VersionedTable:
+    """Monitoring-compute-server path (§6.2): unlock what the dead threads
+    locked but never resolved.
+
+    Scans **every** unresolved entry in each dead thread's live window — not
+    just the latest: a thread dies with multiple in-flight sub-round entries,
+    and after a ring wrap (or with ``used == 0``) the "last" position points
+    at a stale or never-written slot. A lock is released iff the record is
+    currently locked and an unresolved intent names it.
+    """
+    dead = jnp.atleast_1d(jnp.asarray(dead_tid, jnp.int32))
+    live = _live_window(j)[dead]                    # [D, Cap]
+    unresolved = live & ~j.resolved[replica, dead]
+    mask = (j.write_mask[replica, dead]
+            & unresolved[:, :, None]).reshape(-1)
+    slots = jnp.where(mask, j.slots[replica, dead].reshape(-1), 0)
+    locked = hdr_ops.is_locked(table.cur_hdr[slots])
     return table._replace(
         cur_hdr=cas.release(table.cur_hdr, slots, mask & locked))
+
+
+def rereplicate(j: Journal, survivors) -> Journal:
+    """Restore full replication after a server loss: every replica becomes a
+    copy of the first surviving one (the replacement server's journal is
+    seeded from a survivor before the workload resumes)."""
+    r = _pick_replica(j, 0, survivors)
+    entry_fields = ("ts_vec", "slots", "new_hdr", "new_data", "write_mask",
+                    "committed", "resolved", "round_no", "seq")
+    return j._replace(**{
+        f: jnp.broadcast_to(getattr(j, f)[r][None], getattr(j, f).shape)
+        for f in entry_fields})

@@ -17,13 +17,17 @@ over via header CAS — TPC-C's classic conflict, left fully intact.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import gc as gc_ops, hashtable as ht, header as hdr_ops, \
-    locality, mvcc, netmodel, rangeindex as ri, si, store
+from repro.checkpoint import snapshot
+
+from repro.core import cas, gc as gc_ops, hashtable as ht, \
+    header as hdr_ops, locality, mvcc, netmodel, rangeindex as ri, si, \
+    store, wal
 from repro.core.catalog import Catalog
 from repro.core.si import TxnBatch
 from repro.core.tsoracle import VectorOracle, VectorState
@@ -230,6 +234,34 @@ def order_key(w, d, o_id):
     return ((w * DISTRICTS + d) * MAX_O_PER_DISTRICT + o_id).astype(jnp.uint32)
 
 
+# ------------------------------------------------------- §6.2 WAL journal ----
+# Sub-round sequence numbers within one mixed driver round: the journal
+# stamps each entry (round, seq) so replay can tie-break equal-T entries in
+# the engine's execution order (the write sub-rounds run in this order and
+# each insert group lands right after its sub-round's SI commit).
+_JSEQ_NEWORDER, _JSEQ_NEWORDER_INS, _JSEQ_PAYMENT, _JSEQ_PAYMENT_INS, \
+    _JSEQ_DELIVERY = range(5)
+JOURNAL_WS = 2 + MAX_OL   # widest logged statement: the new-order insert
+#   group (order + new-order + up to 15 order lines in one entry)
+JOURNAL_APPENDS_PER_ROUND = 5   # every *executed* write sub-round appends
+#   one entry per thread (inactive lanes log an empty write mask)
+
+
+def make_journal(cfg: TPCCConfig, oracle: VectorOracle, *,
+                 capacity_rounds: int, n_replicas: int = 2) -> wal.Journal:
+    """A §6.2 journal sized for the mixed driver.
+
+    Each driver round appends at most :data:`JOURNAL_APPENDS_PER_ROUND`
+    entries per thread, so the ring must cover the checkpoint interval in
+    rounds (plus slack for in-flight intents at a crash). With a distributed
+    engine pass ``n_replicas = engine.n_shards`` and place the replica axis
+    across the memory servers via :func:`repro.core.store.shard_journal`.
+    """
+    return wal.init_journal(
+        cfg.n_threads, JOURNAL_APPENDS_PER_ROUND * capacity_rounds,
+        oracle.n_slots, JOURNAL_WS, WIDTH, n_replicas=n_replicas)
+
+
 # --------------------------------------------------- §5.2 hash directory ----
 # Key encodings for the hash index: per-table tag in the top bits, dense
 # rank below. The directory's key space is independent of the range index's.
@@ -416,6 +448,7 @@ class NewOrderResult(NamedTuple):
     ops: si.OpCounts
     batch: TxnBatch             # the round's requests (locality accounting)
     vis: si.VisStats            # §5.3 visibility telemetry
+    journal: Optional[wal.Journal] = None   # §6.2 — set iff one was passed
 
 
 def _neworder_batch(cfg: TPCCConfig, lay: TPCCLayout,
@@ -484,7 +517,7 @@ def _neworder_new_data(rd, inp: workload.NewOrderInputs):
 
 def _neworder_inserts(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                       oracle: VectorOracle, tbl, vec, committed, read_data,
-                      inp: workload.NewOrderInputs, round_no):
+                      inp: workload.NewOrderInputs, round_no, journal=None):
     """Inserts, within the transaction boundary (§6.1): order, new-order and
     order-lines go to thread-private extends (conflict-free one-sided
     installs, §5.3) plus the order secondary index. Shared verbatim by the
@@ -533,15 +566,39 @@ def _neworder_inserts(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         oldata.reshape(-1, WIDTH),
         (can_insert[:, None] & line_mask).reshape(-1))
 
+    if journal is not None:
+        # one combined ⟨T, S⟩ entry for the whole insert group: the slots are
+        # disjoint (thread-private extends), so replaying it as one batched
+        # install is bit-identical to the three sequential installs above.
+        # T is the *post-sub-round* vector: the inserts carry the sub-round's
+        # commit timestamps, so they replay right after it (tie broken by
+        # seq) and before any later sub-round that could observe them.
+        jslots = jnp.concatenate([oslot[:, None], noslot[:, None], olslot],
+                                 axis=1)
+        jhdr = jnp.broadcast_to(
+            hdr_ops.pack(slot_ids.astype(jnp.uint32), cts)[:, None, :],
+            (T, 2 + MAX_OL, 2))
+        jdata = jnp.concatenate(
+            [odata[:, None, :], nodata[:, None, :], oldata], axis=1)
+        jmask = jnp.concatenate(
+            [can_insert[:, None], can_insert[:, None],
+             can_insert[:, None] & line_mask], axis=1)
+        journal = wal.append_intent(
+            journal, tids, vec,
+            *wal.pad_writes(journal, jslots, jhdr, jdata, jmask),
+            round_no=round_no, seq=_JSEQ_NEWORDER_INS)
+        journal = wal.append_outcome(journal, tids, can_insert)
+
     okey = order_key(inp.w_id, inp.d_id, o_id)
     idx = ri.insert(st.order_index, okey, oslot, mask=can_insert)
     cursor = st.nam.extends.cursor.at[:, 0].add(can_insert.astype(jnp.int32))
-    return tbl, idx, store.ExtendState(cursor=cursor), o_id
+    return tbl, idx, store.ExtendState(cursor=cursor), o_id, journal
 
 
 def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                    oracle: VectorOracle, inp: workload.NewOrderInputs,
-                   rts_vec=None, round_no=0, active=None) -> NewOrderResult:
+                   rts_vec=None, round_no=0, active=None,
+                   journal=None) -> NewOrderResult:
     """One vectorized round of new-order transactions through SI
     (single-shard reference path)."""
     batch, keyed = _neworder_batch(cfg, lay, inp, active)
@@ -549,16 +606,18 @@ def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                        lambda rh, rd, vec: _neworder_new_data(rd, inp),
                        rts_vec=rts_vec, active=active,
                        directory=st.directory if keyed is not None else None,
-                       keyed=keyed, dir_max_probes=DIR_PROBES)
-    tbl, idx, extends, o_id = _neworder_inserts(
+                       keyed=keyed, dir_max_probes=DIR_PROBES,
+                       journal=journal, journal_round=round_no,
+                       journal_seq=_JSEQ_NEWORDER)
+    tbl, idx, extends, o_id, journal = _neworder_inserts(
         cfg, lay, st, oracle, out.table, out.oracle_state.vec, out.committed,
-        out.read_data, inp, round_no)
+        out.read_data, inp, round_no, journal=out.journal)
     nam = st.nam._replace(table=tbl, oracle_state=out.oracle_state,
                           extends=extends)
     return NewOrderResult(
         state=st._replace(nam=nam, order_index=idx),
         committed=out.committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
-        ops=out.ops, batch=batch, vis=out.vis)
+        ops=out.ops, batch=batch, vis=out.vis, journal=journal)
 
 
 # ------------------------------------------- new-order over the NAM mesh ----
@@ -581,6 +640,8 @@ class DistEngine(NamedTuple):
     #   gc_interval schedule with store.init_shard_logs state)
     n_dir_buckets: int = 0             # §5.2 partitioned hash index size
     #   (0 = slot-addressed engine; >0 = round_fn takes directory/read_keys)
+    with_journal: bool = False         # §6.2 WAL: round executors take a
+    #   journal (replica axis across the memory servers) and return it
 
     @property
     def placement(self) -> locality.Placement:
@@ -590,7 +651,8 @@ class DistEngine(NamedTuple):
 
 def make_distributed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
                             oracle: VectorOracle, *,
-                            shard_vector: bool = False) -> DistEngine:
+                            shard_vector: bool = False,
+                            with_journal: bool = False) -> DistEngine:
     n_shards = mesh.shape[axis]
     shard_records = -(-lay.catalog.total_records // n_shards)
     n_dir = directory_buckets(cfg, lay) if cfg.key_addressed else 0
@@ -598,12 +660,12 @@ def make_distributed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
         mesh, axis, oracle,
         lambda rh, rd, vec, aux: _neworder_new_data(rd, aux),
         shard_records, shard_vector=shard_vector, n_dir_buckets=n_dir,
-        dir_max_probes=DIR_PROBES)
+        dir_max_probes=DIR_PROBES, with_journal=with_journal)
     gc_fn = store.distributed_gc_round(mesh, axis, shard_vector=shard_vector)
     return DistEngine(round_fn=round_fn, mesh=mesh, axis=axis,
                       n_shards=n_shards, shard_records=shard_records,
                       shard_vector=shard_vector, gc_fn=gc_fn,
-                      n_dir_buckets=n_dir)
+                      n_dir_buckets=n_dir, with_journal=with_journal)
 
 
 def distribute_state(engine: DistEngine, st: TPCCState) -> TPCCState:
@@ -673,25 +735,33 @@ class MixedEngine(NamedTuple):
         return self.base.n_dir_buckets
 
     @property
+    def with_journal(self) -> bool:
+        return self.base.with_journal
+
+    @property
     def placement(self) -> locality.Placement:
         return self.base.placement
 
 
 def make_mixed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
                       oracle: VectorOracle, *,
-                      shard_vector: bool = False) -> MixedEngine:
+                      shard_vector: bool = False,
+                      with_journal: bool = False) -> MixedEngine:
     """Build the five-transaction mix's executors over the mesh (the
     new-order executor is :func:`make_distributed_engine`'s, reused)."""
     base = make_distributed_engine(cfg, lay, mesh, axis, oracle,
-                                   shard_vector=shard_vector)
+                                   shard_vector=shard_vector,
+                                   with_journal=with_journal)
     pay_fn, _ = store.distributed_round(
         mesh, axis, oracle,
         lambda rh, rd, vec, aux: _payment_new_data(rd, aux),
-        base.shard_records, shard_vector=shard_vector)
+        base.shard_records, shard_vector=shard_vector,
+        with_journal=with_journal)
     del_fn, _ = store.distributed_round(
         mesh, axis, oracle,
         lambda rh, rd, vec, aux: _delivery_new_data(rd, aux),
-        base.shard_records, shard_vector=shard_vector)
+        base.shard_records, shard_vector=shard_vector,
+        with_journal=with_journal)
     ro_fn = store.distributed_readonly_round(
         mesh, axis, base.shard_records, shard_vector=shard_vector,
         n_dir_buckets=base.n_dir_buckets, dir_max_probes=DIR_PROBES)
@@ -703,29 +773,35 @@ def neworder_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
                                st: TPCCState, oracle: VectorOracle,
                                engine: DistEngine,
                                inp: workload.NewOrderInputs,
-                               round_no=0, active=None) -> NewOrderResult:
+                               round_no=0, active=None,
+                               journal=None) -> NewOrderResult:
     """One new-order round through :func:`store.distributed_round` — the
     multi-memory-server rendering of :func:`neworder_round`, bit-identical
     to it (tests/test_distributed_equiv.py)."""
     batch, keyed = _neworder_batch(cfg, lay, inp, active)
+    jkw = dict(journal=journal, round_no=round_no,
+               seq=_JSEQ_NEWORDER) if journal is not None else {}
     if keyed is not None:
-        tbl, vec, out = engine.round_fn(
+        res = engine.round_fn(
             st.nam.table, st.nam.oracle_state.vec, batch, inp, active,
             directory=st.directory, read_keys=keyed.keys,
-            key_mask=keyed.mask)
+            key_mask=keyed.mask, **jkw)
     else:
-        tbl, vec, out = engine.round_fn(st.nam.table, st.nam.oracle_state.vec,
-                                        batch, inp, active)
+        res = engine.round_fn(st.nam.table, st.nam.oracle_state.vec,
+                              batch, inp, active, **jkw)
+    tbl, vec, out = res[:3]
+    journal = res[3] if journal is not None else None
     ops = _dist_ops(oracle, batch, out, tbl, active, keyed)
-    tbl, idx, extends, o_id = _neworder_inserts(
+    tbl, idx, extends, o_id, journal = _neworder_inserts(
         cfg, lay, st, oracle, tbl, vec, out.committed, out.read_data, inp,
-        round_no)
+        round_no, journal=journal)
     nam = st.nam._replace(table=tbl, oracle_state=VectorState(vec=vec),
                           extends=extends)
     return NewOrderResult(
         state=st._replace(nam=nam, order_index=idx),
         committed=out.committed, snapshot_miss=out.snapshot_miss, o_id=o_id,
-        ops=ops, batch=batch, vis=_dist_vis(batch, out, active))
+        ops=ops, batch=batch, vis=_dist_vis(batch, out, active),
+        journal=journal)
 
 
 # ------------------------------------------------------ sustained-run GC ----
@@ -930,6 +1006,158 @@ def run_neworder_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     return st, stats
 
 
+# ------------------------------------------- §6.2 failure injection ----------
+class FailureInjector(NamedTuple):
+    """Kill memory server ``dead_server`` at the *start* of round
+    ``kill_round`` of :func:`run_mixed_rounds`.
+
+    The failure model is the paper's §6.2: the dead server's shard of the
+    record pool (and its journal replica) is lost; the system halts,
+    restores the last checkpoint of the lost memory, replays the merged
+    surviving journals, releases abandoned locks and resumes the workload.
+    ``in_flight=True`` additionally simulates the §3.2 crash window — the
+    round's new-order lanes have CAS-locked their write-sets and logged
+    their intent records when the failure hits, so their outcome records
+    never land: recovery must treat them as undetermined (skip on replay,
+    release their locks) and the driver re-executes them after the resume
+    (their RNG draw is peeked, not consumed, so a clean recovery leaves
+    zero trace of them)."""
+    kill_round: int
+    dead_server: int = 0
+    in_flight: bool = True
+
+
+class RecoveryReport(NamedTuple):
+    """What one §6.2 recovery did (rides on ``MixedRunStats.recovery``)."""
+    kill_round: int
+    dead_server: int
+    checkpoint_round: int    # round after which the restored ckpt was taken
+    replayed_entries: int    # committed journal entries re-installed
+    undetermined: int        # intent-without-outcome entries replay skipped
+    released_locks: int      # abandoned locks the monitor released
+    recovery_seconds: float  # wall-clock: halt → workload resumed
+
+
+def _mem_state(st: TPCCState, jnl: wal.Journal):
+    """The memory-server-resident state a checkpoint must cover: the record
+    pool, the timestamp vector, and the journal append counts at the cut
+    (``used`` is the ``since`` marker replay starts from)."""
+    return {"table": st.nam.table, "vec": st.nam.oracle_state.vec,
+            "used": jnl.used}
+
+
+def _inflight_intents(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                      jnl: wal.Journal, key, pending, pending_type,
+                      round_no, home_w, dist_degree, logits, mix):
+    """Simulate the crash window: the kill round's new-order lanes lock
+    their write-sets and log intents, then the failure hits before any
+    outcome record lands. The RNG key is split but not consumed — the
+    driver re-draws the identical inputs when it re-executes the round
+    after recovery."""
+    T = cfg.n_threads
+    _, sub = jax.random.split(key)
+    fresh = workload.gen_mixed(sub, T, cfg.n_warehouses, cfg.n_items,
+                               cfg.customers_per_district, home_w,
+                               dist_degree, logits, mix)
+    inp = _merge_retries(pending, fresh, pending_type >= 0, T)
+    batch, _ = _neworder_batch(cfg, lay, inp.neworder, inp.txn_type == 0)
+    tbl = st.nam.table
+    wref = jnp.clip(batch.write_ref, 0, batch.read_slots.shape[1] - 1)
+    wslots = jnp.take_along_axis(batch.read_slots, wref, axis=1)
+    req_active = batch.write_mask.reshape(-1)
+    req_slots = wslots.reshape(-1)
+    # validate+lock against the headers as currently installed: at a round
+    # boundary nothing is locked, so every arbitration-winning lane locks
+    expected = tbl.cur_hdr[jnp.where(req_active, req_slots, 0)]
+    prio = jnp.broadcast_to(batch.tid.astype(jnp.uint32)[:, None],
+                            batch.write_mask.shape).reshape(-1)
+    res = cas.arbitrate(tbl.cur_hdr, req_slots, expected, prio, req_active)
+    tbl = tbl._replace(cur_hdr=res.new_hdr)
+    # the intent lands (on every journal replica), the outcome never does;
+    # the payload is irrelevant — these entries must never replay
+    jnl = wal.append_intent(
+        jnl, batch.tid, st.nam.oracle_state.vec,
+        *wal.pad_writes(jnl, wslots,
+                        jnp.zeros(wslots.shape + (2,), jnp.uint32),
+                        jnp.zeros(wslots.shape + (WIDTH,), jnp.int32),
+                        batch.write_mask),
+        round_no=round_no, seq=_JSEQ_NEWORDER)
+    return st._replace(nam=st.nam._replace(table=tbl)), jnl
+
+
+def recover_from_failure(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+                         engine, jnl: wal.Journal, checkpoint_dir: str,
+                         failure: FailureInjector, *, use_gc: bool,
+                         move_versions: bool = True):
+    """§6.2 recovery: restore the dead server's memory from the last
+    checkpoint + the merged surviving journals, release abandoned locks,
+    re-replicate the journal, resume.
+
+    The dead server's shard of the record pool is rebuilt by replaying the
+    surviving journals onto the checkpoint (partially ordered by the logged
+    T, version mover at round boundaries — bit-identical to the lost
+    memory); the surviving servers keep their live memory, which still
+    holds any locks of in-flight (undetermined) transactions — those are
+    the monitoring server's to release. The timestamp vector is rebuilt
+    from the checkpoint vector plus the journals' commit records. Returns
+    ``(state, journal, RecoveryReport)``.
+    """
+    t0 = time.perf_counter()
+    dead = failure.dead_server
+    n_rep = jnl.n_replicas
+    if engine is not None and dead >= engine.n_shards:
+        raise ValueError(f"dead_server {dead} outside the "
+                         f"{engine.n_shards}-server mesh")
+    survivors = jnp.ones((n_rep,), bool).at[dead % n_rep].set(False)
+    rep = 0 if dead % n_rep else 1    # first surviving replica
+
+    ckpt, _, manifest = snapshot.restore(checkpoint_dir, _mem_state(st, jnl))
+    since = ckpt["used"]
+    replayed_tbl = wal.replay(jnl, ckpt["table"], survivors=survivors,
+                              since=since, reuse_only=use_gc,
+                              move_versions=move_versions)
+    vec = wal.replay_vector(jnl, ckpt["vec"], survivors=survivors,
+                            since=since)
+    replayable, undetermined = wal.entry_status(jnl, rep, since=since)
+
+    if engine is not None:
+        # only the dead server's rows are lost: merge the replayed
+        # reconstruction into the survivors' live memory (range partition,
+        # see DistEngine.placement)
+        rows = engine.shard_records
+
+        def merge(live, rec):
+            home = jnp.arange(live.shape[0]) // rows == dead
+            return jnp.where(
+                home.reshape((-1,) + (1,) * (live.ndim - 1)), rec, live)
+
+        tbl = jax.tree.map(merge, st.nam.table, replayed_tbl)
+    else:
+        tbl = replayed_tbl
+    n_locked = int(jnp.sum(hdr_ops.is_locked(tbl.cur_hdr)))
+    # the monitor scans every thread's journal: any unresolved intent in the
+    # live window marks an abandoned transaction whose locks must go
+    tbl = wal.release_abandoned_locks(
+        jnl, tbl, jnp.arange(cfg.n_threads, dtype=jnp.int32), replica=rep)
+    jnl = wal.rereplicate(jnl, survivors)
+    if engine is not None:
+        tbl = store.shard_table(engine.mesh, engine.axis, tbl)
+        if engine.shard_vector:
+            vec = store.shard_vector(engine.mesh, engine.axis, vec)
+        jnl = store.shard_journal(engine.mesh, engine.axis, jnl)
+    st = st._replace(nam=st.nam._replace(
+        table=tbl, oracle_state=VectorState(vec=vec)))
+    report = RecoveryReport(
+        kill_round=failure.kill_round, dead_server=dead,
+        checkpoint_round=int(manifest["extra"].get("round", -1)),
+        replayed_entries=int(jnp.sum(replayable)),
+        undetermined=int(jnp.sum(undetermined)),
+        released_locks=n_locked
+        - int(jnp.sum(hdr_ops.is_locked(tbl.cur_hdr))),
+        recovery_seconds=time.perf_counter() - t0)
+    return st, jnl, report
+
+
 # ----------------------------------------------------- mixed-round driver ----
 class MixedRunStats(NamedTuple):
     """Aggregates of a full five-transaction-mix run (§7: the paper's total
@@ -952,6 +1180,8 @@ class MixedRunStats(NamedTuple):
     gc_sweeps: int = 0
     reclaim_traj: tuple = ()        # ((round, reclaimable_fraction), …)
     ovf_peak: int = 0               # max overflow ring position observed
+    recovery: tuple = ()            # (§6.2 RecoveryReport, …) — one per
+    #                                 injected memory-server failure
 
 
 def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
@@ -961,7 +1191,10 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                      locality_mode: Optional[str] = None,
                      move_versions: bool = True, stock_last_n: int = 8,
                      gc_interval: int = 0, max_txn_time: int = 4,
-                     gc_snapshots: int = 8):
+                     gc_snapshots: int = 8,
+                     journal: Optional[wal.Journal] = None,
+                     checkpoint_dir: Optional[str] = None,
+                     failure: Optional[FailureInjector] = None):
     """Closed-loop driver for the full TPC-C mix.
 
     Each round, every execution thread draws its next transaction type from
@@ -981,6 +1214,18 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     execution knobs of :func:`run_neworder_rounds`: one GC-thread sweep per
     ``gc_interval`` rounds (after all five sub-rounds), version mover in
     reclaimed-slot-only mode, round counter as wall-clock.
+
+    ``journal`` switches the §6.2 WAL on: every write sub-round logs its
+    intent records before installing and its outcome after the commit
+    decision (build the engine with ``with_journal=True``; with a mesh,
+    replicate one journal replica per server via ``store.shard_journal``).
+    ``checkpoint_dir`` then checkpoints the memory-server state (pool,
+    vector, journal cursors) via :mod:`repro.checkpoint.snapshot` — once
+    before round 0 and after every GC sweep, so the journal ring only ever
+    needs to cover one checkpoint interval and replay never spans a GC
+    truncation. ``failure`` injects a §6.2 memory-server failure at the
+    start of its ``kill_round`` and runs :func:`recover_from_failure`
+    before resuming; the reports ride on ``MixedRunStats.recovery``.
     """
     T = cfg.n_threads
     _check_layout_homes(cfg, lay, home_w, locality_mode)
@@ -1008,6 +1253,18 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     tids = jnp.arange(T, dtype=jnp.int32)
     pending_type = jnp.full((T,), -1, jnp.int32)
     pending: Optional[workload.MixedInputs] = None
+    jnl = journal
+    recovery = []
+    if failure is not None and (jnl is None or checkpoint_dir is None):
+        raise ValueError("failure injection needs a journal and a "
+                         "checkpoint_dir: §6.2 recovery replays the "
+                         "surviving journals onto the last checkpoint")
+    if jnl is not None and engine is not None and not engine.with_journal:
+        raise ValueError("journaling through the mesh needs an engine "
+                         "built with with_journal=True")
+    if jnl is not None and checkpoint_dir is not None:
+        snapshot.save(checkpoint_dir, _mem_state(st, jnl),
+                      extra={"round": -1})
 
     def acc_ops(name, ops):
         for i, f in enumerate(ops):
@@ -1038,6 +1295,15 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         return aborted
 
     for r in range(n_rounds):
+        if failure is not None and r == failure.kill_round:
+            if failure.in_flight:
+                st, jnl = _inflight_intents(
+                    cfg, lay, st, jnl, key, pending, pending_type, r,
+                    home_w, dist_degree, logits, mix)
+            st, jnl, rep = recover_from_failure(
+                cfg, lay, st, engine, jnl, checkpoint_dir, failure,
+                use_gc=use_gc, move_versions=move_versions)
+            recovery.append(rep)
         key, sub = jax.random.split(key)
         fresh = workload.gen_mixed(sub, T, cfg.n_warehouses, cfg.n_items,
                                    cfg.customers_per_district, home_w,
@@ -1055,12 +1321,13 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         if int(jnp.sum(act)):
             if engine is None:
                 out = neworder_round(cfg, lay, st, oracle, inp.neworder,
-                                     round_no=r, active=act)
+                                     round_no=r, active=act, journal=jnl)
             else:
                 out = neworder_round_distributed(cfg, lay, st, oracle,
                                                  engine, inp.neworder,
-                                                 round_no=r, active=act)
-            st = out.state
+                                                 round_no=r, active=act,
+                                                 journal=jnl)
+            st, jnl = out.state, out.journal
             aborted_round |= acc_write("neworder", act, out.committed,
                                        out.ops, out.snapshot_miss, out.vis)
             acc_local(inp.neworder.w_id, inp.neworder.d_id,
@@ -1070,11 +1337,12 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         if int(jnp.sum(act)):
             if engine is None:
                 pay = payment_round(cfg, lay, st, oracle, inp.payment,
-                                    active=act)
+                                    active=act, round_no=r, journal=jnl)
             else:
                 pay = payment_round_distributed(cfg, lay, st, oracle, engine,
-                                                inp.payment, active=act)
-            st = pay.state
+                                                inp.payment, active=act,
+                                                round_no=r, journal=jnl)
+            st, jnl = pay.state, pay.journal
             aborted_round |= acc_write("payment", act, pay.committed,
                                        pay.ops, pay.snapshot_miss, pay.vis)
             acc_local(inp.payment.w_id, inp.payment.d_id,
@@ -1084,11 +1352,12 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         if int(jnp.sum(act)):
             if engine is None:
                 dl = delivery_round(cfg, lay, st, oracle, inp.delivery,
-                                    active=act)
+                                    active=act, round_no=r, journal=jnl)
             else:
                 dl = delivery_round_distributed(cfg, lay, st, oracle, engine,
-                                                inp.delivery, active=act)
-            st = dl.state
+                                                inp.delivery, active=act,
+                                                round_no=r, journal=jnl)
+            st, jnl = dl.state, dl.journal
             aborted_round |= acc_write("delivery", act, dl.committed, dl.ops,
                                        dl.snapshot_miss, dl.vis)
             delivered += int(jnp.sum(dl.delivered))
@@ -1129,6 +1398,12 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                                          max_txn_time)
             gc_sweeps += 1
             reclaim_traj.append((r, frac))
+            if jnl is not None and checkpoint_dir is not None:
+                # checkpoint at every GC sweep: replay from the last
+                # checkpoint then never spans a GC truncation, so the
+                # journal alone reconstructs the lost shard bit-exactly
+                snapshot.save(checkpoint_dir, _mem_state(st, jnl),
+                              extra={"round": r})
         ovf_peak = max(ovf_peak, int(jnp.max(st.nam.table.ovf_next)))
 
     # the last round's aborts never re-entered a later round
@@ -1145,7 +1420,7 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         delivered=delivered, snapshot_misses=snapshot_misses,
         contention_aborts=contention_aborts, ovf_reads=ovf_reads,
         gc_sweeps=gc_sweeps, reclaim_traj=tuple(reclaim_traj),
-        ovf_peak=ovf_peak)
+        ovf_peak=ovf_peak, recovery=tuple(recovery))
     return st, stats
 
 
@@ -1188,6 +1463,7 @@ class PaymentResult(NamedTuple):
     batch: TxnBatch
     snapshot_miss: jnp.ndarray  # bool [T] — a required version was GC'd
     vis: si.VisStats
+    journal: Optional[wal.Journal] = None   # §6.2 — set iff one was passed
 
 
 def _payment_batch(cfg: TPCCConfig, lay: TPCCLayout,
@@ -1220,7 +1496,7 @@ def _payment_new_data(rd, inp: workload.PaymentInputs):
 
 
 def _payment_insert(cfg, lay, st: TPCCState, oracle, tbl, vec, committed,
-                    inp: workload.PaymentInputs):
+                    inp: workload.PaymentInputs, round_no=0, journal=None):
     """History insert into the thread-private extend (shared verbatim by the
     single-shard and the distributed payment paths)."""
     T = inp.w_id.shape[0]
@@ -1236,44 +1512,63 @@ def _payment_insert(cfg, lay, st: TPCCState, oracle, tbl, vec, committed,
     hdata = hdata.at[:, H_COL["c_id"]].set(inp.c_id)
     hdata = hdata.at[:, H_COL["w_id"]].set(inp.w_id)
     tbl = _insert_install(tbl, hslot, slot_ids, cts, hdata, can)
-    return tbl, cur + can.astype(jnp.int32)
+    if journal is not None:
+        journal = wal.append_intent(
+            journal, tids, vec,
+            *wal.pad_writes(
+                journal, hslot[:, None],
+                hdr_ops.pack(slot_ids.astype(jnp.uint32), cts)[:, None, :],
+                hdata[:, None, :], can[:, None]),
+            round_no=round_no, seq=_JSEQ_PAYMENT_INS)
+        journal = wal.append_outcome(journal, tids, can)
+    return tbl, cur + can.astype(jnp.int32), journal
 
 
 def payment_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                   oracle: VectorOracle, inp: workload.PaymentInputs,
-                  rts_vec=None, active=None) -> PaymentResult:
+                  rts_vec=None, active=None, round_no=0,
+                  journal=None) -> PaymentResult:
     """One vectorized round of payment transactions (single-shard path)."""
     batch = _payment_batch(cfg, lay, inp, active)
     out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
                        lambda rh, rd, vec: _payment_new_data(rd, inp),
-                       rts_vec=rts_vec, active=active)
-    tbl, hist_cursor = _payment_insert(cfg, lay, st, oracle, out.table,
-                                       out.oracle_state.vec, out.committed,
-                                       inp)
+                       rts_vec=rts_vec, active=active,
+                       journal=journal, journal_round=round_no,
+                       journal_seq=_JSEQ_PAYMENT)
+    tbl, hist_cursor, journal = _payment_insert(
+        cfg, lay, st, oracle, out.table, out.oracle_state.vec, out.committed,
+        inp, round_no=round_no, journal=out.journal)
     nam = st.nam._replace(table=tbl, oracle_state=out.oracle_state)
     return PaymentResult(
         state=st._replace(nam=nam, hist_cursor=hist_cursor),
         committed=out.committed, ops=out.ops, batch=batch,
-        snapshot_miss=out.snapshot_miss, vis=out.vis)
+        snapshot_miss=out.snapshot_miss, vis=out.vis, journal=journal)
 
 
 def payment_round_distributed(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                               oracle: VectorOracle, engine,
                               inp: workload.PaymentInputs,
-                              active=None) -> PaymentResult:
+                              active=None, round_no=0,
+                              journal=None) -> PaymentResult:
     """Payment through :func:`store.distributed_round` on the mesh —
     bit-identical to :func:`payment_round`."""
     batch = _payment_batch(cfg, lay, inp, active)
-    tbl, vec, out = engine.payment_fn(st.nam.table, st.nam.oracle_state.vec,
-                                      batch, inp, active)
+    jkw = dict(journal=journal, round_no=round_no,
+               seq=_JSEQ_PAYMENT) if journal is not None else {}
+    res = engine.payment_fn(st.nam.table, st.nam.oracle_state.vec,
+                            batch, inp, active, **jkw)
+    tbl, vec, out = res[:3]
+    journal = res[3] if journal is not None else None
     ops = _dist_ops(oracle, batch, out, tbl, active)
-    tbl, hist_cursor = _payment_insert(cfg, lay, st, oracle, tbl, vec,
-                                       out.committed, inp)
+    tbl, hist_cursor, journal = _payment_insert(
+        cfg, lay, st, oracle, tbl, vec, out.committed, inp,
+        round_no=round_no, journal=journal)
     nam = st.nam._replace(table=tbl, oracle_state=VectorState(vec=vec))
     return PaymentResult(
         state=st._replace(nam=nam, hist_cursor=hist_cursor),
         committed=out.committed, ops=ops, batch=batch,
-        snapshot_miss=out.snapshot_miss, vis=_dist_vis(batch, out, active))
+        snapshot_miss=out.snapshot_miss, vis=_dist_vis(batch, out, active),
+        journal=journal)
 
 
 # ----------------------------------------------------- read-only queries ----
@@ -1496,6 +1791,7 @@ class DeliveryResult(NamedTuple):
     batch: TxnBatch
     snapshot_miss: jnp.ndarray  # bool [T] — a required version was GC'd
     vis: si.VisStats
+    journal: Optional[wal.Journal] = None   # §6.2 — set iff one was passed
 
 
 class DeliveryAux(NamedTuple):
@@ -1573,7 +1869,8 @@ def _delivery_preread_ops(ops: si.OpCounts, n_active, payload_width):
 
 def delivery_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                    oracle: VectorOracle, inp: workload.DeliveryInputs,
-                   rts_vec=None, active=None) -> DeliveryResult:
+                   rts_vec=None, active=None, round_no=0,
+                   journal=None) -> DeliveryResult:
     """Deliver the oldest undelivered order of (w,d): bump the district's
     delivery cursor, stamp the order's carrier, credit the customer with the
     sum of the order's line amounts.
@@ -1586,27 +1883,35 @@ def delivery_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     batch, aux, found = _delivery_prepare(cfg, lay, st, vec, inp, active)
     out = si.run_round(st.nam.table, oracle, st.nam.oracle_state, batch,
                        lambda rh, rd, v: _delivery_new_data(rd, aux),
-                       rts_vec=rts_vec, active=active)
+                       rts_vec=rts_vec, active=active,
+                       journal=journal, journal_round=round_no,
+                       journal_seq=_JSEQ_DELIVERY)
     nam = st.nam._replace(table=out.table, oracle_state=out.oracle_state)
     ops = _delivery_preread_ops(out.ops, _n_active(batch, active),
                                 out.table.payload_width)
     return DeliveryResult(
         state=st._replace(nam=nam),
         committed=out.committed, delivered=out.committed & found, ops=ops,
-        batch=batch, snapshot_miss=out.snapshot_miss, vis=out.vis)
+        batch=batch, snapshot_miss=out.snapshot_miss, vis=out.vis,
+        journal=out.journal)
 
 
 def delivery_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
                                st: TPCCState, oracle: VectorOracle, engine,
                                inp: workload.DeliveryInputs,
-                               active=None) -> DeliveryResult:
+                               active=None, round_no=0,
+                               journal=None) -> DeliveryResult:
     """Delivery through :func:`store.distributed_round` on the mesh —
     bit-identical to :func:`delivery_round` (the pre-reads gather from the
     sharded pool; the SI round runs shard-side)."""
     vec = oracle.read(st.nam.oracle_state)
     batch, aux, found = _delivery_prepare(cfg, lay, st, vec, inp, active)
-    tbl, nvec, out = engine.delivery_fn(st.nam.table, st.nam.oracle_state.vec,
-                                        batch, aux, active)
+    jkw = dict(journal=journal, round_no=round_no,
+               seq=_JSEQ_DELIVERY) if journal is not None else {}
+    res = engine.delivery_fn(st.nam.table, st.nam.oracle_state.vec,
+                             batch, aux, active, **jkw)
+    tbl, nvec, out = res[:3]
+    journal = res[3] if journal is not None else None
     ops = _delivery_preread_ops(_dist_ops(oracle, batch, out, tbl, active),
                                 _n_active(batch, active),
                                 tbl.payload_width)
@@ -1615,4 +1920,4 @@ def delivery_round_distributed(cfg: TPCCConfig, lay: TPCCLayout,
         state=st._replace(nam=nam),
         committed=out.committed, delivered=out.committed & found, ops=ops,
         batch=batch, snapshot_miss=out.snapshot_miss,
-        vis=_dist_vis(batch, out, active))
+        vis=_dist_vis(batch, out, active), journal=journal)

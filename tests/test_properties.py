@@ -22,7 +22,15 @@ GC (paper §5.3):
       truncate cycles keep the overflow ring pointer bounded in [0, KO),
       keep installs succeeding (no permanent stall), and actually REUSE
       slots rather than exhausting them.
+
+Recovery (paper §6.2):
+  P8  durability — killing the memory server at ANY round of a journalled
+      TPC-C mix (optionally with undetermined in-flight intents holding
+      locks), then restoring the last checkpoint and replaying the
+      journal, yields a run bit-identical to one that never crashed.
 """
+import tempfile
+
 import pytest
 
 hypothesis = pytest.importorskip(
@@ -273,6 +281,55 @@ def test_gc_mover_cycles_keep_overflow_ring_bounded(ko, lag):
     # a retention lag the ring cannot hold stalls by design (backpressure);
     # liveness is claimed for lag ≤ KO-2 — GC keeping up with the mover
     _check_gc_liveness(ko, min(lag, ko - 2))
+
+
+# ---------------------------------------------------------------- P8 ------
+_P8_ROUNDS = 4
+
+
+def _journalled_mix(seed, failure):
+    """One journalled single-shard TPC-C mix (checkpoint after every GC
+    sweep), optionally killed and recovered at ``failure.kill_round``."""
+    from repro.core.tsoracle import VectorOracle as _VO
+    from repro.db import tpcc
+    cfg = tpcc.TPCCConfig(n_warehouses=4, customers_per_district=8,
+                          n_items=64, n_threads=8, orders_per_thread=16,
+                          dist_degree=30.0)
+    oracle = _VO(cfg.n_threads)
+    lay, st0 = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(1))
+    jnl = tpcc.make_journal(cfg, oracle, capacity_rounds=_P8_ROUNDS + 2)
+    with tempfile.TemporaryDirectory() as d:
+        st, ms = tpcc.run_mixed_rounds(
+            cfg, lay, st0, oracle, jax.random.PRNGKey(seed), _P8_ROUNDS,
+            journal=jnl, checkpoint_dir=d, failure=failure,
+            gc_interval=2, max_txn_time=1)
+    return st, ms
+
+
+@given(seed=st.integers(0, 2**31 - 1), kill_round=st.integers(0, _P8_ROUNDS - 1),
+       in_flight=st.booleans())
+@settings(max_examples=5, deadline=None)
+def test_kill_recover_is_bit_identical(seed, kill_round, in_flight):
+    from repro.db import tpcc
+    st_ref, ms_ref = _journalled_mix(seed, None)
+    st_rec, ms_rec = _journalled_mix(
+        seed, tpcc.FailureInjector(kill_round=kill_round,
+                                   in_flight=in_flight))
+    (rep,) = ms_rec.recovery
+    assert rep.kill_round == kill_round
+    assert rep.checkpoint_round < kill_round
+    if in_flight:
+        assert rep.undetermined > 0
+    for leaf_a, leaf_b in zip(jax.tree.leaves(st_ref.nam.table),
+                              jax.tree.leaves(st_rec.nam.table)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+    np.testing.assert_array_equal(np.asarray(st_ref.nam.oracle_state.vec),
+                                  np.asarray(st_rec.nam.oracle_state.vec))
+    assert ms_ref.attempts == ms_rec.attempts
+    assert ms_ref.commits == ms_rec.commits
+    assert ms_ref.retries == ms_rec.retries
+    assert ms_ref.delivered == ms_rec.delivered
+    assert ms_ref.ops == ms_rec.ops
 
 
 # ------------------------------------------------------- MoE invariants ---

@@ -13,10 +13,11 @@ from repro.core.tsoracle import VectorOracle
 
 
 def _run_workload(n_rounds=4, n_threads=3, n_records=8, width=2,
-                  journal=None):
+                  journal=None, ckpt_round=None):
     tbl = mvcc.init_table(n_records, width, n_old=2, n_overflow=4)
     o = VectorOracle(n_threads=n_threads)
     st = o.init()
+    ckpt = None
 
     def fn(rh, rd, rts):
         return rd[:, :1, :].at[..., 0].add(1)  # write-set = read-set[0] + 1
@@ -43,12 +44,19 @@ def _run_workload(n_rounds=4, n_threads=3, n_records=8, width=2,
                 jnp.arange(n_threads, dtype=jnp.uint32)[:, None],
                 cts[:, None])
             new_data = out.read_data[:, :1, :].at[..., 0].add(1)
-            journal = wal.append(
+            journal = wal.append_intent(
+                journal, jnp.arange(n_threads, dtype=jnp.int32), rts,
+                wslots, new_hdr, new_data, batch.write_mask,
+                round_no=r, seq=0)
+            journal = wal.append_outcome(
                 journal, jnp.arange(n_threads, dtype=jnp.int32),
-                out.oracle_state.vec, wslots, new_hdr, new_data,
-                batch.write_mask, out.committed)
+                out.committed)
         tbl, st = out.table, out.oracle_state
         tbl = mvcc.version_mover(tbl)
+        if r == ckpt_round:
+            ckpt = (tbl, journal.used)
+    if ckpt_round is not None:
+        return tbl, st, journal, ckpt
     return tbl, st, journal
 
 
@@ -77,26 +85,122 @@ def test_wal_replay_uses_surviving_replica():
                                   np.asarray(tbl.cur_data))
 
 
+def _lock(tbl, slot, prio):
+    expected = tbl.cur_hdr[jnp.array([slot])]
+    res = cas.arbitrate(tbl.cur_hdr, jnp.array([slot]), expected,
+                        jnp.array([prio], jnp.uint32), jnp.array([True]))
+    assert bool(res.granted[0])
+    return tbl._replace(cur_hdr=res.new_hdr)
+
+
+def _intent(j, tid, slot, cts, resolved=None):
+    """Append a one-write intent entry for ``tid``; resolve it iff asked."""
+    j = wal.append_intent(
+        j, jnp.array([tid], jnp.int32), jnp.zeros((2,), jnp.uint32),
+        jnp.array([[slot]], jnp.int32),
+        hdr.pack(jnp.uint32(tid), jnp.uint32(cts))[None, None],
+        jnp.zeros((1, 1, 2), jnp.int32), jnp.array([[True]]))
+    if resolved is not None:
+        j = wal.append_outcome(j, jnp.array([tid], jnp.int32),
+                               jnp.array([resolved]))
+    return j
+
+
 def test_release_abandoned_locks():
     """A compute server dies between CAS and install; the monitor unlocks."""
     tbl = mvcc.init_table(4, 2, n_old=2, n_overflow=2)
     j = wal.init_journal(n_threads=2, capacity=4, n_slots=2, ws=1, width=2)
     # thread 1 locks slot 2 then crashes (no install, no outcome logged)
-    expected = tbl.cur_hdr[jnp.array([2])]
-    res = cas.arbitrate(tbl.cur_hdr, jnp.array([2]), expected,
-                        jnp.array([1], jnp.uint32), jnp.array([True]))
-    assert bool(res.granted[0])
-    tbl = tbl._replace(cur_hdr=res.new_hdr)
-    j = wal.append(j, jnp.array([1], jnp.int32),
-                   jnp.zeros((2,), jnp.uint32),
-                   jnp.array([[2]], jnp.int32),
-                   hdr.pack(jnp.uint32(1), jnp.uint32(1))[None, None],
-                   jnp.zeros((1, 1, 2), jnp.int32),
-                   jnp.array([[True]]),
-                   jnp.array([False]))  # undetermined outcome
+    tbl = _lock(tbl, 2, prio=1)
+    j = _intent(j, tid=1, slot=2, cts=1)   # undetermined: no outcome record
     assert bool(hdr.is_locked(tbl.cur_hdr[2]))
     tbl = wal.release_abandoned_locks(j, tbl, dead_tid=1)
     assert not bool(hdr.is_locked(tbl.cur_hdr[2]))
+
+
+def test_release_abandoned_locks_scans_all_unresolved():
+    """Bugfix regression: the monitor must scan EVERY unresolved entry in
+    the dead thread's live window. The old code looked only at the *last*
+    entry, so a lock taken by an earlier in-flight sub-round entry leaked
+    forever (and with ``used == 0`` it read the stale slot capacity-1)."""
+    tbl = mvcc.init_table(6, 2, n_old=2, n_overflow=2)
+    j = wal.init_journal(n_threads=2, capacity=4, n_slots=2, ws=1, width=2)
+    # a RESOLVED committed entry naming slot 1 — its lock (held by someone
+    # else now) must NOT be released on the dead thread's behalf
+    j = _intent(j, tid=1, slot=1, cts=1, resolved=True)
+    tbl = _lock(tbl, 1, prio=0)
+    # two in-flight sub-round entries, both undetermined, then the crash
+    tbl = _lock(tbl, 2, prio=1)
+    j = _intent(j, tid=1, slot=2, cts=2)
+    tbl = _lock(tbl, 3, prio=1)
+    j = _intent(j, tid=1, slot=3, cts=2)
+    tbl = wal.release_abandoned_locks(j, tbl, dead_tid=1)
+    assert not bool(hdr.is_locked(tbl.cur_hdr[3]))
+    assert not bool(hdr.is_locked(tbl.cur_hdr[2])), \
+        "earlier unresolved entry's lock leaked (last-entry-only scan)"
+    assert bool(hdr.is_locked(tbl.cur_hdr[1])), \
+        "resolved entry's slot must be left alone"
+    # a dead thread that never appended releases nothing
+    tbl = _lock(tbl, 4, prio=0)
+    tbl2 = wal.release_abandoned_locks(j, tbl, dead_tid=0)
+    assert bool(hdr.is_locked(tbl2.cur_hdr[4]))
+
+
+def test_wal_replay_wrapped_ring():
+    """Bugfix regression: with ``used > capacity`` the old replay treated
+    raw ring positions ``< used`` as valid — replaying overwritten entries
+    and silently skipping nothing. The live window replays exactly the
+    appends since the checkpoint, and a wrapped-past-unreplayed ring is a
+    loud error, not a wrong table."""
+    j = wal.init_journal(n_threads=3, capacity=4, n_slots=3, ws=1, width=2,
+                         n_replicas=2)
+    tbl, st, j, (ckpt_tbl, used_ckpt) = _run_workload(
+        n_rounds=7, journal=j, ckpt_round=3)
+    assert int(j.used[0]) == 7 > j.capacity  # the ring really wrapped
+    recovered = wal.replay(j, ckpt_tbl, since=used_ckpt)
+    np.testing.assert_array_equal(np.asarray(recovered.cur_data),
+                                  np.asarray(tbl.cur_data))
+    np.testing.assert_array_equal(
+        np.asarray(hdr.commit_ts(recovered.cur_hdr)),
+        np.asarray(hdr.commit_ts(tbl.cur_hdr)))
+    # entries before the checkpoint were overwritten — replaying from a
+    # fresh table (or any since that predates the window) must refuse
+    fresh = mvcc.init_table(8, 2, n_old=2, n_overflow=4)
+    with pytest.raises(ValueError, match="overwrote unreplayed"):
+        wal.replay(j, fresh)
+    with pytest.raises(ValueError, match="overwrote unreplayed"):
+        wal.replay(j, ckpt_tbl, since=jnp.zeros((3,), jnp.int32))
+
+
+@pytest.mark.parametrize("ts_a,ts_b", [
+    # sum(T) of B wraps uint32 below A's — the old single-key order inverted
+    ([0x7FFFFFFF, 0x7FFFFFFF], [0x80000000, 0x80000000]),
+    # A's exact sum is 0xFFFFFFFF — the old SENTINEL — so A was dropped from
+    # the replay entirely (sorted among the never-used entries)
+    ([0xFFFFFFFE, 0x00000001], [0xFFFFFFFE, 0x00000002]),
+])
+def test_wal_replay_order_key_overflow(ts_a, ts_b):
+    """Bugfix regression: the linear-extension key must not wrap. Entry B's
+    logged T dominates A's, so B must replay after A and win the record —
+    under the old uint32 ``sum(T)`` key it either sorted first (wrap) or
+    collided with the not-committed sentinel."""
+    j = wal.init_journal(n_threads=1, capacity=2, n_slots=2, ws=1, width=2,
+                         n_replicas=1)
+    tid = jnp.array([0], jnp.int32)
+    for rnd, (ts, cts, val) in enumerate(
+            [(ts_a, 1, 1), (ts_b, 2, 2)]):
+        j = wal.append_intent(
+            j, tid, jnp.array(ts, jnp.uint32),
+            jnp.array([[0]], jnp.int32),
+            hdr.pack(jnp.uint32(0), jnp.uint32(cts))[None, None],
+            jnp.full((1, 1, 2), val, jnp.int32), jnp.array([[True]]),
+            round_no=rnd)
+        j = wal.append_outcome(j, tid, jnp.array([True]))
+    fresh = mvcc.init_table(1, 2, n_old=2, n_overflow=2)
+    recovered = wal.replay(j, fresh)
+    assert int(hdr.commit_ts(recovered.cur_hdr[0])) == 2, \
+        "dominated entry replayed last — order key wrapped or hit sentinel"
+    np.testing.assert_array_equal(np.asarray(recovered.cur_data[0]), [2, 2])
 
 
 def test_gc_snapshot_log_and_safe_vector():
