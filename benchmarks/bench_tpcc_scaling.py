@@ -49,11 +49,22 @@ replicas and releases the abandoned locks, and the run resumes. Emits
 the recovered run is bit-identical to an uninterrupted run of the same
 seeds (the committed seed point lives in ``benchmarks/data/``).
 
+``--expand`` switches to the §4.3 online scale-out bench: the journalled
+full mix starts on ``--shards`` memory servers and DOUBLES the mesh
+mid-run via ``tpcc.MeshGrowth`` — checkpoint the joining epoch, replay
+the migration window from the journal, repartition the directory /
+timestamp vector / journal replicas, rebuild the executors, resume.
+Emits ``BENCH_elastic.json`` with txn/s before/after the expansion and
+the migration pause, and fails loudly unless the expanded run is
+bit-identical to a run born at the larger shard count AND the modeled
+post-expansion throughput is no worse than pre-expansion.
+
     python benchmarks/bench_tpcc_scaling.py --shards 8
     python benchmarks/bench_tpcc_scaling.py --smoke     # CI: tiny, 2 shards
     python benchmarks/bench_tpcc_scaling.py --sustain 200 --smoke
     python benchmarks/bench_tpcc_scaling.py --probe [--smoke]
     python benchmarks/bench_tpcc_scaling.py --kill [--smoke]
+    python benchmarks/bench_tpcc_scaling.py --expand [--smoke]
 """
 from __future__ import annotations
 
@@ -172,17 +183,14 @@ def run_shard_sweep(max_shards: int, n_rounds: int, n_threads: int,
     profiles feed the cost model at the matching cluster size (n memory +
     n compute); **total and new-order** txn/s are reported per point.
 
-    Returns (results, skipped): shard counts that do not divide the thread
-    count cannot host the partitioned timestamp vector and are reported
-    rather than silently dropped.
+    Shard counts that do not divide the thread count are fine: the
+    partitioned timestamp vector zero-pads to the next multiple
+    (``store.pad_vector``) and strips the padding after each gather.
     """
     sweep = sorted({s for s in (1, 2, 4, 8, 16) if s < max_shards}
                    | {max_shards})
-    results, skipped = [], []
+    results = []
     for n in sweep:
-        if n_threads % n:
-            skipped.append(n)
-            continue
         for mode in ("oblivious", "aware"):
             stats, us = measure_sharded(
                 n, mode, n_rounds=n_rounds, n_threads=n_threads, mix=mix)
@@ -192,7 +200,7 @@ def run_shard_sweep(max_shards: int, n_rounds: int, n_threads: int,
                 local_fraction=stats.local_fraction)
             results.append((n, mode, stats, us, prof,
                             total, total * neworder_share(stats)))
-    return results, skipped
+    return results
 
 
 def run_sustain(n_rounds: int, n_shards: int, n_threads: int, *,
@@ -428,6 +436,157 @@ def run_recovery(n_rounds: int, n_shards: int, n_threads: int, *,
     return doc
 
 
+# ------------------------------------------- §4.3 online scale-out bench ----
+def run_expand(n_rounds: int, old_shards: int, new_shards: int,
+               n_threads: int, *, grow_round: int | None = None,
+               mode: str = "aware", gc_interval: int = 2,
+               max_txn_time: int = 1, smoke: bool = False,
+               out_path: str = "BENCH_elastic.json"):
+    """§4.3 online scale-out bench: grow a live mesh mid-mix.
+
+    Runs the journalled full mix twice from the same seeds — once born at
+    ``new_shards`` memory servers, once born at ``old_shards`` with a
+    ``MeshGrowth`` doubling the mesh at ``grow_round`` — and emits
+    ``BENCH_elastic.json`` with the migration pause and the modeled txn/s
+    at the pre- and post-expansion cluster sizes. Two contracts, both
+    fatal on violation: the expanded run must be bit-identical to the
+    born-large run (no committed transaction lost or invented across the
+    cut), and the modeled post-expansion throughput must be no worse than
+    pre-expansion (scale-out must scale). Throughput before/after comes
+    from the calibrated network model at the two cluster sizes, NOT wall
+    clock: more *simulated* shards on one host means more wall time, which
+    would invert the comparison the bench exists to make.
+    """
+    if new_shards <= old_shards:
+        raise SystemExit(f"--expand grows the mesh: new shard count "
+                         f"{new_shards} must exceed {old_shards}")
+    if grow_round is None:
+        # default to an odd round: with gc_interval=2 the checkpoints land
+        # after odd rounds, so the migration checkpoint predates the grow
+        # round and the migration window really replays journal entries
+        grow_round = (n_rounds // 2) | 1
+    layout = "warehouse_major" if mode == "aware" else "table_major"
+    cfg = tpcc.TPCCConfig(
+        n_warehouses=n_threads, customers_per_district=8,
+        n_items=128 if smoke else 512, n_threads=n_threads,
+        orders_per_thread=max(64, n_rounds * 2), dist_degree=20.0,
+        layout=layout)
+    home = locality.thread_homes(cfg.n_threads, cfg.n_warehouses)
+    mix = SMOKE_MIX if smoke else None
+
+    def journalled_run(n_shards, growth):
+        oracle = PartitionedVectorOracle(cfg.n_threads, n_parts=n_shards)
+        lay, st = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(0))
+        mesh = jax.sharding.Mesh(np.array(compat.cpu_devices()[:n_shards]),
+                                 ("mem",))
+        engine = tpcc.make_mixed_engine(cfg, lay, mesh, "mem", oracle,
+                                        shard_vector=True, with_journal=True)
+        st = tpcc.distribute_state(engine, st)
+        jnl = tpcc.make_journal(cfg, oracle, capacity_rounds=n_rounds + 2,
+                                n_replicas=n_shards)
+        jnl = store.shard_journal(mesh, "mem", jnl)
+        with tempfile.TemporaryDirectory() as d:
+            t0 = time.perf_counter()
+            st, stats = tpcc.run_mixed_rounds(
+                cfg, lay, st, oracle, jax.random.PRNGKey(1), n_rounds,
+                home_w=home, engine=engine, locality_mode=mode, mix=mix,
+                journal=jnl, checkpoint_dir=d, growth=growth,
+                gc_interval=gc_interval, max_txn_time=max_txn_time)
+            wall_s = time.perf_counter() - t0
+        return lay, oracle, st, stats, wall_s
+
+    _, _, st_ref, ms_ref, _ = journalled_run(new_shards, None)
+    lay, oracle, st_exp, ms_exp, wall_exp = journalled_run(
+        old_shards, tpcc.MeshGrowth(grow_round=grow_round,
+                                    new_shards=new_shards))
+    (rep,) = ms_exp.growth
+
+    # bit-identity over the real records/slots: the two runs pad the pool
+    # and the timestamp vector for different shard counts mid-history, and
+    # padding carries no semantics
+    n_records = lay.catalog.total_records
+    identical = True
+    for field in tpcc.mvcc.VersionedTable._fields:
+        identical &= bool(np.array_equal(
+            np.asarray(jax.device_get(
+                getattr(st_ref.nam.table, field)))[:n_records],
+            np.asarray(jax.device_get(
+                getattr(st_exp.nam.table, field)))[:n_records]))
+    identical &= bool(np.array_equal(
+        np.asarray(jax.device_get(st_ref.nam.oracle_state.vec))
+        [:oracle.n_slots],
+        np.asarray(jax.device_get(st_exp.nam.oracle_state.vec))
+        [:oracle.n_slots]))
+    identical &= ms_ref.attempts == ms_exp.attempts
+    identical &= ms_ref.commits == ms_exp.commits
+    identical &= ms_ref.retries == ms_exp.retries
+    identical &= ms_ref.delivered == ms_exp.delivered
+    identical &= ms_ref.ops == ms_exp.ops
+
+    _, prof = mixed_profiles(ms_exp)
+    txn_before = netmodel.namdb_throughput(
+        prof, 2 * old_shards, 60, ms_exp.abort_rate,
+        local_fraction=ms_exp.local_fraction)
+    txn_after = netmodel.namdb_throughput(
+        prof, 2 * new_shards, 60, ms_exp.abort_rate,
+        local_fraction=ms_exp.local_fraction)
+    # the migration pause expressed in equivalent transaction rounds: how
+    # many rounds' worth of execution time the cutover cost the mix
+    round_s = (wall_exp - rep.migration_seconds) / n_rounds
+    pause_rounds = rep.migration_seconds / round_s
+
+    doc = {
+        "schema_version": 1,
+        "kind": "tpcc_elastic",
+        "config": {"rounds": n_rounds, "shards_before": old_shards,
+                   "shards_after": new_shards, "threads": n_threads,
+                   "mode": mode, "grow_round": grow_round,
+                   "gc_interval": gc_interval, "max_txn_time": max_txn_time,
+                   "smoke": smoke},
+        "expansion": {
+            "checkpoint_round": rep.checkpoint_round,
+            "replayed_entries": rep.replayed_entries,
+            "moved_slots": rep.moved_slots,
+            "moved_buckets": rep.moved_buckets,
+            "migration_seconds": rep.migration_seconds,
+            "pause_rounds": pause_rounds},
+        "summary": {
+            "attempts": ms_exp.total_attempts,
+            "commits": ms_exp.total_commits,
+            "abort_rate": ms_exp.abort_rate,
+            "gc_sweeps": ms_exp.gc_sweeps,
+            "wall_s": wall_exp,
+            "txn_per_s_measured": ms_exp.total_attempts / wall_exp,
+            "txn_per_s_before": txn_before,
+            "txn_per_s_after": txn_after,
+            "bit_identical": identical},
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"tpcc_elastic_{old_shards}to{new_shards}shard_{mode},"
+          f"{rep.migration_seconds * 1e6:.0f},{txn_after:.0f}")
+    print(f"#   grew {old_shards}->{new_shards} at round {grow_round} of "
+          f"{n_rounds}: checkpoint {rep.checkpoint_round}, "
+          f"{rep.replayed_entries} entries replayed, "
+          f"{rep.moved_slots} slots + {rep.moved_buckets} buckets moved "
+          f"in {rep.migration_seconds:.2f}s (~{pause_rounds:.1f} rounds)")
+    print(f"#   modeled txn/s {txn_before / 1e6:.2f}M@{2 * old_shards}m -> "
+          f"{txn_after / 1e6:.2f}M@{2 * new_shards}m "
+          f"({ms_exp.total_commits}/{ms_exp.total_attempts} committed) "
+          f"-> {out_path}")
+    if not identical:
+        raise SystemExit(
+            "expanded run is NOT bit-identical to the born-large run — "
+            "§4.3 scale-out lost or invented a transaction")
+    if txn_after < txn_before:
+        raise SystemExit(
+            f"modeled throughput fell across the expansion "
+            f"({txn_before:.0f} -> {txn_after:.0f} txn/s) — scale-out "
+            f"must not shrink the cluster's capacity")
+    print("# expanded state bit-identical to the born-large run")
+    return doc
+
+
 # ---------------------------------------------------- §5.2 probe bench ----
 def measure_probe_point(n_buckets: int, n_queries: int, *, n_old: int = 8,
                         n_overflow: int = 16, width: int = 8,
@@ -568,6 +727,13 @@ def main():
                     "memory server killed mid-run, recovered from checkpoint"
                     " + journal replay; emits BENCH_recovery.json and fails "
                     "unless the recovered run is bit-identical")
+    ap.add_argument("--expand", action="store_true",
+                    help="§4.3 online scale-out bench: journalled full mix "
+                    "born at --shards memory servers, mesh doubled mid-run "
+                    "(checkpoint epoch, journal replay, repartition, "
+                    "cutover); emits BENCH_elastic.json and fails unless "
+                    "the expanded run is bit-identical to a born-large run "
+                    "and post-expansion throughput holds")
     args = ap.parse_args()
     if args.smoke:
         args.shards, args.rounds, args.threads = 2, 3, 4
@@ -575,6 +741,15 @@ def main():
     if args.probe:
         print("name,us_per_call,derived")
         run_probe(smoke=args.smoke)
+        return
+
+    if args.expand:
+        # the joining servers need devices too: the bench doubles the mesh
+        compat.ensure_host_devices(2 * args.shards)
+        print("name,us_per_call,derived")
+        run_expand(args.rounds if not args.smoke else 4,
+                   args.shards, 2 * args.shards, args.threads,
+                   smoke=args.smoke)
         return
 
     if args.shards > 1:
@@ -606,11 +781,8 @@ def main():
 
     print("# --- sharded mesh sweep (full mix through distributed_round, "
           f"{args.threads} threads) ---")
-    results, skipped = run_shard_sweep(args.shards, args.rounds, args.threads,
-                                       mix=SMOKE_MIX if args.smoke else None)
-    for n in skipped:
-        print(f"# skipped {n} shards: --threads {args.threads} not "
-              f"divisible (partitioned T_R needs n_threads % shards == 0)")
+    results = run_shard_sweep(args.shards, args.rounds, args.threads,
+                              mix=SMOKE_MIX if args.smoke else None)
     for n, mode, stats, us, p, total, neworder in results:
         print(f"tpcc_dist_{n}shard_{mode},{us:.1f},{total:.0f}")
         per_type = " ".join(

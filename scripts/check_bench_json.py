@@ -1,8 +1,9 @@
 """Schema check for the bench JSON artifacts.
 
 CI runs ``bench_tpcc_scaling.py --sustain … --smoke`` (emitting
-``BENCH_sustain.json``), ``--probe --smoke`` (``BENCH_probe.json``) and
-``--kill --smoke`` (``BENCH_recovery.json``) and uploads all three; this
+``BENCH_sustain.json``), ``--probe --smoke`` (``BENCH_probe.json``),
+``--kill --smoke`` (``BENCH_recovery.json``) and ``--expand --smoke``
+(``BENCH_elastic.json``) and uploads all four; this
 script pins each document's shape — dispatched on the ``kind`` field — so
 the bench output formats cannot rot silently (a field rename or a dropped
 trajectory would otherwise only surface when someone next tries to plot an
@@ -105,6 +106,65 @@ def check_recovery(doc: dict):
                           "recovery lost or invented a transaction")
 
 
+ELASTIC_CONFIG_KEYS = {"rounds": int, "shards_before": int,
+                       "shards_after": int, "threads": int, "mode": str,
+                       "grow_round": int, "gc_interval": int,
+                       "max_txn_time": int, "smoke": bool}
+ELASTIC_EXPANSION_KEYS = {"checkpoint_round": int, "replayed_entries": int,
+                          "moved_slots": int, "moved_buckets": int,
+                          "migration_seconds": float, "pause_rounds": float}
+ELASTIC_SUMMARY_KEYS = {"attempts": int, "commits": int, "abort_rate": float,
+                        "gc_sweeps": int, "wall_s": float,
+                        "txn_per_s_measured": float,
+                        "txn_per_s_before": float, "txn_per_s_after": float,
+                        "bit_identical": bool}
+
+
+def check_elastic(doc: dict):
+    """The §4.3 online scale-out artifact: one mid-run mesh expansion, the
+    migration pause, the modeled txn/s at the pre-/post-expansion cluster
+    sizes, and the bit-identity verdict against a born-large run — which
+    must be True; a scale-out that changed state lost a transaction."""
+    _check_fields(doc.get("config"), ELASTIC_CONFIG_KEYS, "config")
+    _check_fields(doc.get("expansion"), ELASTIC_EXPANSION_KEYS, "expansion")
+    _check_fields(doc.get("summary"), ELASTIC_SUMMARY_KEYS, "summary")
+    cfg, exp, s = doc["config"], doc["expansion"], doc["summary"]
+    if cfg["shards_after"] <= cfg["shards_before"]:
+        raise SchemaError(f"config: shards_after {cfg['shards_after']!r} "
+                          f"does not exceed shards_before "
+                          f"{cfg['shards_before']!r} — that is not a "
+                          f"scale-OUT")
+    if not 0 <= cfg["grow_round"] < cfg["rounds"]:
+        raise SchemaError(f"config.grow_round {cfg['grow_round']!r} outside "
+                          f"[0, {cfg['rounds']})")
+    if not -1 <= exp["checkpoint_round"] < cfg["grow_round"]:
+        raise SchemaError(f"expansion.checkpoint_round "
+                          f"{exp['checkpoint_round']!r} not in "
+                          f"[-1, grow_round) — migrated from the future?")
+    for f in ("replayed_entries", "moved_slots", "moved_buckets"):
+        if exp[f] < 0:
+            raise SchemaError(f"expansion.{f}: negative count {exp[f]!r}")
+    if exp["moved_slots"] == 0:
+        raise SchemaError("expansion.moved_slots is 0 — the joining servers "
+                          "received no records; nothing actually migrated")
+    if exp["migration_seconds"] <= 0:
+        raise SchemaError("expansion.migration_seconds: non-positive timing")
+    if exp["pause_rounds"] < 0:
+        raise SchemaError("expansion.pause_rounds: negative pause")
+    if s["commits"] > s["attempts"]:
+        raise SchemaError(f"summary: {s['commits']} commits out of "
+                          f"{s['attempts']} attempts")
+    if s["txn_per_s_after"] < s["txn_per_s_before"]:
+        raise SchemaError(f"summary: modeled throughput fell across the "
+                          f"expansion ({s['txn_per_s_before']!r} -> "
+                          f"{s['txn_per_s_after']!r}) — scale-out shrank "
+                          f"the cluster's capacity")
+    if s["bit_identical"] is not True:
+        raise SchemaError("summary.bit_identical is not True — the expanded "
+                          "run diverged from the born-large run; §4.3 "
+                          "scale-out lost or invented a transaction")
+
+
 PROBE_CONFIG_KEYS = {"n_queries": int, "n_old": int, "n_overflow": int,
                      "max_probes": int, "iters": int, "smoke": bool}
 PROBE_POINT_KEYS = {"n_buckets": int, "n_records": int, "n_queries": int,
@@ -158,9 +218,12 @@ def check(doc: dict):
         return check_probe(doc)
     if kind == "tpcc_recovery":
         return check_recovery(doc)
+    if kind == "tpcc_elastic":
+        return check_elastic(doc)
     if kind != "tpcc_sustain":
         raise SchemaError(f"kind {doc.get('kind')!r} not in "
-                          f"('tpcc_sustain', 'hash_probe', 'tpcc_recovery')")
+                          f"('tpcc_sustain', 'hash_probe', 'tpcc_recovery', "
+                          f"'tpcc_elastic')")
     _check_fields(doc.get("config"), CONFIG_KEYS, "config")
     _check_fields(doc.get("summary"), SUMMARY_KEYS, "summary")
 
@@ -228,6 +291,17 @@ def main(argv):
               f"{doc['config']['kill_round']}, {r['replayed_entries']} "
               f"entries replayed, {r['released_locks']} locks released in "
               f"{r['recovery_seconds']:.2f}s, bit_identical=True")
+    elif doc["kind"] == "tpcc_elastic":
+        e = doc["expansion"]
+        print(f"check_bench_json: {path} ok — grew "
+              f"{doc['config']['shards_before']}->"
+              f"{doc['config']['shards_after']} shards at round "
+              f"{doc['config']['grow_round']}, {e['replayed_entries']} "
+              f"entries replayed, {e['moved_slots']} slots + "
+              f"{e['moved_buckets']} buckets moved in "
+              f"{e['migration_seconds']:.2f}s, "
+              f"txn/s {s['txn_per_s_before']:.0f} -> "
+              f"{s['txn_per_s_after']:.0f}, bit_identical=True")
     else:
         print(f"check_bench_json: {path} ok — {doc['config']['rounds']} "
               f"rounds, {s['commits']}/{s['attempts']} committed, "

@@ -114,6 +114,13 @@ def restore(path: str, like_params, like_opt=None, *, shardings=None
             if meta["dtype"] not in _NATIVE_DTYPES:    # raw uint view
                 import ml_dtypes
                 arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])))
+            if tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"checkpoint leaf {name}/{key} has shape "
+                    f"{tuple(arr.shape)} but the live structure expects "
+                    f"{tuple(np.shape(leaf))} — the checkpoint was written "
+                    f"under a different deployment (e.g. a pre-scale-out "
+                    f"shard count); re-checkpoint after the topology change")
             leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(like), leaves)

@@ -190,3 +190,14 @@ def partition_of(keys, n_buckets: int, n_servers: int):
     """Which memory server owns each key's bucket (range partitioning)."""
     per = -(-n_buckets // n_servers)
     return _hash(keys, n_buckets) // per
+
+
+def moved_buckets(n_buckets: int, old_servers: int,
+                  new_servers: int) -> jnp.ndarray:
+    """Which directory buckets change owning memory server when the mesh
+    grows — the §5.2 repartition set of an online scale-out (the bucket
+    analogue of ``locality.moved_slots``). Bool [n_buckets]."""
+    b = jnp.arange(n_buckets, dtype=jnp.int32)
+    old_per = -(-n_buckets // old_servers)
+    new_per = -(-n_buckets // new_servers)
+    return (b // old_per) != (b // new_per)

@@ -29,6 +29,15 @@ class Placement(NamedTuple):
         return jnp.asarray(slots, jnp.int32) // self.shard_records
 
 
+def moved_slots(old: Placement, new: Placement, n_records: int) -> jnp.ndarray:
+    """Which pool slots change owning memory server between two placements —
+    the record-migration set of an online scale-out (DESIGN.md §4.3). Bool
+    [n_records]; slots whose range assignment is unchanged stay resident and
+    need no migration."""
+    s = jnp.arange(n_records, dtype=jnp.int32)
+    return old.server_of_slot(s) != new.server_of_slot(s)
+
+
 def co_located_server(tid, threads_per_server: int):
     """Compute server hosting thread ``tid`` (one pair per machine, §7.1)."""
     return jnp.asarray(tid, jnp.int32) // threads_per_server

@@ -229,11 +229,13 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
     """
     n_shards = mesh.shape[axis]
     if shard_vector:
-        if oracle.n_slots % n_shards:
-            raise ValueError(
-                f"shard_vector needs n_slots ({oracle.n_slots}) divisible by "
-                f"the mesh axis ({n_shards})")
-        part_slots = oracle.n_slots // n_shards
+        # ceil-partition: a vector whose length does not divide the shard
+        # count (a 3→5-style expansion) is zero-padded to the next multiple
+        # (:func:`pad_vector`); the padding is stripped right after the
+        # all-gather, so every slot of transaction logic sees the exact
+        # unpadded vector — bit-identical to the replicated deployment
+        part_slots = -(-oracle.n_slots // n_shards)
+        padded_slots = part_slots * n_shards
     if n_dir_buckets and n_dir_buckets % n_shards:
         raise ValueError(f"n_dir_buckets ({n_dir_buckets}) must divide over "
                          f"the mesh axis ({n_shards})")
@@ -254,6 +256,8 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         # ---- 1. read the timestamp vector (gather the partitions) --------
         if shard_vector:
             vec = jax.lax.all_gather(vec, axis, tiled=True)
+            if padded_slots != oracle.n_slots:
+                vec = vec[:oracle.n_slots]
 
         # ---- 2a. key resolution against the partitioned directory (§5.2) -
         if n_dir_buckets:
@@ -371,6 +375,10 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         vec = oracle.make_visible(
             VectorState(vec=vec), batch.tid, cts, committed).vec
         if shard_vector:
+            if padded_slots != oracle.n_slots:
+                vec = jnp.concatenate(
+                    [vec, jnp.zeros((padded_slots - oracle.n_slots,),
+                                    vec.dtype)])
             vec = jax.lax.dynamic_slice_in_dim(
                 vec, shard_id * part_slots, part_slots)
 
@@ -541,7 +549,8 @@ def init_shard_logs(n_shards: int, n_snapshots: int,
 
 
 def distributed_gc_round(mesh: Mesh, axis: str, *,
-                         shard_vector: bool = False):
+                         shard_vector: bool = False,
+                         n_vec_slots: int | None = None):
     """Build a jittable per-shard GC sweep over the sharded pool (§5.3).
 
     Each memory-server shard runs :func:`repro.core.gc.gc_round` — snapshot
@@ -558,12 +567,21 @@ def distributed_gc_round(mesh: Mesh, axis: str, *,
     Returns ``gc_fn(table, vec, logs, now, max_txn_time) -> (table, logs)``
     with ``logs`` from :func:`init_shard_logs` (leading shard axis); ``now``
     and ``max_txn_time`` are traced scalars, so one compile serves the run.
+
+    ``n_vec_slots`` is the oracle's true vector width: when the partitioned
+    vector carries :func:`pad_vector` zeros (shard count does not divide the
+    slot count), the gathered vector is sliced back to ``n_vec_slots`` so the
+    snapshot log rows keep the exact oracle width.
     """
 
     def local_gc(table: VersionedTable, vec, log_times, log_vecs, now,
                  max_txn_time):
         if shard_vector:
             vec = jax.lax.all_gather(vec, axis, tiled=True)
+            # drop the pad_vector zeros so the snapshot log entry has the
+            # exact oracle width (non-dividing shard counts)
+            if n_vec_slots is not None:
+                vec = vec[:n_vec_slots]
         log = gc_ops.SnapshotLog(times=log_times[0], vecs=log_vecs[0])
         table, log = gc_ops.gc_round(table, vec, log, now, max_txn_time)
         return table, log.times[None], log.vecs[None]
@@ -617,9 +635,25 @@ def shard_table(mesh: Mesh, axis: str, table: VersionedTable):
     return jax.tree.map(put, table)
 
 
+def pad_vector(vec: jnp.ndarray, multiple: int):
+    """Zero-pad the timestamp vector so it divides evenly over ``multiple``
+    memory servers — the vector analogue of :func:`pad_table` (a 3→5-style
+    expansion need not divide the slot count). Pad slots are never addressed
+    by any thread and are stripped after every all-gather, so they carry no
+    semantics. Returns ``(padded_vec, n_padded_slots)``; the dividing case
+    returns the input unchanged."""
+    n = vec.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return vec, n
+    return jnp.concatenate([vec, jnp.zeros((pad,), vec.dtype)]), n + pad
+
+
 def shard_vector(mesh: Mesh, axis: str, vec: jnp.ndarray) -> jnp.ndarray:
     """Place the timestamp vector range-partitioned over the mesh axis
-    (§4.2 "Partitioning of T_R" — pair with ``shard_vector=True``)."""
+    (§4.2 "Partitioning of T_R" — pair with ``shard_vector=True``). The
+    vector is :func:`pad_vector`-padded first so any shard count works."""
+    vec, _ = pad_vector(vec, mesh.shape[axis])
     return jax.device_put(vec, NamedSharding(mesh, P(axis)))
 
 
@@ -644,3 +678,52 @@ def shard_journal(mesh: Mesh, axis: str, journal: wal.Journal) -> wal.Journal:
     return journal._replace(
         used=jax.device_put(journal.used, NamedSharding(mesh, P())),
         **{f: put(getattr(journal, f)) for f in entry_fields})
+
+
+# ---------------------------------------------------------------------------
+# Online scale-out: re-place a live store onto a larger mesh (§6 elasticity)
+# ---------------------------------------------------------------------------
+def expand_mesh(mesh: Mesh, axis: str, table: VersionedTable,
+                vec: jnp.ndarray, *, n_records: int,
+                vector_sharded: bool = False,
+                directory: ht.HashTable | None = None,
+                journal: wal.Journal | None = None,
+                gc_logs: gc_ops.SnapshotLog | None = None):
+    """Re-place a live store's device state onto a (larger) mesh.
+
+    This is the storage-layer half of online scale-out (DESIGN.md §4.3):
+    given the merged post-migration record pool and timestamp vector as
+    host/replicated arrays — ``table`` trimmed of any previous shard-count's
+    :func:`pad_table` filler via ``n_records``, ``vec`` unpadded — it
+    re-partitions every placed structure over the new mesh:
+
+    - records: :func:`pad_table` to the new shard count, :func:`shard_table`;
+    - timestamp vector (when ``vector_sharded``): :func:`shard_vector`
+      (which re-pads for the new count);
+    - §5.2 directory: :func:`shard_directory` over the new bucket ranges;
+    - §6.2 journal: :func:`wal.grow_replicas` to one replica per new server
+      (the broadcast journal is identical across replicas, so the joiners'
+      replicas are exact copies), then :func:`shard_journal`;
+    - §5.3 snapshot logs: every shard logs the identical full vector (see
+      :func:`distributed_gc_round`), so the joiners' logs are copies of
+      shard 0's.
+
+    Returns ``(table, vec, directory, journal, gc_logs)`` with the optional
+    structures passed through as ``None`` when not supplied.
+    """
+    n_shards = mesh.shape[axis]
+    tbl = jax.tree.map(lambda x: x[:n_records], table)
+    tbl, _ = pad_table(tbl, n_shards)
+    tbl = shard_table(mesh, axis, tbl)
+    if vector_sharded:
+        vec = shard_vector(mesh, axis, vec)
+    if directory is not None:
+        directory = shard_directory(mesh, axis, directory)
+    if journal is not None:
+        journal = shard_journal(mesh, axis,
+                                wal.grow_replicas(journal, n_shards))
+    if gc_logs is not None:
+        gc_logs = gc_ops.SnapshotLog(
+            times=jnp.repeat(jnp.asarray(gc_logs.times)[:1], n_shards, 0),
+            vecs=jnp.repeat(jnp.asarray(gc_logs.vecs)[:1], n_shards, 0))
+    return tbl, vec, directory, journal, gc_logs

@@ -362,3 +362,20 @@ def rereplicate(j: Journal, survivors) -> Journal:
     return j._replace(**{
         f: jnp.broadcast_to(getattr(j, f)[r][None], getattr(j, f).shape)
         for f in entry_fields})
+
+
+def grow_replicas(j: Journal, n_replicas: int) -> Journal:
+    """Extend the replica axis for a mesh expansion: each joining memory
+    server's journal replica is seeded as a copy of replica 0 (replicas are
+    identical by construction — every server appends the same broadcast
+    entries — so any replica would do)."""
+    if n_replicas < j.n_replicas:
+        raise ValueError(
+            f"cannot shrink the journal from {j.n_replicas} to "
+            f"{n_replicas} replicas — grow_replicas only adds servers")
+    entry_fields = ("ts_vec", "slots", "new_hdr", "new_data", "write_mask",
+                    "committed", "resolved", "round_no", "seq")
+    return j._replace(**{
+        f: jnp.broadcast_to(getattr(j, f)[:1],
+                            (n_replicas,) + getattr(j, f).shape[1:])
+        for f in entry_fields})

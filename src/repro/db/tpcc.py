@@ -584,7 +584,7 @@ def _neworder_inserts(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
             [can_insert[:, None], can_insert[:, None],
              can_insert[:, None] & line_mask], axis=1)
         journal = wal.append_intent(
-            journal, tids, vec,
+            journal, tids, vec[:journal.ts_vec.shape[-1]],
             *wal.pad_writes(journal, jslots, jhdr, jdata, jmask),
             round_no=round_no, seq=_JSEQ_NEWORDER_INS)
         journal = wal.append_outcome(journal, tids, can_insert)
@@ -661,7 +661,8 @@ def make_distributed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
         lambda rh, rd, vec, aux: _neworder_new_data(rd, aux),
         shard_records, shard_vector=shard_vector, n_dir_buckets=n_dir,
         dir_max_probes=DIR_PROBES, with_journal=with_journal)
-    gc_fn = store.distributed_gc_round(mesh, axis, shard_vector=shard_vector)
+    gc_fn = store.distributed_gc_round(mesh, axis, shard_vector=shard_vector,
+                                       n_vec_slots=oracle.n_slots)
     return DistEngine(round_fn=round_fn, mesh=mesh, axis=axis,
                       n_shards=n_shards, shard_records=shard_records,
                       shard_vector=shard_vector, gc_fn=gc_fn,
@@ -1048,7 +1049,7 @@ def _mem_state(st: TPCCState, jnl: wal.Journal):
 
 def _inflight_intents(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                       jnl: wal.Journal, key, pending, pending_type,
-                      round_no, home_w, dist_degree, logits, mix):
+                      round_no, home_w, dist_degree, logits, mix, skew=None):
     """Simulate the crash window: the kill round's new-order lanes lock
     their write-sets and log intents, then the failure hits before any
     outcome record lands. The RNG key is split but not consumed — the
@@ -1058,7 +1059,7 @@ def _inflight_intents(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     _, sub = jax.random.split(key)
     fresh = workload.gen_mixed(sub, T, cfg.n_warehouses, cfg.n_items,
                                cfg.customers_per_district, home_w,
-                               dist_degree, logits, mix)
+                               dist_degree, logits, mix, skew=skew)
     inp = _merge_retries(pending, fresh, pending_type >= 0, T)
     batch, _ = _neworder_batch(cfg, lay, inp.neworder, inp.txn_type == 0)
     tbl = st.nam.table
@@ -1076,7 +1077,7 @@ def _inflight_intents(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     # the intent lands (on every journal replica), the outcome never does;
     # the payload is irrelevant — these entries must never replay
     jnl = wal.append_intent(
-        jnl, batch.tid, st.nam.oracle_state.vec,
+        jnl, batch.tid, st.nam.oracle_state.vec[:jnl.ts_vec.shape[-1]],
         *wal.pad_writes(jnl, wslots,
                         jnp.zeros(wslots.shape + (2,), jnp.uint32),
                         jnp.zeros(wslots.shape + (WIDTH,), jnp.int32),
@@ -1158,6 +1159,135 @@ def recover_from_failure(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     return st, jnl, report
 
 
+# ------------------------------------------------------- online scale-out ----
+class MeshGrowth(NamedTuple):
+    """Grow the mesh to ``new_shards`` memory servers at the *start* of
+    round ``grow_round`` of :func:`run_mixed_rounds` — online scale-out
+    (DESIGN.md §4.3). The expansion is a planned §6.2 failover: checkpoint
+    the joining epoch, repartition the directory and the timestamp vector,
+    migrate the moved record ranges by replaying the journal onto the last
+    checkpoint, cut over. The workload keeps its retry queues, in-flight
+    state and RNG stream — transactions in flight at the cut complete or
+    retry through the §7.4 queues exactly as they would have."""
+    grow_round: int
+    new_shards: int
+
+
+class ScaleOutReport(NamedTuple):
+    """What one online expansion did (rides on ``MixedRunStats.growth``)."""
+    grow_round: int
+    old_shards: int
+    new_shards: int
+    checkpoint_round: int    # round after which the migration ckpt was taken
+    replayed_entries: int    # journal entries replayed over the window
+    moved_slots: int         # pool slots that changed owning server
+    moved_buckets: int       # §5.2 directory buckets that changed owner
+    migration_seconds: float # wall-clock: halt → workload resumed
+
+
+def scale_out(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
+              oracle: VectorOracle, engine, jnl: wal.Journal,
+              checkpoint_dir: str, growth: MeshGrowth, *, use_gc: bool,
+              move_versions: bool = True, gc_log=None):
+    """Online mesh expansion: add memory servers to a live mesh (§4.3).
+
+    Reuses the §6.2 recovery machinery as the migration substrate — a
+    scale-out is a planned failover of every *moved* range:
+
+    1. **Checkpoint epoch.** Restore the last checkpoint and replay the
+       journal onto it (all replicas live, any one serves). This rebuilds,
+       bit-exactly, the state of every record as of the join point — the
+       "migration window" replay: intents that landed after the checkpoint
+       was cut are re-applied, so no committed transaction is lost.
+    2. **Repartition + migrate.** Compute the moved ranges
+       (:func:`repro.core.locality.moved_slots` for records,
+       :func:`repro.core.hashtable.moved_buckets` for the §5.2 directory,
+       the slot-range analogue for the partitioned timestamp vector). Moved
+       ranges take the replayed reconstruction — the new server's memory is
+       seeded from checkpoint + journal, exactly like a recovered server's;
+       unmoved ranges keep their live memory untouched.
+    3. **Cutover.** Re-place every structure over the grown mesh
+       (:func:`repro.core.store.expand_mesh`: re-pad + re-shard the pool,
+       re-partition vector and directory, :func:`repro.core.wal.
+       grow_replicas` the journal so each joiner holds a replica, copy the
+       §5.3 snapshot logs), rebuild the executors, and checkpoint the
+       post-join epoch so a later failure restores new-mesh shapes.
+
+    Returns ``(state, journal, engine, gc_log, ScaleOutReport)``.
+    """
+    t0 = time.perf_counter()
+    old_n = engine.n_shards
+    new_n = growth.new_shards
+    if new_n <= old_n:
+        raise ValueError(f"scale_out grows the mesh: new_shards ({new_n}) "
+                         f"must exceed the current {old_n}")
+    R = lay.catalog.total_records
+    n_slots = oracle.n_slots
+
+    # gather every carried structure off the old mesh: arrays committed to
+    # the 4-device placement cannot feed the 8-device executors, and the
+    # migration merge below runs host-side anyway
+    def host(t):
+        return jax.tree.map(lambda x: jnp.asarray(jax.device_get(x)), t)
+
+    st, jnl = host(st), host(jnl)
+    if gc_log is not None:
+        gc_log = host(gc_log)
+
+    # ---- 1. checkpoint epoch + migration-window replay -------------------
+    ckpt, _, manifest = snapshot.restore(checkpoint_dir, _mem_state(st, jnl))
+    since = ckpt["used"]
+    recon_tbl = wal.replay(jnl, ckpt["table"], since=since,
+                           reuse_only=use_gc, move_versions=move_versions)
+    recon_vec = wal.replay_vector(jnl, ckpt["vec"], since=since)
+    replayable, _ = wal.entry_status(jnl, 0, since=since)
+
+    # ---- 2. repartition: moved ranges take the replayed reconstruction ---
+    new_placement = locality.Placement(
+        n_servers=new_n, shard_records=-(-R // new_n))
+    moved = locality.moved_slots(engine.placement, new_placement, R)
+
+    def pick(live, rec):
+        return jnp.where(moved.reshape((-1,) + (1,) * (live.ndim - 1)),
+                         rec[:R], live[:R])
+
+    tbl = jax.tree.map(pick, st.nam.table, recon_tbl)
+    sl = jnp.arange(n_slots, dtype=jnp.int32)
+    vec_moved = (sl // (-(-n_slots // old_n))) != (sl // (-(-n_slots // new_n)))
+    vec = jnp.where(vec_moved, recon_vec[:n_slots],
+                    st.nam.oracle_state.vec[:n_slots])
+    n_moved_buckets = int(jnp.sum(ht.moved_buckets(
+        engine.n_dir_buckets, old_n, new_n))) if engine.n_dir_buckets else 0
+
+    # ---- 3. cutover: re-place onto the grown mesh, rebuild executors -----
+    new_mesh = jax.make_mesh((new_n,), (engine.axis,))
+    if isinstance(engine, MixedEngine):
+        new_engine = make_mixed_engine(
+            cfg, lay, new_mesh, engine.axis, oracle,
+            shard_vector=engine.shard_vector, with_journal=engine.with_journal)
+    else:
+        new_engine = make_distributed_engine(
+            cfg, lay, new_mesh, engine.axis, oracle,
+            shard_vector=engine.shard_vector, with_journal=engine.with_journal)
+    tbl, vec, directory, jnl, gc_log = store.expand_mesh(
+        new_mesh, engine.axis, tbl, vec, n_records=R,
+        vector_sharded=engine.shard_vector,
+        directory=st.directory if engine.n_dir_buckets else None,
+        journal=jnl, gc_logs=gc_log)
+    st = st._replace(
+        nam=st.nam._replace(table=tbl, oracle_state=VectorState(vec=vec)),
+        directory=directory if directory is not None else st.directory)
+    snapshot.save(checkpoint_dir, _mem_state(st, jnl),
+                  extra={"round": growth.grow_round - 1, "n_shards": new_n})
+    report = ScaleOutReport(
+        grow_round=growth.grow_round, old_shards=old_n, new_shards=new_n,
+        checkpoint_round=int(manifest["extra"].get("round", -1)),
+        replayed_entries=int(jnp.sum(replayable)),
+        moved_slots=int(jnp.sum(moved)), moved_buckets=n_moved_buckets,
+        migration_seconds=time.perf_counter() - t0)
+    return st, jnl, new_engine, gc_log, report
+
+
 # ----------------------------------------------------- mixed-round driver ----
 class MixedRunStats(NamedTuple):
     """Aggregates of a full five-transaction-mix run (§7: the paper's total
@@ -1182,6 +1312,8 @@ class MixedRunStats(NamedTuple):
     ovf_peak: int = 0               # max overflow ring position observed
     recovery: tuple = ()            # (§6.2 RecoveryReport, …) — one per
     #                                 injected memory-server failure
+    growth: tuple = ()              # (ScaleOutReport, …) — one per online
+    #                                 mesh expansion (DESIGN.md §4.3)
 
 
 def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
@@ -1194,7 +1326,9 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                      gc_snapshots: int = 8,
                      journal: Optional[wal.Journal] = None,
                      checkpoint_dir: Optional[str] = None,
-                     failure: Optional[FailureInjector] = None):
+                     failure: Optional[FailureInjector] = None,
+                     growth: Optional[MeshGrowth] = None,
+                     skew: Optional[workload.Skew] = None):
     """Closed-loop driver for the full TPC-C mix.
 
     Each round, every execution thread draws its next transaction type from
@@ -1226,6 +1360,12 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     truncation. ``failure`` injects a §6.2 memory-server failure at the
     start of its ``kill_round`` and runs :func:`recover_from_failure`
     before resuming; the reports ride on ``MixedRunStats.recovery``.
+
+    ``growth`` performs an online mesh expansion (:func:`scale_out`) at the
+    start of its ``grow_round`` — the workload keeps committing on the grown
+    mesh; reports ride on ``MixedRunStats.growth``. ``skew`` applies the
+    zipfian warehouse/district/remote-payment knobs of
+    :class:`repro.db.workload.Skew` to every drawn transaction.
     """
     T = cfg.n_threads
     _check_layout_homes(cfg, lay, home_w, locality_mode)
@@ -1262,6 +1402,18 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     if jnl is not None and engine is not None and not engine.with_journal:
         raise ValueError("journaling through the mesh needs an engine "
                          "built with with_journal=True")
+    growth_reports = []
+    if growth is not None:
+        if engine is None or jnl is None or checkpoint_dir is None:
+            raise ValueError("online scale-out needs a mesh engine, a "
+                             "journal and a checkpoint_dir: §4.3 migration "
+                             "replays the journal onto the last checkpoint")
+        if not 0 <= growth.grow_round < n_rounds:
+            raise ValueError(f"grow_round {growth.grow_round} outside the "
+                             f"{n_rounds}-round run")
+        if growth.new_shards <= engine.n_shards:
+            raise ValueError(f"new_shards ({growth.new_shards}) must exceed "
+                             f"the current mesh ({engine.n_shards})")
     if jnl is not None and checkpoint_dir is not None:
         snapshot.save(checkpoint_dir, _mem_state(st, jnl),
                       extra={"round": -1})
@@ -1299,15 +1451,27 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
             if failure.in_flight:
                 st, jnl = _inflight_intents(
                     cfg, lay, st, jnl, key, pending, pending_type, r,
-                    home_w, dist_degree, logits, mix)
+                    home_w, dist_degree, logits, mix, skew=skew)
             st, jnl, rep = recover_from_failure(
                 cfg, lay, st, engine, jnl, checkpoint_dir, failure,
                 use_gc=use_gc, move_versions=move_versions)
             recovery.append(rep)
+        if growth is not None and r == growth.grow_round:
+            st, jnl, engine, gc_log, grep = scale_out(
+                cfg, lay, st, oracle, engine, jnl, checkpoint_dir, growth,
+                use_gc=use_gc, move_versions=move_versions, gc_log=gc_log)
+            placement = engine.placement
+            growth_reports.append(grep)
+            # the retry queues ride across the cut untouched in content, but
+            # their arrays are committed to the old mesh — re-land them
+            pending_type = jnp.asarray(jax.device_get(pending_type))
+            if pending is not None:
+                pending = jax.tree.map(
+                    lambda x: jnp.asarray(jax.device_get(x)), pending)
         key, sub = jax.random.split(key)
         fresh = workload.gen_mixed(sub, T, cfg.n_warehouses, cfg.n_items,
                                    cfg.customers_per_district, home_w,
-                                   dist_degree, logits, mix)
+                                   dist_degree, logits, mix, skew=skew)
         # a retried txn keeps its original type AND inputs (MixedInputs
         # carries both, so one merge covers the per-type retry queues)
         inp = _merge_retries(pending, fresh, pending_type >= 0, T)
@@ -1420,7 +1584,8 @@ def run_mixed_rounds(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
         delivered=delivered, snapshot_misses=snapshot_misses,
         contention_aborts=contention_aborts, ovf_reads=ovf_reads,
         gc_sweeps=gc_sweeps, reclaim_traj=tuple(reclaim_traj),
-        ovf_peak=ovf_peak, recovery=tuple(recovery))
+        ovf_peak=ovf_peak, recovery=tuple(recovery),
+        growth=tuple(growth_reports))
     return st, stats
 
 
@@ -1514,7 +1679,7 @@ def _payment_insert(cfg, lay, st: TPCCState, oracle, tbl, vec, committed,
     tbl = _insert_install(tbl, hslot, slot_ids, cts, hdata, can)
     if journal is not None:
         journal = wal.append_intent(
-            journal, tids, vec,
+            journal, tids, vec[:journal.ts_vec.shape[-1]],
             *wal.pad_writes(
                 journal, hslot[:, None],
                 hdr_ops.pack(slot_ids.astype(jnp.uint32), cts)[:, None, :],

@@ -47,6 +47,55 @@ def zipf_logits(n_items: int, alpha: Optional[float]) -> jnp.ndarray:
     return -alpha * jnp.log(ranks)
 
 
+class Skew(NamedTuple):
+    """Zipfian access-skew knobs for real-user-like traffic (the ROADMAP's
+    *Chiller* direction): hot warehouses, a hot district, and a
+    remote-payment-fraction sweep. ``None`` fields mean the uniform TPC-C
+    default. Skewed draws consume exactly the same RNG keys as the uniform
+    ones, so enabling a knob never perturbs the rest of the stream (every
+    bit-identity harness stays valid under any skew setting)."""
+    wh_logits: Optional[jnp.ndarray] = None   # float32 [n_warehouses]
+    d_logits: Optional[jnp.ndarray] = None    # float32 [10]
+    remote_frac: float = 0.15                 # payment remote-customer prob
+
+
+def make_skew(n_warehouses: int, *, wh_alpha: Optional[float] = None,
+              hot_district_mass: Optional[float] = None,
+              remote_frac: float = 0.15) -> Skew:
+    """Build a :class:`Skew`: zipf(α) warehouse popularity, district 0 made
+    hot with ``hot_district_mass`` of all district draws, and the payment
+    remote-customer fraction (spec default 15 %)."""
+    wh_logits = None if wh_alpha is None \
+        else zipf_logits(n_warehouses, wh_alpha)
+    d_logits = None
+    if hot_district_mass is not None:
+        rest = (1.0 - hot_district_mass) / 9.0
+        p = jnp.full((10,), rest, jnp.float32).at[0].set(hot_district_mass)
+        d_logits = jnp.log(jnp.maximum(p, 1e-30))
+    return Skew(wh_logits=wh_logits, d_logits=d_logits,
+                remote_frac=remote_frac)
+
+
+def _draw_w(key, n_txns: int, n_warehouses: int,
+            home_w: Optional[jnp.ndarray], skew: Optional[Skew]):
+    """Warehouse draw: pinned home > zipfian popularity > uniform — always
+    consuming ``key`` identically."""
+    if home_w is not None:
+        return jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
+    if skew is not None and skew.wh_logits is not None:
+        return jax.random.categorical(key, skew.wh_logits,
+                                      shape=(n_txns,)).astype(jnp.int32)
+    return jax.random.randint(key, (n_txns,), 0, n_warehouses)
+
+
+def _draw_d(key, n_txns: int, skew: Optional[Skew]):
+    """District draw: hot-district skew or the uniform spec default."""
+    if skew is not None and skew.d_logits is not None:
+        return jax.random.categorical(key, skew.d_logits,
+                                      shape=(n_txns,)).astype(jnp.int32)
+    return jax.random.randint(key, (n_txns,), 0, 10)
+
+
 class NewOrderInputs(NamedTuple):
     w_id: jnp.ndarray        # int32 [T] home warehouse
     d_id: jnp.ndarray        # int32 [T] district 0..9
@@ -61,7 +110,8 @@ class NewOrderInputs(NamedTuple):
 def gen_neworder(key, n_txns: int, n_warehouses: int, n_items: int,
                  customers_per_district: int, home_w: Optional[jnp.ndarray],
                  dist_degree: float, item_logits: jnp.ndarray,
-                 max_ol: int = 15) -> NewOrderInputs:
+                 max_ol: int = 15,
+                 skew: Optional[Skew] = None) -> NewOrderInputs:
     """Sample a batch of new-order transactions.
 
     ``home_w``: fixed home warehouse per thread (locality routing) or None
@@ -70,11 +120,8 @@ def gen_neworder(key, n_txns: int, n_warehouses: int, n_items: int,
     warehouse uniformly from the remote ones (paper §7.3's knob).
     """
     ks = jax.random.split(key, 8)
-    if home_w is None:
-        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
-    else:
-        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
-    d_id = jax.random.randint(ks[1], (n_txns,), 0, 10)
+    w_id = _draw_w(ks[0], n_txns, n_warehouses, home_w, skew)
+    d_id = _draw_d(ks[1], n_txns, skew)
     c_id = jax.random.randint(ks[2], (n_txns,), 0, customers_per_district)
     ol_cnt = jax.random.randint(ks[3], (n_txns,), 5, max_ol + 1)
     # distinct items per order (TPC-C order lines), sampled without
@@ -110,15 +157,14 @@ class PaymentInputs(NamedTuple):
 
 def gen_payment(key, n_txns: int, n_warehouses: int,
                 customers_per_district: int,
-                home_w: Optional[jnp.ndarray] = None) -> PaymentInputs:
+                home_w: Optional[jnp.ndarray] = None,
+                skew: Optional[Skew] = None) -> PaymentInputs:
     ks = jax.random.split(key, 5)
-    if home_w is None:
-        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
-    else:
-        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
-    d_id = jax.random.randint(ks[1], (n_txns,), 0, 10)
+    w_id = _draw_w(ks[0], n_txns, n_warehouses, home_w, skew)
+    d_id = _draw_d(ks[1], n_txns, skew)
     c_id = jax.random.randint(ks[2], (n_txns,), 0, customers_per_district)
-    remote = (jax.random.uniform(ks[3], (n_txns,)) < 0.15) \
+    rf = 0.15 if skew is None else skew.remote_frac
+    remote = (jax.random.uniform(ks[3], (n_txns,)) < rf) \
         & (n_warehouses > 1)
     rw = jax.random.randint(ks[3], (n_txns,), 0,
                             jnp.maximum(n_warehouses - 1, 1))
@@ -137,15 +183,13 @@ class OrderStatusInputs(NamedTuple):
 
 def gen_orderstatus(key, n_txns: int, n_warehouses: int,
                     customers_per_district: int,
-                    home_w: Optional[jnp.ndarray] = None) -> OrderStatusInputs:
+                    home_w: Optional[jnp.ndarray] = None,
+                    skew: Optional[Skew] = None) -> OrderStatusInputs:
     ks = jax.random.split(key, 3)
-    if home_w is None:
-        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
-    else:
-        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
+    w_id = _draw_w(ks[0], n_txns, n_warehouses, home_w, skew)
     return OrderStatusInputs(
         w_id=w_id.astype(jnp.int32),
-        d_id=jax.random.randint(ks[1], (n_txns,), 0, 10),
+        d_id=_draw_d(ks[1], n_txns, skew),
         c_id=jax.random.randint(ks[2], (n_txns,), 0, customers_per_district))
 
 
@@ -156,15 +200,13 @@ class DeliveryInputs(NamedTuple):
 
 
 def gen_delivery(key, n_txns: int, n_warehouses: int,
-                 home_w: Optional[jnp.ndarray] = None) -> DeliveryInputs:
+                 home_w: Optional[jnp.ndarray] = None,
+                 skew: Optional[Skew] = None) -> DeliveryInputs:
     ks = jax.random.split(key, 3)
-    if home_w is None:
-        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
-    else:
-        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
+    w_id = _draw_w(ks[0], n_txns, n_warehouses, home_w, skew)
     return DeliveryInputs(
         w_id=w_id.astype(jnp.int32),
-        d_id=jax.random.randint(ks[1], (n_txns,), 0, 10),
+        d_id=_draw_d(ks[1], n_txns, skew),
         carrier=jax.random.randint(ks[2], (n_txns,), 1, 11))
 
 
@@ -175,15 +217,13 @@ class StockLevelInputs(NamedTuple):
 
 
 def gen_stocklevel(key, n_txns: int, n_warehouses: int,
-                   home_w: Optional[jnp.ndarray] = None) -> StockLevelInputs:
+                   home_w: Optional[jnp.ndarray] = None,
+                   skew: Optional[Skew] = None) -> StockLevelInputs:
     ks = jax.random.split(key, 3)
-    if home_w is None:
-        w_id = jax.random.randint(ks[0], (n_txns,), 0, n_warehouses)
-    else:
-        w_id = jnp.broadcast_to(home_w, (n_txns,)).astype(jnp.int32)
+    w_id = _draw_w(ks[0], n_txns, n_warehouses, home_w, skew)
     return StockLevelInputs(
         w_id=w_id.astype(jnp.int32),
-        d_id=jax.random.randint(ks[1], (n_txns,), 0, 10),
+        d_id=_draw_d(ks[1], n_txns, skew),
         threshold=jax.random.randint(ks[2], (n_txns,), 10, 21))
 
 
@@ -202,17 +242,19 @@ class MixedInputs(NamedTuple):
 def gen_mixed(key, n_txns: int, n_warehouses: int, n_items: int,
               customers_per_district: int, home_w: Optional[jnp.ndarray],
               dist_degree: float, item_logits: jnp.ndarray,
-              mix=None) -> MixedInputs:
+              mix=None, skew: Optional[Skew] = None) -> MixedInputs:
     """Sample one round of the full TPC-C mix (45/43/4/4/4 by default)."""
     kt, kn, kp, ko, kd, ks_ = jax.random.split(key, 6)
     return MixedInputs(
         txn_type=sample_mix(kt, n_txns, mix),
         neworder=gen_neworder(kn, n_txns, n_warehouses, n_items,
                               customers_per_district, home_w, dist_degree,
-                              item_logits),
+                              item_logits, skew=skew),
         payment=gen_payment(kp, n_txns, n_warehouses, customers_per_district,
-                            home_w),
+                            home_w, skew=skew),
         orderstatus=gen_orderstatus(ko, n_txns, n_warehouses,
-                                    customers_per_district, home_w),
-        delivery=gen_delivery(kd, n_txns, n_warehouses, home_w),
-        stocklevel=gen_stocklevel(ks_, n_txns, n_warehouses, home_w))
+                                    customers_per_district, home_w,
+                                    skew=skew),
+        delivery=gen_delivery(kd, n_txns, n_warehouses, home_w, skew=skew),
+        stocklevel=gen_stocklevel(ks_, n_txns, n_warehouses, home_w,
+                                  skew=skew))

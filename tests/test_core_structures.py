@@ -1,4 +1,5 @@
 """Tests: hash table, range index, catalog, extends, locality, cost model."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -250,3 +251,87 @@ def test_netmodel_locality_bonus_moderate():
 def test_hstore_anchors():
     assert abs(netmodel.hstore_like_throughput(0.0) - 11000) < 1
     assert abs(netmodel.hstore_like_throughput(1.0) - 900) < 1
+
+
+# --------------------------------- non-dividing shard counts (scale-out) ----
+def test_pad_vector_non_dividing():
+    """A 3→5-style expansion leaves the timestamp vector length
+    non-divisible by the shard count; ``pad_vector`` must square it off with
+    zero slots (and be the identity when it already divides)."""
+    vec = jnp.arange(1, 13, dtype=jnp.uint32)            # 12 slots
+    padded, n = store_mod.pad_vector(vec, 8)
+    assert n == 16 and padded.shape == (16,)
+    np.testing.assert_array_equal(np.asarray(padded[:12]), np.asarray(vec))
+    np.testing.assert_array_equal(np.asarray(padded[12:]),
+                                  np.zeros(4, np.uint32))
+    same, n = store_mod.pad_vector(vec, 4)
+    assert n == 12 and same is vec
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a >=2 device mesh")
+def test_shard_vector_non_dividing_round_matches_reference():
+    """Regression: ``distributed_round(shard_vector=True)`` used to REQUIRE
+    ``n_slots % n_shards == 0``, so a mesh grown to a non-dividing size
+    (e.g. 3→5 memory servers) could not host the partitioned T_R at all.
+    With zero-padding the partitioned vector must stay bit-identical to the
+    single-shard reference on the real slots."""
+    from repro.core import mvcc, si
+    mesh = jax.make_mesh((2,), ("mem",))
+    n_records, width, n_threads = 16, 4, 3      # 3 slots over 2 shards
+    oracle = VectorOracle(n_threads)
+
+    def compute_fn(rh, rd, vec, aux):
+        return rd[:, :1, :].at[..., 0].add(1)
+
+    round_fn, _ = store_mod.distributed_round(
+        mesh, "mem", oracle, compute_fn, n_records // 2, shard_vector=True)
+    tbl_d = store_mod.shard_table(mesh, "mem",
+                                  mvcc.init_table(n_records, width, 2, 2))
+    tbl_s = mvcc.init_table(n_records, width, 2, 2)
+    st = oracle.init()
+    vec_d = store_mod.shard_vector(mesh, "mem", st.vec)
+    assert vec_d.shape == (4,)       # padded to the 2-shard multiple
+    key = jax.random.PRNGKey(3)
+    for rnd in range(4):
+        key, sub = jax.random.split(key)
+        slots = jax.random.randint(sub, (n_threads, 2), 0, n_records,
+                                   dtype=jnp.int32)
+        batch = si.TxnBatch(
+            tid=jnp.arange(n_threads, dtype=jnp.int32),
+            read_slots=slots,
+            read_mask=jnp.ones((n_threads, 2), bool),
+            write_ref=jnp.zeros((n_threads, 1), jnp.int32),
+            write_mask=jnp.ones((n_threads, 1), bool))
+        tbl_d, vec_d, dout = round_fn(tbl_d, vec_d, batch, None)
+        out = si.run_round(tbl_s, oracle, st, batch,
+                           lambda rh, rd, vec: compute_fn(rh, rd, vec, None))
+        tbl_s, st = out.table, out.oracle_state
+        np.testing.assert_array_equal(np.asarray(dout.committed),
+                                      np.asarray(out.committed),
+                                      err_msg=str(rnd))
+    got = np.asarray(jax.device_get(vec_d))
+    np.testing.assert_array_equal(got[:3], np.asarray(st.vec))
+    np.testing.assert_array_equal(got[3:], np.zeros(1, np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(tbl_d.cur_data)), np.asarray(tbl_s.cur_data))
+
+
+def test_moved_slots_expansion_mask():
+    """Scale-out migration set: exactly the slots whose owning memory server
+    changes between the old and new range partitions."""
+    old = locality.Placement(n_servers=2, shard_records=8)   # 16 slots
+    new = locality.Placement(n_servers=4, shard_records=4)
+    moved = np.asarray(locality.moved_slots(old, new, 16))
+    s = np.arange(16)
+    np.testing.assert_array_equal(moved, (s // 8) != (s // 4))
+    assert moved.sum() == 12 and not moved[:4].any()
+
+
+def test_moved_buckets_expansion_mask():
+    """§5.2 directory repartition: buckets whose owner changes when the mesh
+    grows (non-dividing new count exercises the ceil-partition)."""
+    mb = np.asarray(ht.moved_buckets(64, 2, 3))
+    b = np.arange(64)
+    old_per, new_per = 32, -(-64 // 3)
+    np.testing.assert_array_equal(mb, (b // old_per) != (b // new_per))
+    assert not np.asarray(ht.moved_buckets(64, 4, 4)).any()

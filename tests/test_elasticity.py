@@ -1,0 +1,37 @@
+"""Online scale-out equivalence (DESIGN.md §4.3).
+
+Growing a live mesh mid-mix must be a pure placement change: the run that
+expands 4→8 memory servers while the five-transaction TPC-C mix keeps
+committing must be bit-identical — state, timestamp vector, per-type
+commit counts, GC telemetry — to a run launched at 8 servers from the
+same history, in both pool layouts.  The check needs an 8-device mesh, so
+it runs in a subprocess that forces the host platform device count (the
+same harness shape as tests/test_distributed_equiv.py).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run_subprocess_check(script_name, marker):
+    script = os.path.join(os.path.dirname(__file__), script_name)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert marker in out.stdout
+
+
+@pytest.mark.slow
+def test_mid_mix_expansion_is_bit_identical():
+    """§4.3: double a live 4-shard mesh at round 3 of a 6-round mix —
+    checkpoint epoch, directory/vector repartition, record + journal
+    migration, replay window, cutover — and finish the run; final state
+    and every telemetry counter must equal a fresh 8-shard run's, in both
+    pool layouts (and across a non-dividing vector partition boundary)."""
+    _run_subprocess_check("_elasticity_equiv_check.py", "ELASTICITY_EQUIV_OK")

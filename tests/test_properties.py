@@ -28,6 +28,14 @@ Recovery (paper §6.2):
       TPC-C mix (optionally with undetermined in-flight intents holding
       locks), then restoring the last checkpoint and replaying the
       journal, yields a run bit-identical to one that never crashed.
+
+Elasticity (DESIGN.md §4.3):
+  P9  scale-out transparency — growing the mesh at ANY round of a
+      journalled mixed run, with whatever in-flight/retry-queue state that
+      round carries, never changes any already-committed version or any
+      visible read at an admissible snapshot: the expanded run is
+      bit-identical to one born at the larger shard count (needs ≥4
+      devices; CI's mesh step forces 8).
 """
 import tempfile
 
@@ -330,6 +338,78 @@ def test_kill_recover_is_bit_identical(seed, kill_round, in_flight):
     assert ms_ref.retries == ms_rec.retries
     assert ms_ref.delivered == ms_rec.delivered
     assert ms_ref.ops == ms_rec.ops
+
+
+# ---------------------------------------------------------------- P9 ------
+_P9_ROUNDS = 4
+
+
+def _mesh_mix(seed, n_shards, growth):
+    """One journalled mesh TPC-C mix, optionally grown mid-run.  6 threads:
+    the partitioned vector divides over 2 shards but not over 4, so any
+    expansion crosses a non-dividing (pad_vector) boundary."""
+    from repro.core import store as store_mod
+    from repro.core.tsoracle import PartitionedVectorOracle
+    from repro.db import tpcc
+    cfg = tpcc.TPCCConfig(n_warehouses=4, customers_per_district=8,
+                          n_items=64, n_threads=6, orders_per_thread=16,
+                          dist_degree=30.0)
+    mesh = jax.make_mesh((n_shards,), ("mem",))
+    oracle = PartitionedVectorOracle(cfg.n_threads, n_parts=n_shards)
+    lay, st0 = tpcc.init_tpcc(cfg, oracle, jax.random.PRNGKey(1))
+    engine = tpcc.make_mixed_engine(cfg, lay, mesh, "mem", oracle,
+                                    shard_vector=True, with_journal=True)
+    st0 = tpcc.distribute_state(engine, st0)
+    jnl = tpcc.make_journal(cfg, oracle, capacity_rounds=_P9_ROUNDS + 2,
+                            n_replicas=n_shards)
+    jnl = store_mod.shard_journal(mesh, "mem", jnl)
+    with tempfile.TemporaryDirectory() as d:
+        st, ms = tpcc.run_mixed_rounds(
+            cfg, lay, st0, oracle, jax.random.PRNGKey(seed), _P9_ROUNDS,
+            engine=engine, journal=jnl, checkpoint_dir=d, growth=growth,
+            gc_interval=2, max_txn_time=1)
+    return lay, oracle, st, ms
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="P9 needs a ≥4-device mesh (CI mesh step)")
+@given(seed=st.integers(0, 2**31 - 1),
+       grow_round=st.integers(0, _P9_ROUNDS - 1))
+@settings(max_examples=3, deadline=None)
+def test_expansion_preserves_committed_state(seed, grow_round):
+    from repro.db import tpcc
+    lay, oracle, st_ref, ms_ref = _mesh_mix(seed, 4, None)
+    _, _, st_exp, ms_exp = _mesh_mix(
+        seed, 2, tpcc.MeshGrowth(grow_round=grow_round, new_shards=4))
+    (rep,) = ms_exp.growth
+    assert rep.grow_round == grow_round
+    assert rep.checkpoint_round < grow_round
+    R = lay.catalog.total_records
+    n_slots = oracle.n_slots
+    tbl_ref = jax.tree.map(lambda x: jnp.asarray(jax.device_get(x))[:R],
+                           st_ref.nam.table)
+    tbl_exp = jax.tree.map(lambda x: jnp.asarray(jax.device_get(x))[:R],
+                           st_exp.nam.table)
+    for leaf_a, leaf_b in zip(jax.tree.leaves(tbl_ref),
+                              jax.tree.leaves(tbl_exp)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+    vec_ref = jnp.asarray(jax.device_get(
+        st_ref.nam.oracle_state.vec))[:n_slots]
+    vec_exp = jnp.asarray(jax.device_get(
+        st_exp.nam.oracle_state.vec))[:n_slots]
+    np.testing.assert_array_equal(np.asarray(vec_ref), np.asarray(vec_exp))
+    assert ms_ref.attempts == ms_exp.attempts
+    assert ms_ref.commits == ms_exp.commits
+    assert ms_ref.retries == ms_exp.retries
+    assert ms_ref.delivered == ms_exp.delivered
+    assert ms_ref.ops == ms_exp.ops
+    # the visible read of EVERY record at the final (admissible) snapshot
+    # is unchanged by the expansion — not just raw storage equality
+    slots = jnp.arange(R, dtype=jnp.int32)
+    va = mvcc.read_visible(tbl_ref, slots, vec_ref)
+    vb = mvcc.read_visible(tbl_exp, slots, vec_exp)
+    for leaf_a, leaf_b in zip(jax.tree.leaves(va), jax.tree.leaves(vb)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
 
 
 # ------------------------------------------------------- MoE invariants ---
