@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Repo-root wrapper for the protocol static analyzer.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis`` but runnable from
+anywhere without environment setup — it puts ``src/`` on ``sys.path``
+itself and forwards all arguments (``--strict``, ``--out``, paths, ...) to
+:mod:`repro.analysis.__main__`. See DESIGN.md §7 for the rule catalog.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Protocol static analysis (DESIGN.md §7).
+
+Two levels over the same rule catalog:
+
+* :mod:`repro.analysis.jaxpr_audit` (A1–A4) — traces the real
+  commit/replay/GC entrypoints and checks structural invariants on the
+  jaxprs: lock pairing via protocol tags, overflow-unsafe timestamp
+  reductions, sentinel-blind argmin/argmax, journal-width consistency.
+* :mod:`repro.analysis.lint` (W01–W05) — stdlib AST lint over the source
+  tree; W01–W04 mirror A1–A4, W05 catches raw ring-position iteration
+  over a :class:`repro.core.wal.Journal`.
+
+Run both with ``python -m repro.analysis [--strict]``; suppress a proven-
+safe site with ``# analysis: safe(Wxx): reason`` (see
+:mod:`repro.analysis.rules`). The known-bad corpus in
+``tests/analysis_corpus/`` differentially tests the analyzer itself.
+"""
+from repro.analysis.rules import (  # noqa: F401
+    RULES, Finding, canonical, scan_suppressions, suppression_for)

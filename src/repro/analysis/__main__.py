@@ -1,0 +1,113 @@
+"""``python -m repro.analysis`` — run both analysis levels, emit a report.
+
+Exit status (with ``--strict``): non-zero iff any *unsuppressed* finding
+exists or an audited entrypoint failed to trace. The JSON report
+(``ANALYSIS_report.json`` by default) is machine-readable and uploaded as a
+CI artifact; the human summary goes to stdout.
+
+The jaxpr audit wants a multi-device host (``store.distributed_round``
+traces a real 2-shard mesh); as a process entrypoint this module can still
+set ``XLA_FLAGS`` itself — *before* jax is imported — so the bare command
+works without environment setup. When jax is already imported (e.g. under
+pytest), the audit degrades gracefully to a 1-shard mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def _ensure_devices(n: int) -> None:
+    if n <= 1 or "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Protocol static analysis: AST lint (W01-W05) + jaxpr "
+                    "audit of the commit/replay/GC entrypoints (A1-A4).")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (default: the repo's "
+                         "standard scope)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on any active finding or trace "
+                         "error")
+    ap.add_argument("--out", default="ANALYSIS_report.json",
+                    help="JSON report path ('' disables)")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST level")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr level (no jax import)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host device count for the mesh trace "
+                         "(ignored once jax is imported)")
+    args = ap.parse_args(argv)
+
+    root = Path(__file__).resolve().parents[3]
+    findings = []
+    entry_reports = []
+
+    if not args.no_lint:
+        from repro.analysis import lint
+        paths = args.paths or [root / p for p in lint.DEFAULT_SCOPE]
+        findings += lint.lint_paths(paths)
+
+    if not args.no_jaxpr:
+        _ensure_devices(args.devices)
+        from repro.analysis import jaxpr_audit
+        jfindings, entry_reports = jaxpr_audit.audit_tree()
+        findings += jfindings
+
+    def rel(p: str) -> str:
+        try:
+            return str(Path(p).resolve().relative_to(root))
+        except ValueError:
+            return p
+
+    for f in findings:
+        f.file = rel(f.file)
+
+    active = [f for f in findings if not f.suppressed]
+    trace_errors = [r for r in entry_reports if r.status != "ok"]
+    ok = not active and not trace_errors
+
+    from repro.analysis.rules import RULES
+    report = {
+        "kind": "analysis_report",
+        "ok": ok,
+        "strict": args.strict,
+        "rules": {w: {"jaxpr_id": r.aid, "title": r.title}
+                  for w, r in RULES.items()},
+        "entrypoints": [r.to_json() for r in entry_reports],
+        "findings": [f.to_json() for f in findings],
+        "counts": {"total": len(findings), "active": len(active),
+                   "suppressed": len(findings) - len(active)},
+    }
+    if args.out:
+        Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+
+    for r in entry_reports:
+        mark = "ok " if r.status == "ok" else "ERR"
+        extra = f" ({r.detail})" if r.detail else ""
+        print(f"[{mark}] {r.name}: {r.n_eqns} eqns, "
+              f"{r.n_findings} active findings{extra}")
+    for f in findings:
+        print(f.render())
+    print(f"analysis: {len(active)} active / "
+          f"{len(findings) - len(active)} suppressed findings, "
+          f"{len(trace_errors)} trace errors")
+    if args.strict and not ok:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

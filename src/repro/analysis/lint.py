@@ -1,0 +1,256 @@
+"""Level 2: AST lint over the source tree (rule ids W01–W05).
+
+Complements the jaxpr audit: the AST sees code *paths that never trace in
+the audit fixtures* (every function in scope, not just the four audited
+entrypoints) at the cost of working from spellings instead of dataflow.
+The two levels deliberately overlap — W01–W04 mirror A1–A4 — so a bug
+class is caught both before tracing (here) and through tracing
+(``jaxpr_audit``). Pure stdlib: no jax import, runs in milliseconds.
+
+Heuristics are intentionally conservative-but-suppressible: a flagged site
+that is proven safe carries an ``# analysis: safe(Wxx): reason`` comment
+(see ``rules``), which also silences the mirrored jaxpr finding at the
+same line.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional
+
+from repro.analysis.rules import Finding, apply_suppressions
+
+# Directories linted by default (relative to the repo root). serve/, models/
+# and train/ are out of scope: argmax-over-logits etc. are that code's
+# bread and butter, not protocol selections.
+DEFAULT_SCOPE = (
+    "src/repro/core",
+    "src/repro/db",
+    "src/repro/kernels",
+    "src/repro/analysis",
+)
+
+# identifier tokens that mark an operand as timestamp-carrying for W02
+_TS_TOKENS = {"ts", "cts", "rts", "tr", "vec", "vecs", "times", "stamp",
+              "stamps", "timestamp", "timestamps", "tsvec"}
+_WIDE_DTYPES = re.compile(r"(u?int64|float64|uint64)$")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _callee_attr(call: ast.Call) -> Optional[str]:
+    """Last component of the callee (``sum`` for both jnp.sum and x.sum)."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _identifiers(node: ast.AST) -> Iterable[str]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+        elif isinstance(n, ast.Attribute):
+            yield n.attr
+
+
+def _is_ts_like(node: ast.AST) -> bool:
+    for ident in _identifiers(node):
+        low = ident.lower()
+        if "timestamp" in low:
+            return True
+        if any(tok in _TS_TOKENS for tok in low.split("_")):
+            return True
+    return False
+
+
+def _is_wide_dtype(node: ast.AST) -> bool:
+    d = _dotted(node)
+    if d is not None and _WIDE_DTYPES.search(d):
+        return True
+    return (isinstance(node, ast.Constant) and isinstance(node.value, str)
+            and _WIDE_DTYPES.search(node.value) is not None)
+
+
+def _const_int(node: ast.AST) -> Optional[int]:
+    """Integer value of a literal, seeing through jnp.uint32(...)-style
+    wrappers."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Call) and node.args:
+        name = _callee_attr(node)
+        if name in {"uint32", "int32", "uint64", "int64", "uint16", "asarray",
+                    "array"}:
+            return _const_int(node.args[0])
+    return None
+
+
+def _w02_operand_safe(node: ast.AST) -> bool:
+    """True when the summand is provably exact: widened, digit-split, or
+    boolean-derived. An IfExp is safe only if *every* branch is — the
+    pre-fix snapshot_summary's ``x.astype(u64) if already-u64 else x``
+    passed a naive has-astype check while the live branch was the raw
+    vector."""
+    if isinstance(node, ast.IfExp):
+        return (_w02_operand_safe(node.body)
+                and _w02_operand_safe(node.orelse))
+    if isinstance(node, ast.Compare):
+        return True                     # boolean summand: counts, not sums
+    if isinstance(node, ast.Call):
+        name = _callee_attr(node)
+        if name == "astype" and node.args:
+            return _is_wide_dtype(node.args[0])
+        if name in {"uint64", "int64", "float64"}:
+            return True
+    if isinstance(node, ast.BinOp):
+        if isinstance(node.op, ast.BitAnd):
+            for side in (node.left, node.right):
+                v = _const_int(side)
+                if v is not None and v <= 0xFFFF:
+                    return True         # low-digit extraction
+        if isinstance(node.op, ast.RShift):
+            v = _const_int(node.right)
+            if v is not None and v >= 16:
+                return True             # high-digit extraction
+    return False
+
+
+def _w03_operand_safe(node: ast.AST) -> bool:
+    """Comparisons and not-masks are boolean; a where() call is masked."""
+    if isinstance(node, (ast.Compare,)):
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+        return True
+    if isinstance(node, ast.Call) and _callee_attr(node) == "where":
+        return True
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def _add(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, level="ast", file=self.path,
+            line=getattr(node, "lineno", 0), msg=msg))
+
+    # ---- W01: a function that arbitrates must release ---------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        acquires = [
+            n for n in ast.walk(node)
+            if isinstance(n, ast.Call) and _callee_attr(n) == "arbitrate"]
+        if acquires:
+            releases = any(
+                isinstance(n, ast.Call)
+                and _callee_attr(n) in {"release", "release_abandoned_locks"}
+                for n in ast.walk(node))
+            if not releases:
+                for acq in acquires:
+                    self._add(
+                        "W01", acq,
+                        f"`{node.name}` CAS-acquires (cas.arbitrate) but "
+                        "never calls a release — locks leak on the abort "
+                        "path")
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    # ---- W02/W03/W04: call-site rules -------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _callee_attr(node)
+        if name in {"sum", "cumsum"}:
+            # function form: summand is args[0]; method form: the receiver
+            summand = node.args[0] if node.args else (
+                node.func.value if isinstance(node.func, ast.Attribute)
+                else None)
+            wide_kw = any(kw.arg == "dtype" and _is_wide_dtype(kw.value)
+                          for kw in node.keywords)
+            if (summand is not None and _is_ts_like(summand)
+                    and not wide_kw and not _w02_operand_safe(summand)):
+                self._add(
+                    "W02", node,
+                    f"`{name}` over a timestamp-carrying operand without "
+                    "widening to uint64 or an exact (hi, lo) base-2^16 "
+                    "digit split — wraps past 2^32")
+        elif name in {"argmin", "argmax"}:
+            operand = node.args[0] if node.args else (
+                node.func.value if isinstance(node.func, ast.Attribute)
+                else None)
+            if operand is not None and not _w03_operand_safe(operand):
+                self._add(
+                    "W03", node,
+                    f"`{name}` over a possibly sentinel-carrying array — "
+                    "mask with where()/a boolean first, or annotate the "
+                    "operand as sentinel-free")
+        elif name == "append_intent":
+            padded = any(isinstance(a, ast.Starred)
+                         and isinstance(a.value, ast.Call)
+                         and _callee_attr(a.value) == "pad_writes"
+                         for a in node.args)
+            if not padded:
+                self._add(
+                    "W04", node,
+                    "append_intent call site does not run its write-set "
+                    "through *wal.pad_writes(...) — widths can silently "
+                    "mismatch the journal's declared shape")
+        self.generic_visit(node)
+
+    # ---- W05: raw ring positions vs Journal.used --------------------------
+    def visit_Compare(self, node: ast.Compare) -> None:
+        sides = [node.left] + list(node.comparators)
+
+        def has_arange(n: ast.AST) -> bool:
+            return any(isinstance(x, ast.Call)
+                       and _callee_attr(x) == "arange"
+                       for x in ast.walk(n))
+
+        def has_used(n: ast.AST) -> bool:
+            return any(isinstance(x, ast.Attribute) and x.attr == "used"
+                       for x in ast.walk(n))
+
+        if (any(has_arange(s) for s in sides)
+                and any(has_used(s) for s in sides)):
+            self._add(
+                "W05", node,
+                "raw ring positions (arange) compared against Journal.used "
+                "— only correct before the ring's first wrap; use "
+                "wal._live_window")
+        self.generic_visit(node)
+
+
+def lint_file(path) -> List[Finding]:
+    path = Path(path)
+    text = path.read_text()
+    tree = ast.parse(text, filename=str(path))
+    v = _Visitor(str(path))
+    v.visit(tree)
+    apply_suppressions(v.findings, lambda _f: text)
+    return v.findings
+
+
+def lint_paths(paths) -> List[Finding]:
+    """Lint files and/or directories (recursively); returns all findings,
+    suppressed ones included (filter on ``.suppressed``)."""
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    out: List[Finding] = []
+    for f in files:
+        out.extend(lint_file(f))
+    return out

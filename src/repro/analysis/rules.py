@@ -1,0 +1,162 @@
+"""Rule catalog, findings, and suppression syntax for ``repro.analysis``.
+
+The analyzer runs at two levels (DESIGN.md §7): a jaxpr audit over the
+traced commit/replay/GC entrypoints (rule ids A1–A4) and an AST lint over
+the source tree (rule ids W01–W05). W01–W04 mirror A1–A4 — the A-form sees
+through tracing (actual dataflow, actual dtypes), the W-form catches the
+same bug class at the call-site spelling before it is ever traced; W05 is
+AST-only. Every rule encodes a bug class this repo actually shipped and
+fixed (PR 4/6/7); the minimized reproductions live in
+``tests/analysis_corpus/`` and the suite asserts each rule fires on its
+corpus entry and stays silent on the current tree.
+
+Suppression syntax
+------------------
+A finding is suppressed by a comment on the flagged line or the line
+directly above it::
+
+    # analysis: safe(W03): boolean mask operand — no sentinels
+    first = jnp.argmax(ok, axis=1)
+
+The rule list takes W- or A-form ids (comma-separated for several rules);
+the reason is **mandatory** — ``safe(W03)`` without one does not suppress.
+Both levels honor the same comments: the jaxpr audit maps each equation
+back to its source line, so one annotation silences both the lint and the
+trace-level finding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    wid: str                 # AST-level id (W01..)
+    aid: Optional[str]       # jaxpr-level mirror (A1..), None = AST-only
+    title: str
+    description: str
+
+
+RULES: Dict[str, Rule] = {
+    "W01": Rule(
+        "W01", "A1", "unpaired CAS lock acquisition",
+        "Every CAS-acquire site's grant mask must provably flow into the "
+        "abort-path release mask AND the commit decision (whose install + "
+        "visibility write consumes the lock). A grant that reaches neither "
+        "is a lock leaked on some outcome path — the PR 6 first-entry-only "
+        "release bug class. AST form: a function body that calls "
+        "cas.arbitrate must also call a release."),
+    "W02": Rule(
+        "W02", "A2", "overflow-unsafe timestamp reduction",
+        "No integer reduce_sum/cumsum over uint32 timestamp operands "
+        "without widening to a real uint64 or the exact (hi, lo) base-2^16 "
+        "digit split from wal._order_keys; reduce_min/reduce_max over "
+        "uint32 must be select/where-masked. A wrapped sum silently "
+        "inverts the replay dominance order — the PR 6 order-key bug."),
+    "W03": Rule(
+        "W03", "A3", "sentinel-blind argmin/argmax",
+        "No argmin/argmax over an array that can carry -1/0xFFFFFFFF "
+        "sentinel encodings unless the operand is boolean or masked by a "
+        "select/where first. A sentinel that sorts below every live value "
+        "hijacks the selection — the PR 4 argmin(times) snapshot-slot bug."),
+    "W04": Rule(
+        "W04", "A4", "journal-width mismatch at append site",
+        "Every append_intent call site must feed vectors of the journal's "
+        "declared width: the write-set through wal.pad_writes, the "
+        "timestamp vector sliced to the journal's n_slots. A padded vector "
+        "logged raw replays the wrong snapshot — the PR 7 padded-vec bug. "
+        "The A-form is enforced at trace time by append_intent's width "
+        "guard; the W-form requires the *pad_writes(...) spelling."),
+    "W05": Rule(
+        "W05", None, "raw ring-position iteration over a Journal",
+        "Replay-side code must not compare raw ring positions "
+        "(arange(capacity)) against Journal.used: position < used is only "
+        "correct before the first wrap. Use wal._live_window, which maps "
+        "each position to its latest append index — the PR 6 "
+        "wraparound-blind replay-window bug."),
+}
+
+_ALIASES: Dict[str, str] = {r.aid: w for w, r in RULES.items() if r.aid}
+
+
+def canonical(rule_id: str) -> str:
+    """Normalize a W- or A-form rule id to its W-form catalog key."""
+    rid = rule_id.strip().upper()
+    return _ALIASES.get(rid, rid)
+
+
+def mirror(rule_id: str) -> Optional[str]:
+    """The jaxpr-level id of a W-form rule (None for AST-only rules)."""
+    return RULES[canonical(rule_id)].aid
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str          # canonical W-form id
+    level: str         # "jaxpr" | "ast"
+    file: str
+    line: int
+    msg: str
+    suppressed: bool = False
+    reason: str = ""   # the suppression's stated reason, when suppressed
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        tag = f" [suppressed: {self.reason}]" if self.suppressed else ""
+        rid = self.rule
+        rule = RULES.get(self.rule)
+        if self.level == "jaxpr" and rule is not None and rule.aid:
+            rid = f"{rule.aid}/{self.rule}"
+        return (f"{self.file}:{self.line}: {rid}({self.level}) "
+                f"{self.msg}{tag}")
+
+
+# reason is mandatory: the trailing `:\s*\S` refuses a bare safe(W03)
+_SUPPRESS_RE = re.compile(
+    r"#\s*analysis:\s*safe\(\s*([AWaw][0-9]+(?:\s*,\s*[AWaw][0-9]+)*\s*)\)"
+    r"\s*:\s*(\S.*)")
+
+Suppressions = Dict[int, Tuple[Set[str], str]]
+
+
+def scan_suppressions(text: str) -> Suppressions:
+    """Map line number -> (canonical rule ids, reason) for one source file."""
+    out: Suppressions = {}
+    for i, line in enumerate(text.splitlines(), 1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            ids = {canonical(x) for x in m.group(1).split(",")}
+            out[i] = (ids, m.group(2).strip())
+    return out
+
+
+def suppression_for(supp: Suppressions, line: int,
+                    rule: str) -> Optional[str]:
+    """The reason suppressing ``rule`` at ``line`` (same or previous line),
+    or None."""
+    rid = canonical(rule)
+    for ln in (line, line - 1):
+        ent = supp.get(ln)
+        if ent and rid in ent[0]:
+            return ent[1]
+    return None
+
+
+def apply_suppressions(findings, load_text) -> None:
+    """Mark findings suppressed in place. ``load_text(file) -> str | None``
+    supplies source text (None when the file is unreadable)."""
+    cache: Dict[str, Optional[Suppressions]] = {}
+    for f in findings:
+        if f.file not in cache:
+            text = load_text(f.file)
+            cache[f.file] = None if text is None else scan_suppressions(text)
+        supp = cache[f.file]
+        if supp is None or f.line <= 0:
+            continue
+        reason = suppression_for(supp, f.line, f.rule)
+        if reason is not None:
+            f.suppressed, f.reason = True, reason

@@ -1,0 +1,38 @@
+"""Protocol-invariant annotations consumed by ``repro.analysis``.
+
+The commit path marks its protocol-critical intermediate values with
+:func:`tag` so the jaxpr auditor (``repro.analysis.jaxpr_audit``) can find
+them structurally instead of guessing from primitive patterns. A tag is a
+semantic no-op: it lowers to XLA's identity, costs nothing at runtime, and
+survives jit / scan / shard_map tracing — it rides on
+``jax.ad_checkpoint.checkpoint_name``, which stages out as a ``name``
+primitive in the jaxpr with the tag string in its params.
+
+Tag names are namespaced under ``nam.`` so the auditor can ignore unrelated
+checkpoint names (remat policies etc.). The three tags below are the A1
+lock-pairing contract: every CAS-acquire site tags its grant mask, and the
+auditor proves that mask flows into *both* the released mask and the commit
+decision — i.e. every granted lock is either released (abort path) or owned
+by a committed transaction (whose install+visibility consumes it).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+_NAMESPACE = "nam."
+
+# The A1 contract tags. Keep these in sync with DESIGN.md §7 and
+# repro/analysis/jaxpr_audit.py.
+LOCK_GRANTED = "lock.granted"      # CAS arbitration grant mask  [T*WS] bool
+LOCK_RELEASED = "lock.released"    # abort-path release mask     [T*WS] bool
+COMMIT_COMMITTED = "commit.committed"  # per-txn commit decision [T]  bool
+
+
+def tag(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    """Identity-mark ``x`` as the protocol value ``name`` for the auditor.
+
+    Returns ``x`` unchanged (an XLA identity). The mark appears in traced
+    jaxprs as ``name[name='nam.<name>']`` and is invisible to numerics.
+    """
+    return checkpoint_name(x, _NAMESPACE + name)

@@ -38,8 +38,11 @@ def take_snapshot(log: SnapshotLog, now, vec) -> SnapshotLog:
     stated rule; spelled out it also survives clocks that start below zero.)
     """
     unused = log.times < 0
-    pos = jnp.where(jnp.any(unused), jnp.argmax(unused),
-                    jnp.argmin(log.times))
+    # analysis: safe(W03): boolean unused-mask operand — no sentinels
+    first_unused = jnp.argmax(unused)
+    # analysis: safe(W03): where-guarded — picked only when no -1 remains
+    oldest = jnp.argmin(log.times)
+    pos = jnp.where(jnp.any(unused), first_unused, oldest)
     return SnapshotLog(times=log.times.at[pos].set(now),
                        vecs=log.vecs.at[pos].set(vec))
 

@@ -140,6 +140,7 @@ def _ring_scan(region_hdr, next_ptr, slots, ts_vec, *, skip_sentinel: bool):
         is_sentinel = (hdr_ops.commit_ts(h) == 0) \
             & (hdr_ops.thread_id(h) == 0) & hdr_ops.is_moved(h)
         ok = ok & ~is_sentinel
+    # analysis: safe(W03): boolean visibility-mask operand — no sentinels
     return pos, h, ok, jnp.argmax(ok, axis=1), jnp.any(ok, axis=1)
 
 
@@ -304,6 +305,7 @@ def version_mover(tbl: VersionedTable, budget_per_record: int = 1, *,
         pos = jnp.mod(tbl.next_write[:, None] + ages[None, :], K)  # old→new
         h = tbl.old_hdr[r[:, None], pos]
         not_moved = ~hdr_ops.is_moved(h)
+        # analysis: safe(W03): boolean not-moved mask operand — no sentinels
         first = jnp.argmax(not_moved, axis=1)
         has = jnp.any(not_moved, axis=1)
         src = jnp.take_along_axis(pos, first[:, None], axis=1)[:, 0]

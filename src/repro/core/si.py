@@ -29,6 +29,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import annotations as anno
 from repro.core import cas, hashtable as ht, header as hdr_ops, mvcc, wal
 from repro.core.mvcc import VersionedTable
 from repro.core.tsoracle import VectorOracle, VectorState
@@ -294,6 +295,7 @@ def run_round(
         batch.tid.astype(jnp.uint32)[:, None], (T, WS)).reshape(-1)
     res = cas.arbitrate(table.cur_hdr, req_slots, req_expected, req_prio,
                         req_active)
+    granted = anno.tag(res.granted, anno.LOCK_GRANTED)
     table = table._replace(cur_hdr=res.new_hdr)
 
     # install feasibility: the circular victim slot must be reusable (§5.1)
@@ -301,12 +303,13 @@ def run_round(
     wpos = jnp.mod(table.next_write[jnp.where(req_active, req_slots, 0)], K)
     victim = table.old_hdr[jnp.where(req_active, req_slots, 0), wpos]
     can_install = hdr_ops.is_moved(victim)
-    effective = res.granted & can_install
+    effective = granted & can_install
 
     txn_of_req = jnp.broadcast_to(
         jnp.arange(T, dtype=jnp.int32)[:, None], (T, WS)).reshape(-1)
     committed = cas.all_granted_per_txn(effective, txn_of_req, T, req_active)
-    committed = committed & txn_found & active
+    committed = anno.tag(committed & txn_found & active,
+                         anno.COMMIT_COMMITTED)
 
     # ---- 6. append the WAL intent records (§6.2 — *before* install) -------
     if journal is not None:
@@ -317,7 +320,7 @@ def run_round(
             round_no=journal_round, seq=journal_seq)
 
     # ---- 7. install write-sets of committed transactions ------------------
-    inst_mask = res.granted & committed[txn_of_req]   # they hold these locks
+    inst_mask = granted & committed[txn_of_req]       # they hold these locks
     do_install = effective & committed[txn_of_req]
     inst = mvcc.install(
         table, req_slots, new_hdr.reshape(-1, 2),
@@ -325,7 +328,8 @@ def run_round(
     table = inst.table
 
     # ---- 8. release locks held by aborted transactions --------------------
-    release_mask = res.granted & ~committed[txn_of_req]
+    release_mask = anno.tag(granted & ~committed[txn_of_req],
+                            anno.LOCK_RELEASED)
     new_cur_hdr = cas.release(table.cur_hdr, req_slots, release_mask)
     table = table._replace(cur_hdr=new_cur_hdr)
 

@@ -25,6 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
+from repro.core import annotations as anno
 from repro.core import cas, gc as gc_ops, hashtable as ht, header as hdr_ops, \
     mvcc, wal
 from repro.core.catalog import Catalog
@@ -330,12 +331,13 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
             batch.tid.astype(jnp.uint32)[:, None], (T, WS)).reshape(-1)
         res = cas.arbitrate(table.cur_hdr, jnp.where(winside, wloc, 0),
                             expected.reshape(-1, 2), prio, mine)
+        granted = anno.tag(res.granted, anno.LOCK_GRANTED)
         table = table._replace(cur_hdr=res.new_hdr)
 
         K = table.n_old
         vpos = jnp.mod(table.next_write[jnp.where(mine, wloc, 0)], K)
         victim = table.old_hdr[jnp.where(mine, wloc, 0), vpos]
-        effective = res.granted & hdr_ops.is_moved(victim)
+        effective = granted & hdr_ops.is_moved(victim)
 
         # ---- 6. global commit decision (psum of failures) ----------------
         txn_of_req = jnp.broadcast_to(
@@ -344,7 +346,8 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         fails = jnp.zeros((T,), jnp.int32).at[txn_of_req].add(
             failed_local.astype(jnp.int32))
         fails = jax.lax.psum(fails, axis)
-        committed = (fails == 0) & txn_found & active
+        committed = anno.tag((fails == 0) & txn_found & active,
+                             anno.COMMIT_COMMITTED)
 
         # ---- 6b. append the WAL intent records (§6.2 — before install) ---
         # every memory server writes the identical entry into its resident
@@ -362,7 +365,8 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         inst = mvcc.install(table, wloc, new_hdr.reshape(-1, 2),
                             new_data.reshape(-1, W), do_install)
         table = inst.table
-        release_mask = res.granted & ~committed[txn_of_req]
+        release_mask = anno.tag(granted & ~committed[txn_of_req],
+                                anno.LOCK_RELEASED)
         table = table._replace(
             cur_hdr=cas.release(table.cur_hdr, wloc, release_mask))
         n_installs = jax.lax.psum(jnp.sum(do_install.astype(jnp.int32)), axis)

@@ -37,6 +37,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 # --------------------------------------------------------------------------
@@ -279,6 +280,15 @@ def staleness_window(vec_history: jnp.ndarray, k: int) -> jnp.ndarray:
     return vec_history[k]
 
 
-def snapshot_summary(vec: jnp.ndarray) -> jnp.ndarray:
-    """A scalar summary used for logging/GC bookkeeping (sum of slots)."""
-    return jnp.sum(vec.astype(jnp.uint64) if vec.dtype == jnp.uint64 else vec)
+def snapshot_summary(vec) -> np.uint64:
+    """Exact scalar summary for logging/GC bookkeeping (sum of slots).
+
+    Host-side and unconditionally uint64: a uint32 timestamp vector sums past
+    2^32 on long runs (W02 — the same wrap that inverted the WAL replay order
+    key in :mod:`repro.core.wal` before the ⟨hi,lo⟩ split). Widening on
+    device is a trap here — without jax's x64 mode ``jnp.uint64`` silently
+    narrows back to uint32 — so the sum runs in NumPy, whose uint64 is always
+    real. Eager-only by design (logging helper, never traced).
+    """
+    v = np.asarray(jax.device_get(vec), dtype=np.uint64)
+    return v.sum(dtype=np.uint64)

@@ -147,9 +147,29 @@ def append_intent(j: Journal, tid, ts_vec, slots, new_hdr, new_data,
     ``round_no``/``seq`` stamp the driver round and the sub-round so replay
     can break sum(T) ties in execution order and run the version mover at
     round boundaries. Bumps the ring cursor.
+
+    Widths are checked against the journal's declared shape (the A4/W04
+    invariant): a padded timestamp vector or an unpadded write-set must be
+    sliced / run through :func:`pad_writes` by the caller — silently
+    broadcasting a mismatched entry is exactly the PR 7 padded-vector bug.
     """
     tid = jnp.asarray(tid, jnp.int32)
     T = tid.shape[0]
+    n_slots, ws, width = (j.ts_vec.shape[-1], j.slots.shape[-1],
+                          j.new_data.shape[-1])
+    if ts_vec.shape[-1] != n_slots:
+        raise ValueError(
+            f"[A4] append_intent: ts_vec width {ts_vec.shape[-1]} != "
+            f"journal's declared n_slots {n_slots} — slice the (padded) "
+            f"vector to the journal width before logging")
+    got = (slots.shape[-1], new_hdr.shape[-2], new_data.shape[-2],
+           write_mask.shape[-1], new_data.shape[-1])
+    want = (ws, ws, ws, ws, width)
+    if got != want:
+        raise ValueError(
+            f"[A4] append_intent: write-set widths {got} != journal's "
+            f"declared (WS, WS, WS, WS, W) {want} — run the write-set "
+            f"through wal.pad_writes first")
     pos = j.used[tid] % j.capacity
     rep = jnp.arange(j.ts_vec.shape[0])
 
@@ -228,6 +248,7 @@ def _pick_replica(j: Journal, replica, survivors) -> int:
     survivors = np.asarray(jax.device_get(jnp.asarray(survivors)))
     if not survivors.any():
         raise ValueError("no surviving journal replica — unrecoverable")
+    # analysis: safe(W03): boolean survivor mask, non-empty checked above
     return int(np.argmax(survivors))
 
 

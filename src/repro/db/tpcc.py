@@ -1072,6 +1072,7 @@ def _inflight_intents(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
     expected = tbl.cur_hdr[jnp.where(req_active, req_slots, 0)]
     prio = jnp.broadcast_to(batch.tid.astype(jnp.uint32)[:, None],
                             batch.write_mask.shape).reshape(-1)
+    # analysis: safe(W01): deliberate crash window — locks stay abandoned
     res = cas.arbitrate(tbl.cur_hdr, req_slots, expected, prio, req_active)
     tbl = tbl._replace(cur_hdr=res.new_hdr)
     # the intent lands (on every journal replica), the outcome never does;

@@ -92,6 +92,7 @@ def _probe_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
         & ((m & jnp.uint32(moved_bit)) != 0)
     ok = usable(m, c) & ~sentinel
     any_old = jnp.any(ok, axis=1)
+    # analysis: safe(W03): boolean usable-mask operand — no sentinels
     first = jnp.argmax(ok, axis=1)
     old_pos = jnp.take_along_axis(pos, first[:, None], axis=1)[:, 0]
 
@@ -104,6 +105,7 @@ def _probe_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
     vidx = slot[:, None] * n_ovf + vpos
     vok = usable(vm[vidx], vc[vidx])
     any_ovf = jnp.any(vok, axis=1)
+    # analysis: safe(W03): boolean usable-mask operand — no sentinels
     vfirst = jnp.argmax(vok, axis=1)
     ovf_pos = jnp.take_along_axis(vpos, vfirst[:, None], axis=1)[:, 0]
 

@@ -1,0 +1,14 @@
+"""W02/A2 corpus: the PR 6 replay-order-key wraparound, minimized.
+
+``sum(T)`` over a uint32 timestamp vector wraps once slot values are large
+(long runs, many threads) and then *inverts* the vector-dominance order the
+replay relies on. The fixed code (``wal._order_keys``) sums the low and
+high 16-bit halves separately — exact for < 2^16 slots. Do not fix:
+tests/test_analysis.py asserts this fires.
+"""
+import jax.numpy as jnp
+
+
+def bad_order_key(ts_vec):
+    # uint32 [Th, Cap, n_slots] — the logged read snapshots
+    return jnp.sum(ts_vec, axis=-1)

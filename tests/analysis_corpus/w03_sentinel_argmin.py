@@ -1,0 +1,15 @@
+"""W03/A3 corpus: the PR 4 sentinel-blind snapshot-slot choice, minimized.
+
+``times`` uses −1 for never-used slots. A bare ``argmin(times)`` happens to
+prefer unused slots only because −1 sorts below every valid wall-clock
+time — the preference is a coincidence of the sentinel encoding, and it
+breaks the moment clocks can be negative or the sentinel changes. The fix
+selects explicitly (boolean unused-mask first, where-guarded argmin
+second). Do not fix: tests/test_analysis.py asserts this fires.
+"""
+import jax.numpy as jnp
+
+
+def bad_take_snapshot(times, vecs, now, vec):
+    pos = jnp.argmin(times)
+    return times.at[pos].set(now), vecs.at[pos].set(vec)

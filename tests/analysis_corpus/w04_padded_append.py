@@ -1,0 +1,17 @@
+"""W04/A4 corpus: the PR 7 padded-vector journal append, minimized.
+
+The sharded engine pads the timestamp vector so it divides over the mesh;
+logging the *padded* vector (or an unpadded write-set) into a journal with
+a different declared width silently broadcasts a wrong-shaped entry, and
+replay reconstructs the wrong snapshot. The fixed call sites slice the
+vector to the journal's ``n_slots`` and run the write-set through
+``*wal.pad_writes(...)``; ``append_intent`` itself now enforces the widths
+at trace time. Do not fix: tests/test_analysis.py asserts this fires.
+"""
+from repro.core import wal
+
+
+def bad_append(journal, tid, padded_vec, slots, new_hdr, new_data,
+               write_mask):
+    return wal.append_intent(journal, tid, padded_vec, slots, new_hdr,
+                             new_data, write_mask)

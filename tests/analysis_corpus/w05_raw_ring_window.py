@@ -1,0 +1,16 @@
+"""W05 corpus: the PR 6 wraparound-blind replay window, minimized.
+
+A journal ring's position ``p`` holds the entry with append index
+``used - 1 - ((used - 1 - p) mod capacity)`` — comparing raw positions
+against ``used`` is only correct before the first wrap; afterwards it
+happily replays overwritten entries. The fixed code (``wal._live_window``)
+maps each position to its latest append index. Do not fix:
+tests/test_analysis.py asserts this fires.
+"""
+import jax.numpy as jnp
+
+
+def bad_live_window(j):
+    # "everything below the cursor is live" — wrong after the first wrap
+    return (jnp.arange(j.capacity, dtype=jnp.int32)[None, :]
+            < j.used[:, None])

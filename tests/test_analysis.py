@@ -1,0 +1,216 @@
+"""Differential tests for the two-level static analyzer (repro.analysis).
+
+Contract (ISSUE 8): every rule fires on its minimized known-bad corpus
+entry under tests/analysis_corpus/, and both levels stay silent on the
+current tree. Plus the live-bug regressions the analyzer was built around:
+the snapshot_summary uint32 wrap and the append_intent width guard.
+"""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.analysis import jaxpr_audit as ja
+from repro.analysis import lint, rules
+from repro.core import tsoracle, wal
+
+TESTS = pathlib.Path(__file__).resolve().parent
+CORPUS = TESTS / "analysis_corpus"
+ROOT = TESTS.parent
+
+
+def _active(findings):
+    return [f for f in findings if not f.suppressed]
+
+
+def _fired(findings):
+    return {f.rule for f in _active(findings)}
+
+
+def _load_corpus(name):
+    spec = importlib.util.spec_from_file_location(name, CORPUS / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _cas_args(with_stale=False):
+    hdrs = jnp.zeros((8, 2), jnp.uint32)
+    slots = jnp.arange(4, dtype=jnp.int32)
+    expected = jnp.zeros((4, 2), jnp.uint32)
+    prio = jnp.arange(4, dtype=jnp.uint32)
+    active = jnp.ones((4,), bool)
+    args = (hdrs, slots, expected, prio, active)
+    if with_stale:
+        args += (jnp.zeros((4,), bool),)
+    return args
+
+
+# ---------------------------------------------------------------- AST level
+
+class TestLintFiresOnCorpus:
+    def test_w01_unpaired_lock(self):
+        fs = lint.lint_file(CORPUS / "w01_unpaired_lock.py")
+        assert "W01" in _fired(fs)
+        # ...but only for the release-free function: the foreign-release
+        # variant spells a cas.release call, so the AST level cannot see it
+        assert all(f.line < 24 for f in _active(fs) if f.rule == "W01")
+
+    def test_w02_wrapping_order_key(self):
+        assert "W02" in _fired(lint.lint_file(CORPUS / "w02_wrapping_order_key.py"))
+
+    def test_w03_sentinel_argmin(self):
+        assert "W03" in _fired(lint.lint_file(CORPUS / "w03_sentinel_argmin.py"))
+
+    def test_w04_padded_append(self):
+        assert "W04" in _fired(lint.lint_file(CORPUS / "w04_padded_append.py"))
+
+    def test_w05_raw_ring_window(self):
+        assert "W05" in _fired(lint.lint_file(CORPUS / "w05_raw_ring_window.py"))
+
+
+def test_lint_silent_on_tree():
+    fs = lint.lint_paths([ROOT / p for p in lint.DEFAULT_SCOPE])
+    assert _active(fs) == [], [f.render() for f in _active(fs)]
+    # the clean tree still *exercises* the suppression machinery: the
+    # reviewed argmax/argmin/arbitrate sites carry safe() annotations
+    assert any(f.suppressed for f in fs)
+    assert all(f.reason for f in fs if f.suppressed)
+
+
+# -------------------------------------------------------------- jaxpr level
+
+class TestJaxprAuditFiresOnCorpus:
+    def test_a1_missing_release(self):
+        m = _load_corpus("w01_unpaired_lock")
+        fs = ja.audit_callable(m.bad_round_no_release, *_cas_args(),
+                               name="w01.no_release", expects_locks=True)
+        assert "W01" in _fired(fs)
+
+    def test_a1_foreign_release(self):
+        # a release call exists, but its mask is not derived from the grant
+        # — only the dataflow level can catch this
+        m = _load_corpus("w01_unpaired_lock")
+        fs = ja.audit_callable(m.bad_round_foreign_release,
+                               *_cas_args(with_stale=True),
+                               name="w01.foreign", expects_locks=True)
+        assert "W01" in _fired(fs)
+
+    def test_a2_wrapping_sum(self):
+        m = _load_corpus("w02_wrapping_order_key")
+        fs = ja.audit_callable(m.bad_order_key,
+                               jnp.zeros((3, 4, 5), jnp.uint32),
+                               name="w02")
+        assert "W02" in _fired(fs)
+
+    def test_a2_silent_on_digit_split(self):
+        # the fixed order key (hi/lo 16-bit digit sums) must NOT fire
+        j = wal.init_journal(2, 4, n_slots=5, ws=2, width=4)
+        fs = ja.audit_callable(lambda jj: wal._order_keys(jj, 0), j,
+                               name="w02.fixed")
+        assert "W02" not in _fired(fs)
+
+    def test_a3_sentinel_argmin(self):
+        m = _load_corpus("w03_sentinel_argmin")
+        fs = ja.audit_callable(
+            m.bad_take_snapshot,
+            jnp.full((8,), -1, jnp.int32), jnp.zeros((8, 6), jnp.uint32),
+            jnp.int32(7), jnp.zeros((6,), jnp.uint32),
+            name="w03")
+        assert "W03" in _fired(fs)
+
+    def test_a4_padded_vector(self):
+        m = _load_corpus("w04_padded_append")
+        j = wal.init_journal(4, 4, n_slots=6, ws=2, width=4)
+        tid = jnp.arange(4, dtype=jnp.int32)
+        padded_vec = jnp.zeros((8,), jnp.uint32)  # journal declares 6
+        fs = ja.audit_callable(
+            m.bad_append, j, tid, padded_vec,
+            jnp.zeros((4, 2), jnp.int32), jnp.zeros((4, 2, 2), jnp.uint32),
+            jnp.zeros((4, 2, 4), jnp.int32), jnp.ones((4, 2), bool),
+            name="w04")
+        assert "W04" in _fired(fs)
+
+
+def test_jaxpr_audit_silent_on_tree():
+    findings, reports = ja.audit_tree()
+    assert {r.name for r in reports} == set(ja.ENTRYPOINTS)
+    bad = [r for r in reports if r.status != "ok"]
+    assert not bad, [(r.name, r.detail) for r in bad]
+    assert _active(findings) == [], [f.render() for f in _active(findings)]
+
+
+# ------------------------------------------------------- live-bug regressions
+
+def test_snapshot_summary_exact_uint64():
+    # pre-fix code summed in uint32 (except under x64) and wrapped; the sum
+    # below exceeds 2^32 so the wrapped value differs from the exact one
+    vec = jnp.full((1024,), 0xFFFFFF00, jnp.uint32)
+    out = tsoracle.snapshot_summary(vec)
+    assert np.asarray(out).dtype == np.uint64
+    assert int(out) == 1024 * 0xFFFFFF00
+
+
+def test_snapshot_summary_lint_guards_the_fix(tmp_path):
+    # reverting the fix must re-fire W02: this is the pre-fix body verbatim
+    prefix = (
+        "import jax.numpy as jnp\n"
+        "def snapshot_summary(vec):\n"
+        "    return jnp.sum(vec.astype(jnp.uint64) "
+        "if vec.dtype == jnp.uint64 else vec)\n")
+    p = tmp_path / "prefix_tsoracle.py"
+    p.write_text(prefix)
+    assert "W02" in _fired(lint.lint_file(p))
+    # ...and the fixed tree file is silent
+    assert "W02" not in _fired(
+        lint.lint_file(ROOT / "src" / "repro" / "core" / "tsoracle.py"))
+
+
+def test_append_intent_width_guard_padded_vec():
+    j = wal.init_journal(4, 4, n_slots=6, ws=2, width=4)
+    tid = jnp.arange(4, dtype=jnp.int32)
+    with pytest.raises(ValueError, match=r"\[A4\].*n_slots"):
+        wal.append_intent(j, tid, jnp.zeros((8,), jnp.uint32),
+                          jnp.zeros((4, 2), jnp.int32),
+                          jnp.zeros((4, 2, 2), jnp.uint32),
+                          jnp.zeros((4, 2, 4), jnp.int32),
+                          jnp.ones((4, 2), bool))
+
+
+def test_append_intent_width_guard_unpadded_writes():
+    j = wal.init_journal(4, 4, n_slots=6, ws=2, width=4)
+    tid = jnp.arange(4, dtype=jnp.int32)
+    vec = jnp.zeros((6,), jnp.uint32)
+    narrow = (jnp.zeros((4, 1), jnp.int32), jnp.zeros((4, 1, 2), jnp.uint32),
+              jnp.zeros((4, 1, 4), jnp.int32), jnp.ones((4, 1), bool))
+    with pytest.raises(ValueError, match=r"\[A4\].*pad_writes"):
+        wal.append_intent(j, tid, vec, *narrow)
+    # the prescribed fix passes the guard
+    j2 = wal.append_intent(j, tid, vec, *wal.pad_writes(j, *narrow))
+    assert int(j2.used[0]) == 1
+
+
+# ------------------------------------------------------------- suppressions
+
+def test_suppression_requires_reason(tmp_path):
+    p = tmp_path / "no_reason.py"
+    p.write_text("import jax.numpy as jnp\n"
+                 "def f(times):\n"
+                 "    return jnp.argmin(times)  # analysis: safe(W03)\n")
+    assert "W03" in _fired(lint.lint_file(p))
+
+
+def test_suppression_with_reason_and_alias(tmp_path):
+    p = tmp_path / "with_reason.py"
+    p.write_text("import jax.numpy as jnp\n"
+                 "def f(times):\n"
+                 "    # analysis: safe(A3): sentinel-free by construction\n"
+                 "    return jnp.argmin(times)\n")
+    fs = lint.lint_file(p)
+    assert _active(fs) == []
+    sup = [f for f in fs if f.suppressed]
+    assert sup and sup[0].reason == "sentinel-free by construction"
+    assert rules.canonical("A3") == "W03"
