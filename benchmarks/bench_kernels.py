@@ -80,6 +80,25 @@ def run():
     rows.append(("kernel_hash_probe_fused_64k", pt["fused_us"],
                  hdr_bytes / HBM_BW * 1e6))
 
+    # fused SI commit path (NAM-DB §3.1 Listing 1 lines 10-31): the commit
+    # kernel's net state transition (validate → CAS-lock → install →
+    # make-visible → unlock as ONE scatter per header plane, lock/release
+    # cancelled algebraically) vs the unfused production body
+    # (si.commit_write_sets + the oracle's make-visible — three passes over
+    # cur_hdr). 64 k slots = the VMEM-resident shard regime; see the
+    # --commit mode of bench_tpcc_scaling.py for the sweep + artifact.
+    try:
+        from benchmarks.bench_tpcc_scaling import measure_commit_point
+    except ImportError:           # run as a script from benchmarks/
+        from bench_tpcc_scaling import measure_commit_point
+    cp = measure_commit_point(1 << 16, iters=15)
+    # header planes r/w (cur 8B + ring K×8B + counters 4B) + request stream
+    cm_bytes = 2 * ((1 << 16) * (8 + 8 * 8 + 4)) + 256 * 48
+    rows.append(("kernel_fused_commit_unfused_64k", cp["unfused_us"],
+                 cm_bytes / HBM_BW * 1e6))
+    rows.append(("kernel_fused_commit_fused_64k", cp["fused_us"],
+                 cm_bytes / HBM_BW * 1e6))
+
     # mamba selective scan
     from repro.kernels.mamba_scan.ops import mamba_scan
     Bm_, S2, Di, N = 2, 256, 128, 16

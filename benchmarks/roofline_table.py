@@ -1,6 +1,7 @@
 """Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
 
     PYTHONPATH=src python -m benchmarks.roofline_table [--dir experiments/dryrun]
+    PYTHONPATH=src python -m benchmarks.roofline_table --kernels [dir]
 
 Reads every ``<arch>__<shape>__<mesh>.json`` produced by
 ``repro.launch.dryrun`` and emits two GitHub-markdown tables:
@@ -13,6 +14,19 @@ Reads every ``<arch>__<shape>__<mesh>.json`` produced by
 
 The note is auto-derived from the profile (top collective kind / byte
 breakdown), so the table always reflects the *current* compiled artifact.
+
+``--kernels`` instead renders the §Kernel-roofline table from the
+``BENCH_probe.json`` / ``BENCH_commit.json`` artifacts (the committed seed
+points in ``benchmarks/data/`` by default): per sweep point, the minimum
+header-plane traffic the protocol must move, the TPU-v5e
+memory-bandwidth-roof time at that traffic (819 GB/s — both kernels are
+pure gather/scatter over headers, so the roof IS the bandwidth bound;
+Didona et al.'s lower-bound argument for distributed-transaction work
+applies: the commit path cannot move fewer bytes than one read + one write
+of every header it validates and installs), and how far the measured
+fused-vs-unfused speedup closes the gap between the unfused pass count and
+that roof. CPU wall clocks (interpret mode) are reported for scale but the
+roof column is the TPU target, not a CPU claim.
 """
 from __future__ import annotations
 
@@ -96,12 +110,78 @@ def roofline_table(rows, mesh="pod") -> str:
     return "\n".join(out)
 
 
+# ------------------------------------------------ §Kernel-roofline mode ----
+HBM_BW = 819e9        # TPU-v5e HBM bandwidth (matches bench_kernels.py)
+
+
+def _probe_traffic(p) -> int:
+    """Minimum bytes one probe launch must move: one read of the staged
+    directory + every header plane (current, ring, overflow, counters) plus
+    the query/locator stream — the §5.1 'headers alone first' bound."""
+    return (p["n_buckets"] * (8 + 8 + p["n_old"] * 8
+                              + p["n_overflow"] * 8 + 8)
+            + p["n_queries"] * 48)
+
+
+def _commit_traffic(p) -> int:
+    """Minimum bytes one commit launch must move: a read AND a write of the
+    current-header plane, the ring header plane and the ring counters (the
+    Didona et al. lower-bound shape: no protocol can validate + install
+    without touching every header it decides on) plus the request stream."""
+    return (2 * p["n_slots"] * (8 + p["n_old"] * 8 + 4)
+            + p["n_txn"] * p["write_set"] * 48)
+
+
+def kernel_roofline_table(dirname: str) -> str:
+    """§Kernel-roofline: the BENCH_probe/BENCH_commit sweep points against
+    the TPU-v5e memory-bandwidth roof. Both kernels are pure gather/scatter
+    over header planes (no MXU work), so roof time = min traffic / HBM BW;
+    the CPU interpret wall clock is shown for scale only."""
+    docs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "BENCH_*.json"))):
+        doc = json.load(open(f))
+        if doc.get("kind") in ("hash_probe", "tpcc_commit"):
+            docs.append((os.path.basename(f), doc))
+    out = ["| kernel | point | min traffic | roof µs @819 GB/s | CPU µs "
+           "(fused / unfused) | speedup | CPU÷roof |",
+           "|---|---|---|---|---|---|---|"]
+    for fname, doc in docs:
+        probe = doc["kind"] == "hash_probe"
+        name = "hash_probe" if probe else "fused_commit"
+        for p in doc["points"]:
+            traffic = _probe_traffic(p) if probe else _commit_traffic(p)
+            size = p["n_buckets"] if probe else p["n_slots"]
+            roof_us = traffic / HBM_BW * 1e6
+            out.append(
+                f"| {name} ({fname}) | {size // 1024}k | "
+                f"{_fmt_b(traffic)} | {roof_us:.1f} | "
+                f"{p['fused_us']:.0f} / {p['unfused_us']:.0f} | "
+                f"{p['speedup']:.2f}x | {p['fused_us'] / roof_us:.0f}x |")
+    if len(out) == 2:
+        out.append(f"| (no BENCH_probe/BENCH_commit artifacts in {dirname}) "
+                   "| - | - | - | - | - | - |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--dir", default=None)
     ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--kernels", action="store_true",
+                    help="render the §Kernel-roofline table from the "
+                    "BENCH_probe/BENCH_commit artifacts (default dir: "
+                    "benchmarks/data — the committed seed points) instead "
+                    "of the dry-run tables")
     args = ap.parse_args()
-    rows = load(args.dir)
+    if args.kernels:
+        print("## §Kernel-roofline (TPU-v5e memory-bandwidth bound)\n")
+        print(kernel_roofline_table(args.dir or "benchmarks/data"))
+        print("\nBoth kernels are header-plane gather/scatter — the roof is"
+              "\nthe bandwidth bound, and (per Didona et al.) a lower bound"
+              "\nfor ANY commit protocol touching the same headers. CPU µs"
+              "\nare interpret-mode wall clocks: scale, not a TPU claim.")
+        return
+    rows = load(args.dir or "experiments/dryrun")
     print("## §Dry-run\n")
     print(dryrun_table(rows))
     print("\n## §Roofline (single-pod 16×16)\n")

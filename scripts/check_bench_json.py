@@ -2,8 +2,9 @@
 
 CI runs ``bench_tpcc_scaling.py --sustain … --smoke`` (emitting
 ``BENCH_sustain.json``), ``--probe --smoke`` (``BENCH_probe.json``),
-``--kill --smoke`` (``BENCH_recovery.json``) and ``--expand --smoke``
-(``BENCH_elastic.json``) and uploads all four; this
+``--commit --smoke`` (``BENCH_commit.json``), ``--kill --smoke``
+(``BENCH_recovery.json``) and ``--expand --smoke``
+(``BENCH_elastic.json``) and uploads all five; this
 script pins each document's shape — dispatched on the ``kind`` field — so
 the bench output formats cannot rot silently (a field rename or a dropped
 trajectory would otherwise only surface when someone next tries to plot an
@@ -209,6 +210,53 @@ def check_probe(doc: dict):
                           "recorded speedups")
 
 
+COMMIT_CONFIG_KEYS = {"n_txn": int, "write_set": int, "n_old": int,
+                      "width": int, "iters": int, "smoke": bool}
+COMMIT_POINT_KEYS = {"n_slots": int, "n_records": int, "n_txn": int,
+                     "write_set": int, "n_old": int, "width": int,
+                     "unfused_us": float, "fused_us": float, "speedup": float}
+COMMIT_SUMMARY_KEYS = {"best_speedup_64k": float, "fused_wins_at_64k": bool}
+
+
+def check_commit(doc: dict):
+    """The §3.1 commit-bench artifact: a slot-count sweep of fused commit
+    kernel vs unfused commit_write_sets+make-visible timings. The ≥64k-slot
+    win is the kernel's contract (DESIGN.md §8: fused must beat unfused in
+    the VMEM-resident regime) — fused_wins_at_64k must be True."""
+    _check_fields(doc.get("config"), COMMIT_CONFIG_KEYS, "config")
+    _check_fields(doc.get("summary"), COMMIT_SUMMARY_KEYS, "summary")
+    points = doc.get("points")
+    if not isinstance(points, list) or not points:
+        raise SchemaError("points: expected non-empty list")
+    best64 = None
+    for i, p in enumerate(points):
+        _check_fields(p, COMMIT_POINT_KEYS, f"points[{i}]")
+        for f in ("unfused_us", "fused_us"):
+            if p[f] <= 0:
+                raise SchemaError(f"points[{i}].{f}: non-positive timing")
+        want = p["unfused_us"] / p["fused_us"]
+        if abs(p["speedup"] - want) > 1e-6 * max(1.0, want):
+            raise SchemaError(f"points[{i}].speedup {p['speedup']!r} != "
+                              f"unfused_us/fused_us ({want!r})")
+        if p["n_slots"] >= 1 << 16:
+            best64 = p["speedup"] if best64 is None \
+                else max(best64, p["speedup"])
+    if best64 is None:
+        raise SchemaError("no point at >=64k slots — the sweep misses the "
+                          "VMEM-resident regime the kernel targets")
+    s = doc["summary"]
+    if abs(s["best_speedup_64k"] - best64) > 1e-9:
+        raise SchemaError(f"summary.best_speedup_64k {s['best_speedup_64k']!r}"
+                          f" != max over >=64k points ({best64!r})")
+    if s["fused_wins_at_64k"] != (best64 >= 1.0):
+        raise SchemaError("summary.fused_wins_at_64k inconsistent with the "
+                          "recorded speedups")
+    if s["fused_wins_at_64k"] is not True:
+        raise SchemaError("summary.fused_wins_at_64k is not True — the fused "
+                          "commit kernel lost to the unfused path in the "
+                          "regime it exists for (DESIGN.md §8 bench gate)")
+
+
 def check(doc: dict):
     if doc.get("schema_version") != SCHEMA_VERSION:
         raise SchemaError(f"schema_version {doc.get('schema_version')!r} != "
@@ -216,14 +264,16 @@ def check(doc: dict):
     kind = doc.get("kind")
     if kind == "hash_probe":
         return check_probe(doc)
+    if kind == "tpcc_commit":
+        return check_commit(doc)
     if kind == "tpcc_recovery":
         return check_recovery(doc)
     if kind == "tpcc_elastic":
         return check_elastic(doc)
     if kind != "tpcc_sustain":
         raise SchemaError(f"kind {doc.get('kind')!r} not in "
-                          f"('tpcc_sustain', 'hash_probe', 'tpcc_recovery', "
-                          f"'tpcc_elastic')")
+                          f"('tpcc_sustain', 'hash_probe', 'tpcc_commit', "
+                          f"'tpcc_recovery', 'tpcc_elastic')")
     _check_fields(doc.get("config"), CONFIG_KEYS, "config")
     _check_fields(doc.get("summary"), SUMMARY_KEYS, "summary")
 
@@ -282,6 +332,10 @@ def main(argv):
     s = doc["summary"]
     if doc["kind"] == "hash_probe":
         print(f"check_bench_json: {path} ok — {len(doc['points'])} probe "
+              f"points, best >=64k speedup {s['best_speedup_64k']:.2f}x, "
+              f"fused_wins_at_64k={s['fused_wins_at_64k']}")
+    elif doc["kind"] == "tpcc_commit":
+        print(f"check_bench_json: {path} ok — {len(doc['points'])} commit "
               f"points, best >=64k speedup {s['best_speedup_64k']:.2f}x, "
               f"fused_wins_at_64k={s['fused_wins_at_64k']}")
     elif doc["kind"] == "tpcc_recovery":

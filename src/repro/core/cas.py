@@ -18,6 +18,13 @@ a slot is the active requester with minimum priority whose expected header
 matches the installed header exactly (8-byte compare, lock bit included — an
 already-locked record can never match an unlocked expectation, so "lock bit
 must be 0" falls out of the equality, as in the paper).
+
+The fused commit kernel (``repro.kernels.commit``, DESIGN.md §8) inlines
+this same tournament inside its Pallas launch — deliberately without
+calling :func:`arbitrate` by name, so the §7 jaxpr audit's lock-pairing
+anchors stay on the unfused path it traces. Any change to the arbitration
+contract here must be mirrored there; the differential tests in
+tests/test_kernels.py (kernel vs ``si.commit_write_sets``) catch a drift.
 """
 from __future__ import annotations
 

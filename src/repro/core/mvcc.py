@@ -20,6 +20,14 @@ slots, KO overflow slots):
 
 Fixed-length payloads only, exactly as the paper's current implementation
 (§5.1 "Record Layout"); our TPC-C encodes every column into int32 words.
+
+The header/payload split is also the kernel contract (DESIGN.md §8): the
+Pallas kernels in ``repro.kernels.{hash_probe,commit}`` stage the
+``[·, 2]`` header planes in exactly this interleaved layout (the old ring
+flattened row-major) and never see a payload — ``locate_visible`` /
+``gather_version`` define the locator the batched probe emits, and the
+commit kernel's install scatter mirrors :func:`install`'s header path
+with payloads applied outside the launch.
 """
 from __future__ import annotations
 

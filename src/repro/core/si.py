@@ -189,6 +189,74 @@ def count_readonly_ops(oracle, read_mask, from_current, n_txns,
     )
 
 
+class CommitOut(NamedTuple):
+    """Outputs of one commit phase over a flat request array (``Q = T*WS``).
+
+    Shared between the unfused reference (:func:`commit_write_sets`) and the
+    fused Pallas commit kernel's wrapper
+    (``repro.kernels.commit.ops.fused_commit``) — the two are differentially
+    tested bit-exact in tests/test_kernels.py (DESIGN.md §8).
+    """
+    table: VersionedTable
+    granted: jnp.ndarray       # bool  [Q] — CAS won (validate+lock)
+    committed: jnp.ndarray     # bool  [T] — per-transaction decision
+    do_install: jnp.ndarray    # bool  [Q] — request installed its version
+    release_mask: jnp.ndarray  # bool  [Q] — abort-path lock release
+    fails: jnp.ndarray         # int32 [T] — failing requests per transaction
+
+
+def commit_write_sets(table: VersionedTable, req_slots, req_expected,
+                      req_prio, req_active, txn_of_req, new_hdr, new_data,
+                      txn_ok, *, ext_fails=None) -> CommitOut:
+    """Phases 5/7/8 of Listing 1 over a flat request array: validate + lock
+    (one arbitrated CAS per write record), install the write-sets of
+    committed transactions, release the locks of aborted ones.
+
+    This is THE unfused commit body — :func:`run_round` executes it when
+    ``fused_commit`` is off, and the fused Pallas kernel
+    (``repro.kernels.commit``) uses it as its lock-step oracle, so the two
+    can never diverge silently.
+
+    ``txn_ok`` (bool [T]) carries the pre-commit per-transaction gate
+    (``txn_found & active``). ``ext_fails`` (int32 [T], optional) adds
+    failing-request counts observed elsewhere — the sharded deployment's
+    psum'd remote failures — so the commit decision is the global AND; a
+    transaction commits iff it has zero failing requests in total (a
+    transaction with no active writes trivially has zero and commits, the
+    read-only rule of :func:`repro.core.cas.all_granted_per_txn`).
+    """
+    n_txn = txn_ok.shape[0]
+    res = cas.arbitrate(table.cur_hdr, req_slots, req_expected, req_prio,
+                        req_active)
+    granted = anno.tag(res.granted, anno.LOCK_GRANTED)
+    table = table._replace(cur_hdr=res.new_hdr)
+
+    # install feasibility: the circular victim slot must be reusable (§5.1)
+    K = table.n_old
+    wpos = jnp.mod(table.next_write[jnp.where(req_active, req_slots, 0)], K)
+    victim = table.old_hdr[jnp.where(req_active, req_slots, 0), wpos]
+    effective = granted & hdr_ops.is_moved(victim)
+
+    fails = jnp.zeros((n_txn,), jnp.int32).at[txn_of_req].add(
+        (req_active & ~effective).astype(jnp.int32))
+    total_fails = fails if ext_fails is None else fails + ext_fails
+    committed = anno.tag((total_fails == 0) & txn_ok, anno.COMMIT_COMMITTED)
+
+    # install write-sets of committed transactions (they hold these locks)
+    do_install = effective & committed[txn_of_req]
+    inst = mvcc.install(table, req_slots, new_hdr, new_data, do_install)
+    table = inst.table
+
+    # release locks held by aborted transactions
+    release_mask = anno.tag(granted & ~committed[txn_of_req],
+                            anno.LOCK_RELEASED)
+    table = table._replace(
+        cur_hdr=cas.release(table.cur_hdr, req_slots, release_mask))
+    return CommitOut(table=table, granted=granted, committed=committed,
+                     do_install=do_install, release_mask=release_mask,
+                     fails=fails)
+
+
 def run_round(
     table: VersionedTable,
     oracle: VectorOracle,
@@ -205,6 +273,8 @@ def run_round(
     journal: Optional[wal.Journal] = None,
     journal_round=0,
     journal_seq=0,
+    fused_commit: bool = False,
+    batched_probe: bool = False,
 ) -> RoundResult:
     """Execute one vectorized round of the SI protocol.
 
@@ -228,6 +298,18 @@ def run_round(
     appended *before* install and the outcome record after the commit
     decision, stamped ``(journal_round, journal_seq)`` for replay ordering.
     The updated journal rides back on ``RoundResult.journal``.
+
+    ``fused_commit`` / ``batched_probe`` swap phases of the protocol for the
+    Pallas kernels (DESIGN.md §8) — access-path choices, never semantics:
+    both paths are proven bit-identical to this function's unfused rendering
+    in tests/test_kernels.py and through the 8-way-mesh equivalence harness.
+    ``batched_probe`` resolves the whole read-set (key-addressed lanes and
+    slot-addressed lanes together) in ONE kernel launch — directory probe +
+    §5.1 version location fused, then exactly one payload gather outside.
+    ``fused_commit`` runs validate→CAS-lock→install→make-visible→unlock as
+    one VMEM-resident launch over the header planes, with the payload
+    scatters applied outside on the kernel's install mask; its lock-step
+    oracle is :func:`commit_write_sets` (the body the unfused path runs).
     """
     T, RS = batch.read_slots.shape
     WS = batch.write_ref.shape[1]
@@ -241,28 +323,59 @@ def run_round(
 
     # ---- 2. key resolution (§5.2) + visible reads -------------------------
     flat_slots = batch.read_slots.reshape(-1)
-    if directory is not None:
-        assert keyed is not None, "key-addressed mode needs KeyedReads"
-        kvals, kfound = ht.lookup(directory, keyed.keys.reshape(-1),
-                                  max_probes=dir_max_probes)
-        km = keyed.mask.reshape(-1)
-        flat_slots = jnp.where(km, jnp.where(kfound, kvals, 0), flat_slots)
-        key_ok = ~km | kfound
-        n_index_probes = jnp.sum(keyed.mask & batch.read_mask
-                                 & active[:, None])
+    if batched_probe:
+        # one kernel launch resolves every lane of the read-set: directory
+        # probe for the key-addressed lanes, §5.1 version location for all —
+        # then exactly one payload gather outside (DESIGN.md §8)
+        from repro.kernels.hash_probe import ops as probe_ops
+        if directory is not None:
+            assert keyed is not None, "key-addressed mode needs KeyedReads"
+            slot_out, f_out, src, pos = probe_ops.batched_probe(
+                directory.keys, directory.vals, table, rts_vec, flat_slots,
+                keyed.keys.reshape(-1), keyed.mask.reshape(-1),
+                max_probes=dir_max_probes)
+            n_index_probes = jnp.sum(keyed.mask & batch.read_mask
+                                     & active[:, None])
+        else:
+            slot_out, f_out, src, pos = probe_ops.batched_probe(
+                None, None, table, rts_vec, flat_slots, None, None)
+            n_index_probes = 0
+        # a keyed miss reports slot -1; gather at the safe slot 0, exactly
+        # like the unfused path below — never a negative-slot gather
+        flat_slots = jnp.where(slot_out >= 0, slot_out, 0)
+        read_slots = flat_slots.reshape(T, RS)
+        hdr_flat, data_flat = mvcc.gather_version(
+            table, flat_slots,
+            mvcc.VersionLoc(found=f_out, src=src, pos=pos))
+        read_hdr = hdr_flat.reshape(T, RS, 2)
+        read_data = data_flat.reshape(T, RS, W)
+        read_found = f_out.reshape(T, RS)
+        from_current = (f_out & (src == mvcc.SRC_CURRENT)).reshape(T, RS)
+        from_ovf = (f_out & (src == mvcc.SRC_OVF)).reshape(T, RS)
     else:
-        key_ok = jnp.ones(flat_slots.shape, bool)
-        n_index_probes = 0
-    read_slots = flat_slots.reshape(T, RS)    # resolved slots, used below
-    vr = mvcc.read_visible(table, flat_slots, rts_vec)
-    read_hdr = vr.hdr.reshape(T, RS, 2)
-    read_data = vr.data.reshape(T, RS, W)
-    # a directory miss resolves to the safe slot 0 — mask its visibility
-    # outcomes wholesale so the miss is not telemetried (or op-counted) as
-    # a served read of record 0
-    read_found = (vr.found & key_ok).reshape(T, RS)
-    from_current = (vr.from_current & key_ok).reshape(T, RS)
-    from_ovf = (vr.from_ovf & key_ok).reshape(T, RS)
+        if directory is not None:
+            assert keyed is not None, "key-addressed mode needs KeyedReads"
+            kvals, kfound = ht.lookup(directory, keyed.keys.reshape(-1),
+                                      max_probes=dir_max_probes)
+            km = keyed.mask.reshape(-1)
+            flat_slots = jnp.where(km, jnp.where(kfound, kvals, 0),
+                                   flat_slots)
+            key_ok = ~km | kfound
+            n_index_probes = jnp.sum(keyed.mask & batch.read_mask
+                                     & active[:, None])
+        else:
+            key_ok = jnp.ones(flat_slots.shape, bool)
+            n_index_probes = 0
+        read_slots = flat_slots.reshape(T, RS)  # resolved slots, used below
+        vr = mvcc.read_visible(table, flat_slots, rts_vec)
+        read_hdr = vr.hdr.reshape(T, RS, 2)
+        read_data = vr.data.reshape(T, RS, W)
+        # a directory miss resolves to the safe slot 0 — mask its visibility
+        # outcomes wholesale so the miss is not telemetried (or op-counted)
+        # as a served read of record 0
+        read_found = (vr.found & key_ok).reshape(T, RS)
+        from_current = (vr.from_current & key_ok).reshape(T, RS)
+        from_ovf = (vr.from_ovf & key_ok).reshape(T, RS)
     found = read_found | ~batch.read_mask
     txn_found = jnp.all(found, axis=1)
 
@@ -282,7 +395,7 @@ def run_round(
         jnp.broadcast_to(cts[:, None], (T, WS)),
     )                                                   # [T, WS, 2]
 
-    # ---- 5. validate + lock (one CAS per write record) --------------------
+    # ---- 5. commit-phase request staging ----------------------------------
     wref = jnp.clip(batch.write_ref, 0, RS - 1)
     write_slots = jnp.take_along_axis(read_slots, wref, axis=1)
     expected = jnp.take_along_axis(read_hdr, wref[:, :, None], axis=1)
@@ -293,25 +406,14 @@ def run_round(
     # round-unique priorities: thread id (each thread issues ≤1 txn/round)
     req_prio = jnp.broadcast_to(
         batch.tid.astype(jnp.uint32)[:, None], (T, WS)).reshape(-1)
-    res = cas.arbitrate(table.cur_hdr, req_slots, req_expected, req_prio,
-                        req_active)
-    granted = anno.tag(res.granted, anno.LOCK_GRANTED)
-    table = table._replace(cur_hdr=res.new_hdr)
-
-    # install feasibility: the circular victim slot must be reusable (§5.1)
-    K = table.n_old
-    wpos = jnp.mod(table.next_write[jnp.where(req_active, req_slots, 0)], K)
-    victim = table.old_hdr[jnp.where(req_active, req_slots, 0), wpos]
-    can_install = hdr_ops.is_moved(victim)
-    effective = granted & can_install
-
     txn_of_req = jnp.broadcast_to(
         jnp.arange(T, dtype=jnp.int32)[:, None], (T, WS)).reshape(-1)
-    committed = cas.all_granted_per_txn(effective, txn_of_req, T, req_active)
-    committed = anno.tag(committed & txn_found & active,
-                         anno.COMMIT_COMMITTED)
+    txn_ok = txn_found & active
 
     # ---- 6. append the WAL intent records (§6.2 — *before* install) -------
+    # The intent depends only on commit-phase INPUTS (never on the CAS
+    # outcome), so the fused kernel stages it identically: append here,
+    # before either commit rendering touches the pool.
     if journal is not None:
         journal = wal.append_intent(
             journal, batch.tid, rts_vec,
@@ -319,22 +421,33 @@ def run_round(
                             req_active.reshape(T, WS)),
             round_no=journal_round, seq=journal_seq)
 
-    # ---- 7. install write-sets of committed transactions ------------------
-    inst_mask = granted & committed[txn_of_req]       # they hold these locks
-    do_install = effective & committed[txn_of_req]
-    inst = mvcc.install(
-        table, req_slots, new_hdr.reshape(-1, 2),
-        new_data.reshape(-1, W), do_install)
-    table = inst.table
-
-    # ---- 8. release locks held by aborted transactions --------------------
-    release_mask = anno.tag(granted & ~committed[txn_of_req],
-                            anno.LOCK_RELEASED)
-    new_cur_hdr = cas.release(table.cur_hdr, req_slots, release_mask)
-    table = table._replace(cur_hdr=new_cur_hdr)
-
-    # ---- 9. make visible: bump own slot of T_R ----------------------------
-    state = oracle.make_visible(state, batch.tid, cts, committed)
+    # ---- 5./7./8./9. validate+lock, install, release, make visible --------
+    std_vis = type(oracle).make_visible is VectorOracle.make_visible
+    if fused_commit:
+        from repro.kernels.commit import ops as commit_ops
+        fc = commit_ops.fused_commit(
+            table, state.vec, req_slots, req_expected, req_prio, req_active,
+            txn_of_req, new_hdr.reshape(-1, 2), new_data.reshape(-1, W),
+            txn_ok, oracle.slot_of_thread(batch.tid), cts,
+            jnp.zeros((T,), jnp.int32))
+        table = fc.table
+        granted = anno.tag(fc.granted, anno.LOCK_GRANTED)
+        committed = anno.tag(fc.committed, anno.COMMIT_COMMITTED)
+        do_install = fc.do_install
+        release_mask = anno.tag(granted & ~committed[txn_of_req],
+                                anno.LOCK_RELEASED)
+        if std_vis:   # the kernel's in-launch make-visible IS the vector
+            state = state._replace(vec=fc.vec)   # oracle's scatter-max
+        else:         # custom oracle machinery — run it, drop kernel's vec
+            state = oracle.make_visible(state, batch.tid, cts, committed)
+    else:
+        co = commit_write_sets(table, req_slots, req_expected, req_prio,
+                               req_active, txn_of_req, new_hdr.reshape(-1, 2),
+                               new_data.reshape(-1, W), txn_ok)
+        table = co.table
+        granted, committed = co.granted, co.committed
+        do_install, release_mask = co.do_install, co.release_mask
+        state = oracle.make_visible(state, batch.tid, cts, committed)
 
     # the outcome record lands after the decision (§3.2: until it does the
     # transaction is undetermined and its locks are the monitor's)
@@ -349,7 +462,6 @@ def run_round(
                     n_index_probes=n_index_probes)
     vis = vis_stats(batch.read_mask, read_found, from_current, from_ovf,
                     active)
-    del inst_mask
     return RoundResult(table=table, oracle_state=state, committed=committed,
                        snapshot_miss=~txn_found, read_data=read_data, ops=ops,
                        vis=vis, journal=journal)

@@ -176,7 +176,9 @@ def _local_slots(slots, base, count):
 def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
                       compute_fn: Callable, shard_records: int, *,
                       shard_vector: bool = False, n_dir_buckets: int = 0,
-                      dir_max_probes: int = 16, with_journal: bool = False):
+                      dir_max_probes: int = 16, with_journal: bool = False,
+                      fused_commit: bool = False,
+                      batched_probe: bool = False):
     """Build a jittable ``round(table_sharded, vec, batch, aux)`` executor.
 
     ``table_sharded``: VersionedTable with leading record axis sharded over
@@ -220,6 +222,18 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
     decision (identical per-server content — the broadcast journal write),
     and the updated journal is returned as a fourth output. A server
     failure therefore leaves surviving replicas to replay from.
+
+    ``fused_commit`` / ``batched_probe`` swap per-shard protocol phases for
+    the Pallas kernels (DESIGN.md §8) — access-path choices, never
+    semantics, proven bit-identical through the equivalence harness
+    (tests/_distributed_equiv_check.py with ``REPRO_EQUIV_FUSED=1``).
+    ``batched_probe`` resolves each server's masked local read-set in one
+    locate-only kernel launch (key resolution stays the partitioned
+    ``lookup_shard`` + psum — the bucket array is range-partitioned).
+    ``fused_commit`` replaces validate/lock/install/release/make-visible
+    with the commit kernel's decide/apply double-launch: the decide pass
+    contributes this shard's failure counts to the global-AND psum, the
+    apply pass replays with ``ext_fails = total - local``.
 
     Returns ``(round_fn, n_shards)`` with
     ``round_fn(table, vec, batch, aux, active=None) -> (table, vec,
@@ -282,7 +296,26 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         # ---- 2b. one-sided visible reads (masked local + all-reduce) -----
         loc, inside = _local_slots(flat, base, shard_records)
         safe = jnp.where(inside, loc, 0)
-        vr = mvcc.read_visible(table, safe, vec)
+        if batched_probe:
+            # batched-probe kernel in locate-only mode: each memory server
+            # resolves its masked local slots in ONE launch, then a single
+            # payload gather (DESIGN.md §8). Key resolution stays the
+            # partitioned lookup_shard + psum above — the bucket array is
+            # range-partitioned, so no single shard can walk a whole probe
+            # sequence. gather_version over the kernel's locator reproduces
+            # read_visible bit-exactly (the lock-step-oracle contract), so
+            # the psum/masking combine below is untouched.
+            from repro.kernels.hash_probe import ops as probe_ops
+            _, f_loc, src, pos = probe_ops.batched_probe(
+                None, None, table, vec, safe, None, None)
+            hdr_f, data_f = mvcc.gather_version(
+                table, safe, mvcc.VersionLoc(found=f_loc, src=src, pos=pos))
+            vr = mvcc.VisibleRead(
+                hdr=hdr_f, data=data_f, found=f_loc,
+                from_current=f_loc & (src == mvcc.SRC_CURRENT),
+                from_ovf=f_loc & (src == mvcc.SRC_OVF))
+        else:
+            vr = mvcc.read_visible(table, safe, vec)
         rh = jnp.where(inside[:, None], vr.hdr, 0)
         rd = jnp.where(inside[:, None], vr.data, 0)
         fnd = jnp.where(inside, vr.found, False)
@@ -318,7 +351,7 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
             jnp.broadcast_to(slot_ids.astype(jnp.uint32)[:, None], (T, WS)),
             jnp.broadcast_to(cts[:, None], (T, WS)))
 
-        # ---- 5. validate+lock on the owning shard ------------------------
+        # ---- 5. stage the write-set CAS requests -------------------------
         wref = jnp.clip(batch.write_ref, 0, RS - 1)
         wslots = jnp.take_along_axis(read_slots, wref, axis=1)
         expected = jnp.take_along_axis(read_hdr, wref[:, :, None], axis=1)
@@ -329,30 +362,16 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         mine = req_active & winside
         prio = jnp.broadcast_to(
             batch.tid.astype(jnp.uint32)[:, None], (T, WS)).reshape(-1)
-        res = cas.arbitrate(table.cur_hdr, jnp.where(winside, wloc, 0),
-                            expected.reshape(-1, 2), prio, mine)
-        granted = anno.tag(res.granted, anno.LOCK_GRANTED)
-        table = table._replace(cur_hdr=res.new_hdr)
-
-        K = table.n_old
-        vpos = jnp.mod(table.next_write[jnp.where(mine, wloc, 0)], K)
-        victim = table.old_hdr[jnp.where(mine, wloc, 0), vpos]
-        effective = granted & hdr_ops.is_moved(victim)
-
-        # ---- 6. global commit decision (psum of failures) ----------------
         txn_of_req = jnp.broadcast_to(
             jnp.arange(T, dtype=jnp.int32)[:, None], (T, WS)).reshape(-1)
-        failed_local = mine & ~effective
-        fails = jnp.zeros((T,), jnp.int32).at[txn_of_req].add(
-            failed_local.astype(jnp.int32))
-        fails = jax.lax.psum(fails, axis)
-        committed = anno.tag((fails == 0) & txn_found & active,
-                             anno.COMMIT_COMMITTED)
 
         # ---- 6b. append the WAL intent records (§6.2 — before install) ---
         # every memory server writes the identical entry into its resident
         # replica: the "journal to more than one server" broadcast. Slots
-        # are logged GLOBAL so any survivor can replay the whole pool.
+        # are logged GLOBAL so any survivor can replay the whole pool. The
+        # intent depends only on commit-phase INPUTS (never a CAS outcome),
+        # so staging it before either commit rendering below leaves the
+        # journal bytes identical on the fused and the unfused path.
         if with_journal:
             journal = wal.append_intent(
                 journal, batch.tid, vec,
@@ -360,15 +379,63 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
                                 new_data, req_active.reshape(T, WS)),
                 round_no=jround, seq=jseq)
 
-        # ---- 7./8. install / release on the owning shard -----------------
-        do_install = effective & committed[txn_of_req]
-        inst = mvcc.install(table, wloc, new_hdr.reshape(-1, 2),
-                            new_data.reshape(-1, W), do_install)
-        table = inst.table
-        release_mask = anno.tag(granted & ~committed[txn_of_req],
-                                anno.LOCK_RELEASED)
-        table = table._replace(
-            cur_hdr=cas.release(table.cur_hdr, wloc, release_mask))
+        std_vis = type(oracle).make_visible is VectorOracle.make_visible
+        if fused_commit:
+            # ---- 5.-9. fused: the decide/apply double-launch (§8) --------
+            # the same pure kernel runs twice per shard: a decide pass with
+            # ext_fails = 0 whose only used output is this shard's
+            # per-transaction failure counts (the psum is the global AND of
+            # phase 6), then the apply pass replays the identical
+            # tournament with ext_fails = total - local and writes the net
+            # state transition — bit-equal to the unfused arbitrate → psum
+            # → install → release rendering in the else-branch.
+            from repro.kernels.commit import ops as commit_ops
+            lslots = jnp.where(winside, wloc, 0)
+            dec = commit_ops.fused_commit(
+                table, vec, lslots, expected.reshape(-1, 2), prio, mine,
+                txn_of_req, new_hdr.reshape(-1, 2), new_data.reshape(-1, W),
+                txn_found & active, slot_ids, cts,
+                jnp.zeros((T,), jnp.int32))
+            ext_fails = jax.lax.psum(dec.fails, axis) - dec.fails
+            fc = commit_ops.fused_commit(
+                table, vec, lslots, expected.reshape(-1, 2), prio, mine,
+                txn_of_req, new_hdr.reshape(-1, 2), new_data.reshape(-1, W),
+                txn_found & active, slot_ids, cts, ext_fails)
+            table = fc.table
+            granted = anno.tag(fc.granted, anno.LOCK_GRANTED)
+            committed = anno.tag(fc.committed, anno.COMMIT_COMMITTED)
+            do_install = fc.do_install
+            release_mask = anno.tag(granted & ~committed[txn_of_req],
+                                    anno.LOCK_RELEASED)
+        else:
+            # ---- 5. validate+lock on the owning shard --------------------
+            res = cas.arbitrate(table.cur_hdr, jnp.where(winside, wloc, 0),
+                                expected.reshape(-1, 2), prio, mine)
+            granted = anno.tag(res.granted, anno.LOCK_GRANTED)
+            table = table._replace(cur_hdr=res.new_hdr)
+
+            K = table.n_old
+            vpos = jnp.mod(table.next_write[jnp.where(mine, wloc, 0)], K)
+            victim = table.old_hdr[jnp.where(mine, wloc, 0), vpos]
+            effective = granted & hdr_ops.is_moved(victim)
+
+            # ---- 6. global commit decision (psum of failures) ------------
+            failed_local = mine & ~effective
+            fails = jnp.zeros((T,), jnp.int32).at[txn_of_req].add(
+                failed_local.astype(jnp.int32))
+            fails = jax.lax.psum(fails, axis)
+            committed = anno.tag((fails == 0) & txn_found & active,
+                                 anno.COMMIT_COMMITTED)
+
+            # ---- 7./8. install / release on the owning shard -------------
+            do_install = effective & committed[txn_of_req]
+            inst = mvcc.install(table, wloc, new_hdr.reshape(-1, 2),
+                                new_data.reshape(-1, W), do_install)
+            table = inst.table
+            release_mask = anno.tag(granted & ~committed[txn_of_req],
+                                    anno.LOCK_RELEASED)
+            table = table._replace(
+                cur_hdr=cas.release(table.cur_hdr, wloc, release_mask))
         n_installs = jax.lax.psum(jnp.sum(do_install.astype(jnp.int32)), axis)
         n_releases = jax.lax.psum(jnp.sum(release_mask.astype(jnp.int32)),
                                   axis)
@@ -376,8 +443,11 @@ def distributed_round(mesh: Mesh, axis: str, oracle: VectorOracle,
         # ---- 9. make visible (identical update as the reference path) ----
         if with_journal:   # outcome record after the global decision (§3.2)
             journal = wal.append_outcome(journal, batch.tid, committed)
-        vec = oracle.make_visible(
-            VectorState(vec=vec), batch.tid, cts, committed).vec
+        if fused_commit and std_vis:
+            vec = fc.vec   # the kernel's in-launch scatter-max (phase 9)
+        else:
+            vec = oracle.make_visible(
+                VectorState(vec=vec), batch.tid, cts, committed).vec
         if shard_vector:
             if padded_slots != oracle.n_slots:
                 vec = jnp.concatenate(

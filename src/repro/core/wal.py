@@ -40,6 +40,13 @@ Compute-server failures: servers are stateless; a *monitoring* compute server
 detects the failure and releases abandoned locks using the journal's intent
 records — every unresolved entry in the live window, not just the latest
 (a thread can die with multiple in-flight sub-round entries unresolved).
+
+The fused commit path (``repro.kernels.commit``, DESIGN.md §8) preserves
+the before-install ordering by staging :func:`append_intent` BEFORE either
+commit rendering runs — intents depend only on commit-phase *inputs*
+(slots, headers, payloads, the read vector), never on the decision, so the
+fused and unfused engines write byte-identical journals and recovery never
+sees a kernel-specific log shape.
 """
 from __future__ import annotations
 

@@ -66,6 +66,11 @@ class TPCCConfig:
     layout: str = "table_major"      # or "warehouse_major" (§7.3 locality)
     key_addressed: bool = False      # §5.2: resolve item/stock/customer
     #   reads through the hash index instead of analytic slots
+    fused_commit: bool = False       # DESIGN.md §8: run the commit phases
+    #   (validate/lock/install/make-visible/unlock) as one Pallas launch
+    batched_probe: bool = False      # §8: resolve the whole read-set in one
+    #   batched probe-kernel launch (both flags are access-path choices —
+    #   bit-identical to the unfused protocol rendering)
 
 
 class TPCCLayout(NamedTuple):
@@ -608,7 +613,9 @@ def neworder_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                        directory=st.directory if keyed is not None else None,
                        keyed=keyed, dir_max_probes=DIR_PROBES,
                        journal=journal, journal_round=round_no,
-                       journal_seq=_JSEQ_NEWORDER)
+                       journal_seq=_JSEQ_NEWORDER,
+                       fused_commit=cfg.fused_commit,
+                       batched_probe=cfg.batched_probe)
     tbl, idx, extends, o_id, journal = _neworder_inserts(
         cfg, lay, st, oracle, out.table, out.oracle_state.vec, out.committed,
         out.read_data, inp, round_no, journal=out.journal)
@@ -660,7 +667,8 @@ def make_distributed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
         mesh, axis, oracle,
         lambda rh, rd, vec, aux: _neworder_new_data(rd, aux),
         shard_records, shard_vector=shard_vector, n_dir_buckets=n_dir,
-        dir_max_probes=DIR_PROBES, with_journal=with_journal)
+        dir_max_probes=DIR_PROBES, with_journal=with_journal,
+        fused_commit=cfg.fused_commit, batched_probe=cfg.batched_probe)
     gc_fn = store.distributed_gc_round(mesh, axis, shard_vector=shard_vector,
                                        n_vec_slots=oracle.n_slots)
     return DistEngine(round_fn=round_fn, mesh=mesh, axis=axis,
@@ -757,12 +765,14 @@ def make_mixed_engine(cfg: TPCCConfig, lay: TPCCLayout, mesh, axis: str,
         mesh, axis, oracle,
         lambda rh, rd, vec, aux: _payment_new_data(rd, aux),
         base.shard_records, shard_vector=shard_vector,
-        with_journal=with_journal)
+        with_journal=with_journal,
+        fused_commit=cfg.fused_commit, batched_probe=cfg.batched_probe)
     del_fn, _ = store.distributed_round(
         mesh, axis, oracle,
         lambda rh, rd, vec, aux: _delivery_new_data(rd, aux),
         base.shard_records, shard_vector=shard_vector,
-        with_journal=with_journal)
+        with_journal=with_journal,
+        fused_commit=cfg.fused_commit, batched_probe=cfg.batched_probe)
     ro_fn = store.distributed_readonly_round(
         mesh, axis, base.shard_records, shard_vector=shard_vector,
         n_dir_buckets=base.n_dir_buckets, dir_max_probes=DIR_PROBES)
@@ -1700,7 +1710,9 @@ def payment_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                        lambda rh, rd, vec: _payment_new_data(rd, inp),
                        rts_vec=rts_vec, active=active,
                        journal=journal, journal_round=round_no,
-                       journal_seq=_JSEQ_PAYMENT)
+                       journal_seq=_JSEQ_PAYMENT,
+                       fused_commit=cfg.fused_commit,
+                       batched_probe=cfg.batched_probe)
     tbl, hist_cursor, journal = _payment_insert(
         cfg, lay, st, oracle, out.table, out.oracle_state.vec, out.committed,
         inp, round_no=round_no, journal=out.journal)
@@ -2051,7 +2063,9 @@ def delivery_round(cfg: TPCCConfig, lay: TPCCLayout, st: TPCCState,
                        lambda rh, rd, v: _delivery_new_data(rd, aux),
                        rts_vec=rts_vec, active=active,
                        journal=journal, journal_round=round_no,
-                       journal_seq=_JSEQ_DELIVERY)
+                       journal_seq=_JSEQ_DELIVERY,
+                       fused_commit=cfg.fused_commit,
+                       batched_probe=cfg.batched_probe)
     nam = st.nam._replace(table=out.table, oracle_state=out.oracle_state)
     ops = _delivery_preread_ops(out.ops, _n_active(batch, active),
                                 out.table.payload_width)

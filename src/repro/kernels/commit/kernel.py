@@ -1,0 +1,172 @@
+"""Fused SI commit-path Pallas TPU kernel (paper §3.1 Listing 1, lines 10-31).
+
+One launch executes the whole write-side of the protocol over the header
+planes of the record pool: validate + CAS-lock (the scatter-min tournament
+of ``core/cas.py``), the §5.1 install-feasibility check against the
+circular old-version ring, the per-transaction commit decision, the install
+of committed write-sets (current → ring, new version in place), the release
+of aborted transactions' locks, and the make-visible scatter-max into the
+timestamp vector — all VMEM-resident (headers + ring counters + vector for
+a 64 k-record pool with K=8 is ~5 MB).
+
+The structural win over the unfused jnp path is the **net-transition
+fusion**: within one round, setting a lock and releasing it cancel
+algebraically — a granted-but-aborted slot ends bit-identical to its
+pre-lock header, and a committed slot ends at the new unlocked header. No
+observer exists inside the launch, so the kernel applies ONE scatter per
+header plane (install slots only) where the unfused path makes three passes
+over ``cur_hdr`` (lock-set, install, release). The intermediate locked
+state is never materialized; the emitted ``granted``/``committed``/
+``do_install`` masks let the caller reconstruct every per-request outcome
+(and the release mask as ``granted & ~committed[txn]``) bit-exactly.
+
+Payloads never enter the kernel (DESIGN.md §8): the wrapper in ``ops.py``
+applies the two payload scatters outside, gated on the kernel's install
+mask — mirroring the probe kernel's headers-first / one-payload-gather
+discipline.
+
+Cross-shard composition: ``ext_fails`` (int32 [T]) adds failing-request
+counts observed on other shards to the commit decision. The sharded
+deployment launches the kernel twice per shard — a decide pass with
+``ext_fails = 0`` whose per-transaction ``fails`` output is psum'd, then an
+apply pass with ``ext_fails = total - local`` — the same kernel, purely
+deterministic, so the state transition equals the unfused global-AND path.
+
+Lock-step oracle: ``repro.kernels.commit.ref.fused_commit_ref`` — the
+production helper ``si.commit_write_sets`` (the exact body the unfused
+``si.run_round`` executes) plus the vector oracle's make-visible
+scatter-max. Differentially tested in tests/test_kernels.py, including
+contention (duplicate slots), abort lanes (stale expectations, unmovable
+ring victims) and ring wraparound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NO_WINNER = 0xFFFFFFFF
+
+
+def _commit_kernel(cur_ref, old_ref, nw_ref, vec_ref,
+                   rs_ref, exp_ref, prio_ref, act_ref, txn_ref,
+                   new_ref, ok_ref, slot_ref, cts_ref, ef_ref,
+                   o_cur_ref, o_old_ref, o_nw_ref, o_vec_ref,
+                   o_granted_ref, o_committed_ref, o_install_ref,
+                   o_fails_ref, *, n_old: int, meta: int, cts_ix: int,
+                   locked_bit: int, moved_bit: int):
+    cur = cur_ref[...]          # uint32 [R, 2]   interleaved (meta, cts)
+    old = old_ref[...]          # uint32 [R*K, 2] row-major flattened rings
+    nw = nw_ref[...]            # int32  [R]      ring next-write counters
+    rs = rs_ref[...]            # int32  [Q]      request target slots
+    exp = exp_ref[...]          # uint32 [Q, 2]   expected headers
+    prio = prio_ref[...]        # uint32 [Q]      round-unique priorities
+    act = act_ref[...]          # bool   [Q]      active requests
+    txn = txn_ref[...]          # int32  [Q]      owning transaction
+    new = new_ref[...]          # uint32 [Q, 2]   new headers
+    txn_ok = ok_ref[...]        # bool   [T]      txn_found & active
+    vslot = slot_ref[...]       # int32  [T]      oracle slot per transaction
+    cts = cts_ref[...]          # uint32 [T]      commit timestamps
+    ext_fails = ef_ref[...]     # int32  [T]      failures on other shards
+
+    R = cur.shape[0]
+    lb = jnp.uint32(locked_bit)
+    mb = jnp.uint32(moved_bit)
+    safe = jnp.where(act, rs, 0)
+
+    # ---- validate + lock: the cas.arbitrate scatter-min tournament -------
+    no_winner = jnp.uint32(NO_WINNER)
+    mprio = jnp.where(act, prio, no_winner)
+    arb = jnp.full((R,), no_winner, jnp.uint32).at[safe].min(mprio)
+    won = act & (arb[safe] == mprio) & (mprio != no_winner)
+    installed = cur[safe]       # [Q, 2] header of the target slot
+    im = installed[:, meta]
+    ic = installed[:, cts_ix]
+    matches = (im == exp[:, meta]) & (ic == exp[:, cts_ix])  # 8-byte compare
+    not_locked = (im & lb) == 0
+    granted = won & matches & not_locked
+
+    # ---- install feasibility: circular victim must be reusable (§5.1) ----
+    wpos = jnp.mod(nw[safe], n_old)
+    vic = old[safe * n_old + wpos, meta]
+    effective = granted & ((vic & mb) != 0)
+
+    # ---- commit decision: global AND over the write-set ------------------
+    fails = jnp.zeros(txn_ok.shape, jnp.int32).at[txn].add(
+        (act & ~effective).astype(jnp.int32))
+    committed = (fails + ext_fails == 0) & txn_ok
+    do_install = effective & committed[txn]
+
+    # ---- net state transition: one scatter per header plane --------------
+    # lock-set + release cancel within the launch; only install slots move.
+    # Inactive / aborted lanes route out of bounds and are dropped.
+    iidx = jnp.where(do_install, safe, R)
+    inst = jnp.stack([new[:, meta] & ~lb, new[:, cts_ix]], axis=-1)
+    o_cur_ref[...] = cur.at[iidx].set(inst, mode="drop")
+    # previous current version → ring victim slot, lock + moved cleared
+    oidx = jnp.where(do_install, safe * n_old + wpos, R * n_old)
+    vrow = jnp.stack([im & ~lb & ~mb, ic], axis=-1)
+    o_old_ref[...] = old.at[oidx].set(vrow, mode="drop")
+    o_nw_ref[...] = nw.at[iidx].add(1, mode="drop")
+
+    # ---- make visible: bump own T_R slot (VectorOracle's scatter-max) ----
+    o_vec_ref[...] = vec_ref[...].at[vslot].max(
+        jnp.where(committed, cts, jnp.uint32(0)))
+
+    o_granted_ref[...] = granted
+    o_committed_ref[...] = committed
+    o_install_ref[...] = do_install
+    o_fails_ref[...] = fails
+
+
+def fused_commit(cur_hdr, old_hdr, next_write, vec, req_slots, req_expected,
+                 req_prio, req_active, txn_of_req, new_hdr, txn_ok, txn_slot,
+                 cts, ext_fails, *, n_old: int, interpret: bool = False):
+    """cur_hdr: uint32 [R, 2]; old_hdr: uint32 [R*K, 2] (row-major flattened
+    rings) — both in the engine's native interleaved (meta, cts) layout, so
+    the launch boundary performs NO plane de-interleave/re-pack passes;
+    next_write: int32 [R]; vec: uint32 [n_slots]; requests (flat,
+    ``Q = T*WS``): req_slots int32, req_expected/new_hdr uint32 [Q, 2],
+    req_prio uint32, req_active bool, txn_of_req int32; per-transaction:
+    txn_ok bool [T], txn_slot int32 [T], cts uint32 [T], ext_fails int32 [T].
+
+    Returns ``(cur_hdr, old_hdr, next_write, vec, granted [Q],
+    committed [T], do_install [Q], fails [T])`` — the post-round header
+    planes plus the outcome masks; payload scatters are the caller's
+    (``ops.fused_commit`` applies them on ``do_install``)."""
+    from repro.core.header import CTS, LOCKED_BIT, META, MOVED_BIT
+    R = cur_hdr.shape[0]
+    Q = req_slots.shape[0]
+    T = txn_ok.shape[0]
+    kernel = functools.partial(
+        _commit_kernel, n_old=n_old, meta=int(META), cts_ix=int(CTS),
+        locked_bit=int(LOCKED_BIT), moved_bit=int(MOVED_BIT))
+    ins = [cur_hdr, old_hdr, next_write, vec,
+           req_slots, req_expected, req_prio, req_active, txn_of_req,
+           new_hdr, txn_ok, txn_slot, cts, ext_fails]
+    out_shape = [
+        jax.ShapeDtypeStruct((R, 2), jnp.uint32),          # cur headers
+        jax.ShapeDtypeStruct((R * n_old, 2), jnp.uint32),  # old-ring headers
+        jax.ShapeDtypeStruct((R,), jnp.int32),             # next_write
+        jax.ShapeDtypeStruct(vec.shape, jnp.uint32),       # timestamp vector
+        jax.ShapeDtypeStruct((Q,), jnp.bool_),             # granted
+        jax.ShapeDtypeStruct((T,), jnp.bool_),             # committed
+        jax.ShapeDtypeStruct((Q,), jnp.bool_),             # do_install
+        jax.ShapeDtypeStruct((T,), jnp.int32),             # fails
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(a.shape, lambda i, n=a.ndim: (0,) * n)
+                  for a in ins],
+        out_specs=[pl.BlockSpec(s.shape, lambda i, n=len(s.shape): (0,) * n)
+                   for s in out_shape],
+        out_shape=out_shape,
+        # the four state planes are read-modify-write: alias them onto their
+        # outputs so the launch updates headers in place instead of staging
+        # a second copy of every plane (the win the fusion exists to bank)
+        input_output_aliases={0: 0, 1: 1, 2: 2, 3: 3},
+        interpret=interpret,
+    )(*ins)

@@ -1,0 +1,90 @@
+"""Jit'd wrapper for the fused SI commit-path kernel.
+
+Takes the :class:`~repro.core.mvcc.VersionedTable` and the timestamp vector
+directly, stages the header planes into VMEM in their native interleaved
+``[·, 2]`` layout (zero conversion passes at the launch boundary — the
+planes alias onto the kernel's outputs and update in place), and applies
+the two payload scatters OUTSIDE the launch on the kernel's install mask —
+the §8 headers-only contract (payload rings at realistic K×W would blow the
+VMEM budget, and the payload movement is identical work on both the fused
+and the unfused path, so it is never part of the differential).
+
+The wrapper's output is bit-identical to
+``repro.kernels.commit.ref.fused_commit_ref`` (the production
+``si.commit_write_sets`` + the vector oracle's make-visible), which is in
+turn the exact body the unfused ``si.run_round`` executes — proven in
+tests/test_kernels.py and end-to-end through the mesh equivalence harness.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import header as hdr_ops
+from repro.core.mvcc import VersionedTable
+from repro.kernels.commit.kernel import fused_commit as _kernel
+
+
+class FusedCommitOut(NamedTuple):
+    """Post-commit state + outcome masks of one fused commit launch.
+
+    ``release_mask`` is intentionally absent: the kernel never materializes
+    the intermediate locked state (lock-set and release cancel in the net
+    transition), and callers reconstruct it bit-exactly as
+    ``granted & ~committed[txn_of_req]`` when they need the telemetry.
+    """
+    table: VersionedTable
+    vec: jnp.ndarray         # uint32 [n_slots] — post-make-visible vector
+    granted: jnp.ndarray     # bool  [Q]
+    committed: jnp.ndarray   # bool  [T]
+    do_install: jnp.ndarray  # bool  [Q]
+    fails: jnp.ndarray       # int32 [T] — this launch's failing requests
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_commit(table: VersionedTable, vec, req_slots, req_expected,
+                 req_prio, req_active, txn_of_req, new_hdr, new_data,
+                 txn_ok, txn_slot, cts, ext_fails, *,
+                 interpret=None) -> FusedCommitOut:
+    """One fused commit launch over a flat request array (``Q = T*WS``).
+
+    Arguments mirror :func:`repro.core.si.commit_write_sets` (``req_expected``
+    and ``new_hdr`` are ``[Q, 2]`` header pairs) plus the make-visible
+    inputs: ``vec`` (the oracle vector), ``txn_slot`` (each transaction's
+    vector slot), ``cts`` and ``ext_fails`` (remote failure counts — zeros
+    on a single shard; see the kernel's decide/apply double-launch note).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    R = table.n_records
+    K = table.n_old
+    (cur_hdr, old_hdr, nw, new_vec, granted, committed, do_install,
+     fails) = _kernel(
+        table.cur_hdr, table.old_hdr.reshape(R * K, 2),
+        table.next_write, vec,
+        jnp.asarray(req_slots, jnp.int32), req_expected,
+        req_prio, req_active, txn_of_req, new_hdr,
+        txn_ok, txn_slot, cts, ext_fails,
+        n_old=K, interpret=interpret)
+
+    # payload scatters outside the launch, gated on the kernel's install
+    # mask — exactly mvcc.install's payload path (same safe slots, same
+    # ring position, same OOB-drop routing)
+    safe = jnp.where(req_active, jnp.asarray(req_slots, jnp.int32), 0)
+    wpos = jnp.mod(table.next_write[safe], K)
+    idx = jnp.where(do_install, safe, R)
+    old_data = table.old_data.at[idx, wpos].set(table.cur_data[safe],
+                                                mode="drop")
+    cur_data = table.cur_data.at[idx].set(new_data, mode="drop")
+    new_table = table._replace(
+        cur_hdr=cur_hdr,
+        cur_data=cur_data,
+        old_hdr=old_hdr.reshape(R, K, 2),
+        old_data=old_data,
+        next_write=nw)
+    return FusedCommitOut(table=new_table, vec=new_vec, granted=granted,
+                          committed=committed, do_install=do_install,
+                          fails=fails)

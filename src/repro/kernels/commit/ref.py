@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused commit kernel: the PRODUCTION commit body.
+
+Unlike a hand-written mirror, this oracle *is* the code the engine runs when
+``fused_commit`` is off — :func:`repro.core.si.commit_write_sets` (phases
+5/7/8 of Listing 1: arbitrated CAS validate+lock, install, abort-path
+release) followed by the vector oracle's make-visible scatter-max (phase 9,
+:meth:`repro.core.tsoracle.VectorOracle.make_visible` semantics). The
+differential test in tests/test_kernels.py therefore proves the kernel
+bit-identical to the unfused engine path itself, not to a lookalike.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import si
+from repro.core.mvcc import VersionedTable
+from repro.kernels.commit.ops import FusedCommitOut
+
+
+def fused_commit_ref(table: VersionedTable, vec, req_slots, req_expected,
+                     req_prio, req_active, txn_of_req, new_hdr, new_data,
+                     txn_ok, txn_slot, cts, ext_fails) -> FusedCommitOut:
+    """Same signature and :class:`FusedCommitOut` contract as
+    ``repro.kernels.commit.ops.fused_commit``."""
+    co = si.commit_write_sets(
+        table, jnp.asarray(req_slots, jnp.int32), req_expected, req_prio,
+        req_active, txn_of_req, new_hdr, new_data, txn_ok,
+        ext_fails=ext_fails)
+    new_vec = vec.at[txn_slot].max(
+        jnp.where(co.committed, cts, jnp.uint32(0)))
+    return FusedCommitOut(table=co.table, vec=new_vec, granted=co.granted,
+                          committed=co.committed, do_install=co.do_install,
+                          fails=co.fails)

@@ -33,21 +33,18 @@ from jax.experimental import pallas as pl
 EMPTY = 0
 
 
-def _probe_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
-                  vm_ref, vc_ref, vn_ref, ts_ref, q_ref,
-                  o_slot_ref, o_found_ref, o_src_ref, o_pos_ref, *,
-                  max_probes: int, n_buckets: int, n_old: int, n_ovf: int,
-                  thread_shift: int, deleted_bit: int, moved_bit: int):
-    keys1 = q_ref[...] + jnp.uint32(1)                  # [bq]
+def _dir_probe(dkeys, dvals, keys1, *, max_probes: int, n_buckets: int):
+    """Open-addressing directory probe over staged bucket arrays.
+
+    The loop tracks only the hit BUCKET; the value is gathered once after
+    the loop — half the per-probe gather traffic of the unfused lookup,
+    which fetches the bucket's key AND value at every probe distance.
+    Returns ``(val, got)``: the resolved record slot (-1 when absent or
+    invalidated) and the hit mask.
+    """
     h = (keys1 - jnp.uint32(1)) * jnp.uint32(2654435769)
     base = (h % jnp.uint32(n_buckets)).astype(jnp.int32)
-    dkeys = dk_ref[...]
-    dvals = dv_ref[...]
 
-    # ---- 1. directory probe (open addressing, linear) -------------------
-    # The loop tracks only the hit BUCKET; the value is gathered once after
-    # the loop — half the per-probe gather traffic of the unfused lookup,
-    # which fetches the bucket's key AND value at every probe distance.
     def body(p, carry):
         hit_idx, key_hit, done = carry
         idx = jnp.mod(base + p, n_buckets)
@@ -66,24 +63,31 @@ def _probe_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
                                             (hit_idx, key_hit, done))
     val = jnp.where(key_hit, dvals[hit_idx], -1)
     got = key_hit & (val >= 0)       # deleted entries (val<0) ⇒ not found
-    slot = jnp.where(got, val, 0)    # safe index for the header gathers
+    return val, got
 
-    tsvec = ts_ref[...]
+
+def _resolve_versions(slot, cm, cc, om, oc, nw, vm, vc, vn, tsvec, *,
+                      n_old: int, n_ovf: int, thread_shift: int,
+                      deleted_bit: int, moved_bit: int):
+    """The §5.1 version resolution over staged header planes — the exact
+    ``mvcc.locate_visible`` order (current → old ring newest-first →
+    overflow ring), shared by the single-key probe kernel and the batched
+    multi-key kernel so the two cannot diverge. ``slot`` must already be a
+    safe (in-range) record index. Returns ``(found, src, pos)``.
+    """
 
     def usable(meta, cts):
         tid = (meta >> thread_shift).astype(jnp.int32)
         vis = cts <= tsvec[tid]
         return vis & ((meta & jnp.uint32(deleted_bit)) == 0)
 
-    # ---- 2. current version (the common-case single read) ---------------
-    cur_ok = usable(cm_ref[...][slot], cc_ref[...][slot])
+    # ---- current version (the common-case single read) ------------------
+    cur_ok = usable(cm[slot], cc[slot])
 
-    # ---- 3. old-version ring, newest → oldest (one [bq, K] gather) ------
-    om = om_ref[...]
-    oc = oc_ref[...]
-    nw = nw_ref[...][slot]
+    # ---- old-version ring, newest → oldest (one [bq, K] gather) ---------
+    nwv = nw[slot]
     ages = jnp.arange(n_old, dtype=jnp.int32)[None, :]   # 0 = newest
-    pos = jnp.mod(nw[:, None] - 1 - ages, n_old)         # [bq, K]
+    pos = jnp.mod(nwv[:, None] - 1 - ages, n_old)        # [bq, K]
     oidx = slot[:, None] * n_old + pos
     m = om[oidx]
     c = oc[oidx]
@@ -96,10 +100,8 @@ def _probe_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
     first = jnp.argmax(ok, axis=1)
     old_pos = jnp.take_along_axis(pos, first[:, None], axis=1)[:, 0]
 
-    # ---- 4. overflow ring, newest → oldest (one [bq, KO] gather) --------
-    vm = vm_ref[...]
-    vc = vc_ref[...]
-    on = vn_ref[...][slot]
+    # ---- overflow ring, newest → oldest (one [bq, KO] gather) -----------
+    on = vn[slot]
     oages = jnp.arange(n_ovf, dtype=jnp.int32)[None, :]
     vpos = jnp.mod(on[:, None] - 1 - oages, n_ovf)       # [bq, KO]
     vidx = slot[:, None] * n_ovf + vpos
@@ -110,11 +112,73 @@ def _probe_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
     ovf_pos = jnp.take_along_axis(vpos, vfirst[:, None], axis=1)[:, 0]
 
     src = jnp.where(cur_ok, 0, jnp.where(any_old, 1, 2)).astype(jnp.int32)
-    pos = jnp.where(cur_ok, 0, jnp.where(any_old, old_pos, ovf_pos))
+    rpos = jnp.where(cur_ok, 0, jnp.where(any_old, old_pos, ovf_pos))
+    return (cur_ok | any_old | any_ovf), src, rpos.astype(jnp.int32)
+
+
+def _probe_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
+                  vm_ref, vc_ref, vn_ref, ts_ref, q_ref,
+                  o_slot_ref, o_found_ref, o_src_ref, o_pos_ref, *,
+                  max_probes: int, n_buckets: int, n_old: int, n_ovf: int,
+                  thread_shift: int, deleted_bit: int, moved_bit: int):
+    keys1 = q_ref[...] + jnp.uint32(1)                  # [bq]
+    # ---- 1. directory probe (open addressing, linear) -------------------
+    val, got = _dir_probe(dk_ref[...], dv_ref[...], keys1,
+                          max_probes=max_probes, n_buckets=n_buckets)
+    slot = jnp.where(got, val, 0)    # safe index for the header gathers
+
+    # ---- 2.-4. §5.1 version resolution over the three regions -----------
+    found, src, pos = _resolve_versions(
+        slot, cm_ref[...], cc_ref[...], om_ref[...], oc_ref[...],
+        nw_ref[...], vm_ref[...], vc_ref[...], vn_ref[...], ts_ref[...],
+        n_old=n_old, n_ovf=n_ovf, thread_shift=thread_shift,
+        deleted_bit=deleted_bit, moved_bit=moved_bit)
     o_slot_ref[...] = jnp.where(got, val, -1)
-    o_found_ref[...] = got & (cur_ok | any_old | any_ovf)
+    o_found_ref[...] = got & found
     o_src_ref[...] = jnp.where(got, src, 0)
-    o_pos_ref[...] = jnp.where(got, pos, 0).astype(jnp.int32)
+    o_pos_ref[...] = jnp.where(got, pos, 0)
+
+
+def _batched_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
+                    vm_ref, vc_ref, vn_ref, ts_ref, fb_ref, k_ref, km_ref,
+                    o_slot_ref, o_found_ref, o_src_ref, o_pos_ref, *,
+                    max_probes: int, n_buckets: int, n_old: int, n_ovf: int,
+                    thread_shift: int, deleted_bit: int, moved_bit: int):
+    """Batched multi-key read-set resolution (one launch per read-set).
+
+    Lanes come in two flavours, mixed freely: key-addressed lanes
+    (``km`` set) probe the directory for their record slot; slot-addressed
+    lanes take their slot from ``fb`` directly. Every lane then runs the
+    §5.1 version resolution. Contract difference vs ``_probe_kernel``: the
+    emitted ``src``/``pos`` are the TRUE resolution of the lane's safe slot
+    even on a keyed miss (which resolves slot 0, exactly like the unfused
+    engine path) — so one ``mvcc.gather_version`` on the outputs reproduces
+    ``mvcc.read_visible``'s header/payload bit-exactly in all cases.
+    ``found`` is the engine's per-read outcome: key hit AND a visible
+    version. With ``n_buckets == 0`` (static) the directory stage is
+    skipped entirely — the locate-only mode the sharded deployment uses for
+    its resident records.
+    """
+    fb = fb_ref[...]
+    km = km_ref[...]
+    if n_buckets:
+        keys1 = k_ref[...] + jnp.uint32(1)
+        val, got = _dir_probe(dk_ref[...], dv_ref[...], keys1,
+                              max_probes=max_probes, n_buckets=n_buckets)
+    else:
+        val = jnp.full(fb.shape, -1, jnp.int32)
+        got = jnp.zeros(fb.shape, jnp.bool_)
+    resolved = jnp.where(km, jnp.where(got, val, 0), fb)
+    key_ok = ~km | got
+    found, src, pos = _resolve_versions(
+        resolved, cm_ref[...], cc_ref[...], om_ref[...], oc_ref[...],
+        nw_ref[...], vm_ref[...], vc_ref[...], vn_ref[...], ts_ref[...],
+        n_old=n_old, n_ovf=n_ovf, thread_shift=thread_shift,
+        deleted_bit=deleted_bit, moved_bit=moved_bit)
+    o_slot_ref[...] = jnp.where(km, jnp.where(got, val, -1), fb)
+    o_found_ref[...] = key_ok & found
+    o_src_ref[...] = src
+    o_pos_ref[...] = pos
 
 
 def hash_probe(dir_keys, dir_vals, cur_meta, cur_cts, old_meta, old_cts,
@@ -154,4 +218,62 @@ def hash_probe(dir_keys, dir_vals, cur_meta, cur_cts, old_meta, old_cts,
                    jax.ShapeDtypeStruct((n_q * bq,), jnp.int32)],
         interpret=interpret,
     )(*whole, queries)
+    return tuple(o[:Q] for o in outs)
+
+
+def batched_probe(dir_keys, dir_vals, cur_meta, cur_cts, old_meta, old_cts,
+                  next_write, ovf_meta, ovf_cts, ovf_next, ts_vec,
+                  fallback_slots, keys, key_mask, *, n_old: int, n_ovf: int,
+                  max_probes: int = 16, bq: int = 256,
+                  interpret: bool = False):
+    """Batched multi-key read-set resolution: a whole read-set — keyed lanes
+    (``key_mask``) plus slot-addressed lanes (``fallback_slots``) — in one
+    kernel launch. ``dir_keys is None`` selects the static locate-only mode
+    (no directory stage at all; every lane is slot-addressed).
+
+    Returns ``(slot int32 [Q], found bool [Q], src int32 [Q], pos int32
+    [Q])``: ``slot`` is -1 exactly on a keyed miss; ``src``/``pos`` are the
+    full §5.1 resolution of the lane's SAFE slot (the miss lane resolves
+    slot 0, like the unfused path), so ``mvcc.gather_version`` on
+    ``where(slot >= 0, slot, 0)`` reproduces ``mvcc.read_visible``
+    bit-exactly. See ``repro.kernels.hash_probe.ref.batched_probe_ref``.
+    """
+    from repro.core.header import DELETED_BIT, MOVED_BIT, THREAD_SHIFT
+    fallback_slots = jnp.asarray(fallback_slots, jnp.int32)
+    Q = fallback_slots.shape[0]
+    if dir_keys is None:
+        nb = 0
+        dir_keys = jnp.zeros((1,), jnp.uint32)
+        dir_vals = jnp.zeros((1,), jnp.int32)
+    else:
+        nb = dir_keys.shape[0]
+    if keys is None:
+        keys = jnp.zeros((Q,), jnp.uint32)
+        key_mask = jnp.zeros((Q,), bool)
+    bq = min(bq, Q)
+    n_q = -(-Q // bq)
+    pad = n_q * bq - Q
+    if pad:   # pad lanes are slot-addressed reads of record 0, sliced off
+        fallback_slots = jnp.pad(fallback_slots, (0, pad))
+        keys = jnp.pad(keys, (0, pad))
+        key_mask = jnp.pad(key_mask, (0, pad))
+
+    kernel = functools.partial(
+        _batched_kernel, max_probes=max_probes, n_buckets=nb, n_old=n_old,
+        n_ovf=n_ovf, thread_shift=THREAD_SHIFT,
+        deleted_bit=int(DELETED_BIT), moved_bit=int(MOVED_BIT))
+    whole = [dir_keys, dir_vals, cur_meta, cur_cts, old_meta, old_cts,
+             next_write, ovf_meta, ovf_cts, ovf_next, ts_vec]
+    outs = pl.pallas_call(
+        kernel,
+        grid=(n_q,),
+        in_specs=[pl.BlockSpec(a.shape, lambda qi: (0,)) for a in whole]
+        + [pl.BlockSpec((bq,), lambda qi: (qi,)) for _ in range(3)],
+        out_specs=[pl.BlockSpec((bq,), lambda qi: (qi,)) for _ in range(4)],
+        out_shape=[jax.ShapeDtypeStruct((n_q * bq,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_q * bq,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n_q * bq,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_q * bq,), jnp.int32)],
+        interpret=interpret,
+    )(*whole, fallback_slots, keys, key_mask)
     return tuple(o[:Q] for o in outs)

@@ -14,6 +14,19 @@ import jax
 from repro.core import header as hdr_ops
 from repro.core.mvcc import VersionedTable
 from repro.kernels.hash_probe.kernel import hash_probe as _kernel
+from repro.kernels.hash_probe.kernel import batched_probe as _batched
+
+
+def _header_planes(table: VersionedTable):
+    """Split a table into the flat header planes the kernels stage into
+    VMEM (headers only — the §8 contract keeps payloads outside)."""
+    return (table.cur_hdr[:, hdr_ops.META], table.cur_hdr[:, hdr_ops.CTS],
+            table.old_hdr[..., hdr_ops.META].reshape(-1),
+            table.old_hdr[..., hdr_ops.CTS].reshape(-1),
+            table.next_write,
+            table.ovf_hdr[..., hdr_ops.META].reshape(-1),
+            table.ovf_hdr[..., hdr_ops.CTS].reshape(-1),
+            table.ovf_next)
 
 
 @functools.partial(jax.jit, static_argnames=("max_probes", "bq",
@@ -28,13 +41,29 @@ def hash_probe(dir_keys, dir_vals, table: VersionedTable, ts_vec, queries,
     K = table.n_old
     KO = table.ovf_hdr.shape[1]
     return _kernel(
-        dir_keys, dir_vals,
-        table.cur_hdr[:, hdr_ops.META], table.cur_hdr[:, hdr_ops.CTS],
-        table.old_hdr[..., hdr_ops.META].reshape(-1),
-        table.old_hdr[..., hdr_ops.CTS].reshape(-1),
-        table.next_write,
-        table.ovf_hdr[..., hdr_ops.META].reshape(-1),
-        table.ovf_hdr[..., hdr_ops.CTS].reshape(-1),
-        table.ovf_next, ts_vec, queries,
+        dir_keys, dir_vals, *_header_planes(table), ts_vec, queries,
         n_old=K, n_ovf=KO, max_probes=max_probes, bq=bq,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes", "bq",
+                                             "interpret"))
+def batched_probe(dir_keys, dir_vals, table: VersionedTable, ts_vec,
+                  fallback_slots, keys, key_mask, *, max_probes=16, bq=256,
+                  interpret=None):
+    """Batched multi-key read-set resolution: keyed lanes (``key_mask``)
+    probe the directory, slot-addressed lanes use ``fallback_slots``; every
+    lane's §5.1 version location is resolved in the same launch. Pass
+    ``dir_keys=None`` for the locate-only mode (no directory stage — the
+    sharded deployment's per-shard resolution). Returns (slot int32 [Q],
+    found bool [Q], src int32 [Q], pos int32 [Q]) matching
+    ``repro.kernels.hash_probe.ref.batched_probe_ref`` bit-exactly; gather
+    payloads with ``mvcc.gather_version`` (slot -1 ⇒ gather safe slot 0)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    K = table.n_old
+    KO = table.ovf_hdr.shape[1]
+    return _batched(
+        dir_keys, dir_vals, *_header_planes(table), ts_vec, fallback_slots,
+        keys, key_mask, n_old=K, n_ovf=KO, max_probes=max_probes, bq=bq,
         interpret=interpret)

@@ -34,3 +34,33 @@ def hash_probe_ref(dir_keys, dir_vals, table: mvcc.VersionedTable, ts_vec,
             kfound & loc.found,
             jnp.where(kfound, loc.src, 0),
             jnp.where(kfound, loc.pos, 0))
+
+
+def batched_probe_ref(dir_keys, dir_vals, table: mvcc.VersionedTable, ts_vec,
+                      fallback_slots, keys, key_mask, *,
+                      max_probes: int = 16):
+    """Oracle for the batched multi-key kernel: the production composition
+    ``hashtable.lookup`` (keyed lanes) → ``mvcc.locate_visible`` (all lanes)
+    — exactly the unfused path ``si.run_round`` takes through phase 2.
+
+    Contract difference vs :func:`hash_probe_ref`: ``src``/``pos`` are NOT
+    zeroed on a keyed miss — they carry the true resolution of the safe
+    slot (a miss resolves slot 0, as the engine's ``where(kfound, …, 0)``
+    does), so ``mvcc.gather_version`` over the outputs reproduces
+    ``mvcc.read_visible``'s header/payload bit-exactly for every lane.
+    ``found`` is the engine's per-read outcome (``key_ok & loc.found``)."""
+    fallback_slots = jnp.asarray(fallback_slots, jnp.int32)
+    if dir_keys is None:
+        kvals = jnp.zeros(fallback_slots.shape, jnp.int32)
+        kfound = jnp.zeros(fallback_slots.shape, bool)
+        keys = jnp.zeros(fallback_slots.shape, jnp.uint32)
+        key_mask = jnp.zeros(fallback_slots.shape, bool)
+    else:
+        kvals, kfound = ht.lookup(ht.HashTable(keys=dir_keys, vals=dir_vals),
+                                  keys, max_probes=max_probes)
+    km = key_mask
+    resolved = jnp.where(km, jnp.where(kfound, kvals, 0), fallback_slots)
+    key_ok = ~km | kfound
+    loc = mvcc.locate_visible(table, resolved, ts_vec)
+    return (jnp.where(km, jnp.where(kfound, kvals, -1), fallback_slots),
+            key_ok & loc.found, loc.src, loc.pos)

@@ -19,10 +19,20 @@ and sweeps the whole pool while each mesh shard snapshots into its own log
 and sweeps only its resident records — the per-shard sweep must be
 bit-identical too, and the GC telemetry (snapshot-miss vs contention abort
 split, overflow-read counts, ring peak) must agree exactly.
+
+With ``REPRO_EQUIV_FUSED=1`` in the environment the MESH deployment runs
+with the DESIGN.md §8 Pallas kernels switched on (``fused_commit`` +
+``batched_probe``) while the single-shard reference stays unfused — the
+strongest cross-check: the fused sharded engine must be bit-identical to
+the unfused single-shard protocol rendering across every workload, layout
+and the key-addressed mode.
 """
+import dataclasses
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+FUSED = os.environ.get("REPRO_EQUIV_FUSED", "") == "1"
 
 import jax
 import jax.numpy as jnp
@@ -73,8 +83,13 @@ def make_pair(cfg, mesh, *, seed=0):
     oracle_s = VectorOracle(cfg.n_threads)
     lay, st_s = tpcc.init_tpcc(cfg, oracle_s, jax.random.PRNGKey(seed))
     oracle_d = PartitionedVectorOracle(cfg.n_threads, n_parts=8)
-    lay_d, st_d = tpcc.init_tpcc(cfg, oracle_d, jax.random.PRNGKey(seed))
-    engine = tpcc.make_mixed_engine(cfg, lay_d, mesh, "mem", oracle_d,
+    # REPRO_EQUIV_FUSED=1: the mesh engine bakes the §8 kernels into its
+    # round executors (flags live in the cfg the builders close over); the
+    # single-shard reference above stays unfused
+    cfg_d = dataclasses.replace(cfg, fused_commit=FUSED,
+                                batched_probe=FUSED)
+    lay_d, st_d = tpcc.init_tpcc(cfg_d, oracle_d, jax.random.PRNGKey(seed))
+    engine = tpcc.make_mixed_engine(cfg_d, lay_d, mesh, "mem", oracle_d,
                                     shard_vector=True)
     st_d = tpcc.distribute_state(engine, st_d)
     if cfg.key_addressed:

@@ -18,12 +18,14 @@ import sys
 import pytest
 
 
-def _run_subprocess_check(script_name, marker):
+def _run_subprocess_check(script_name, marker, extra_env=None):
     script = os.path.join(os.path.dirname(__file__), script_name)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")),
          env.get("PYTHONPATH", "")])
+    if extra_env:
+        env.update(extra_env)
     out = subprocess.run([sys.executable, script], env=env,
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
@@ -34,6 +36,18 @@ def _run_subprocess_check(script_name, marker):
 def test_distributed_tpcc_matches_single_shard():
     _run_subprocess_check("_distributed_equiv_check.py",
                           "DISTRIBUTED_EQUIV_OK")
+
+
+@pytest.mark.slow
+def test_fused_kernels_match_single_shard_on_mesh():
+    """DESIGN.md §8: the mesh deployment with ``fused_commit`` +
+    ``batched_probe`` ON (commit kernel's decide/apply double-launch,
+    batched locate-only probe) against the UNFUSED single-shard reference —
+    same workloads, both layouts, key-addressed mode included. The kernels
+    are access paths, never semantics: everything must stay bit-identical."""
+    _run_subprocess_check("_distributed_equiv_check.py",
+                          "DISTRIBUTED_EQUIV_OK",
+                          extra_env={"REPRO_EQUIV_FUSED": "1"})
 
 
 @pytest.mark.slow

@@ -5,10 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.commit.ops import fused_commit
+from repro.kernels.commit.ref import fused_commit_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.hash_probe.ops import hash_probe
-from repro.kernels.hash_probe.ref import hash_probe_ref
+from repro.kernels.hash_probe.ops import batched_probe, hash_probe
+from repro.kernels.hash_probe.ref import batched_probe_ref, hash_probe_ref
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.mamba_scan.ref import mamba_scan_ref
 from repro.kernels.moe_gmm.ops import moe_gmm
@@ -276,3 +278,394 @@ def test_mamba_scan_sweep(B, S, Di, N, bd, chunk, dtype):
         else dict(rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **tol)
+
+
+# ----------------------------------------------------- batched probe -------
+def _batched_case(n_records, seed, *, with_dir=True, n_buckets=None,
+                  miss_frac=0.3, dup=True):
+    """Mixed read-set: keyed lanes (incl. misses and duplicate keys) and
+    slot-addressed fallback lanes over a table with populated rings."""
+    from repro.core import hashtable as ht
+    key = jax.random.PRNGKey(seed)
+    tbl = _probe_table(n_records, key)
+    rng = np.random.RandomState(seed)
+    Q = n_records + n_records // 2
+    fallback = jnp.asarray(rng.randint(0, n_records, Q), jnp.int32)
+    if not with_dir:
+        return None, None, tbl, fallback, None, None
+    n_buckets = n_buckets or 2 * n_records
+    keys = jnp.arange(1, n_records + 1, dtype=jnp.uint32) * jnp.uint32(7919)
+    t = ht.init(n_buckets)
+    t, _ = ht.insert(t, keys, jnp.arange(n_records, dtype=jnp.int32),
+                     max_probes=n_buckets)
+    t, _ = ht.delete(t, keys[1:3])           # invalidated entries → misses
+    lane_keys = jnp.asarray(keys)[jnp.asarray(
+        rng.randint(0, n_records, Q), jnp.int32)]
+    if dup:                                   # duplicate keys across lanes
+        lane_keys = lane_keys.at[1::4].set(lane_keys[0])
+    miss = jnp.asarray(rng.rand(Q) < miss_frac)
+    lane_keys = jnp.where(miss, jnp.uint32(0xDEAD), lane_keys)
+    key_mask = jnp.asarray(rng.rand(Q) < 0.6)
+    return t, keys, tbl, fallback, lane_keys, key_mask
+
+
+def _assert_batched_matches_ref(t, tbl, tsvec, fallback, lane_keys, key_mask,
+                                max_probes, bq=16):
+    dk, dv = (t.keys, t.vals) if t is not None else (None, None)
+    ker = batched_probe(dk, dv, tbl, tsvec, fallback, lane_keys, key_mask,
+                        max_probes=max_probes, bq=bq, interpret=True)
+    ref = batched_probe_ref(dk, dv, tbl, tsvec, fallback, lane_keys,
+                            key_mask, max_probes=max_probes)
+    for name, a, b in zip(("slot", "found", "src", "pos"), ker, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"batched:{name}")
+    return ker
+
+
+@pytest.mark.parametrize("n_records,bq", [(32, 8), (100, 32)])
+def test_batched_probe_sweep(n_records, bq):
+    """The batched multi-key kernel vs its production oracle over mixed
+    keyed/slot lanes with duplicate keys, absent keys and invalidated
+    directory entries, across visibility regimes — plus the per-lane
+    contract: keyed lanes equal the single-key kernel, a keyed miss is
+    exactly ``slot == -1``, and ``gather_version`` over the locator
+    reproduces ``read_visible`` bit-exactly for every lane."""
+    from repro.core import mvcc
+    t, _, tbl, fallback, lane_keys, key_mask = _batched_case(n_records, 7)
+    mp = 2 * n_records
+    for tsvec in (jnp.array([9, 9], jnp.uint32),
+                  jnp.array([9, 0], jnp.uint32),
+                  jnp.array([0, 0], jnp.uint32)):
+        slot, found, src, pos = _assert_batched_matches_ref(
+            t, tbl, tsvec, fallback, lane_keys, key_mask, mp, bq)
+        km = np.asarray(key_mask)
+        # keyed lanes == the single-key kernel (which zeroes src/pos on a
+        # miss — compare those two only where the lane resolved)
+        s1, f1, sr1, p1 = hash_probe(t.keys, t.vals, tbl, tsvec, lane_keys,
+                                     max_probes=mp, interpret=True)
+        np.testing.assert_array_equal(np.asarray(slot)[km],
+                                      np.asarray(s1)[km])
+        np.testing.assert_array_equal(np.asarray(found)[km],
+                                      np.asarray(f1)[km])
+        ok = km & np.asarray(found)
+        np.testing.assert_array_equal(np.asarray(src)[ok],
+                                      np.asarray(sr1)[ok])
+        np.testing.assert_array_equal(np.asarray(pos)[ok],
+                                      np.asarray(p1)[ok])
+        # a keyed miss is exactly slot == -1; no other lane is negative
+        miss = km & (np.asarray(slot) < 0)
+        assert miss.any(), "no keyed miss — sweep is vacuous"
+        assert not np.asarray(found)[miss].any()
+        assert (np.asarray(slot)[~km] >= 0).all()
+        # the engine's composition: gather at the safe slot reproduces the
+        # unfused read_visible header/payload bit-exactly on EVERY lane
+        safe = jnp.where(slot >= 0, slot, 0)
+        hdr_k, data_k = mvcc.gather_version(
+            tbl, safe, mvcc.VersionLoc(found=found, src=src, pos=pos))
+        vr = mvcc.read_visible(tbl, safe, tsvec)
+        np.testing.assert_array_equal(np.asarray(hdr_k), np.asarray(vr.hdr))
+        np.testing.assert_array_equal(np.asarray(data_k), np.asarray(vr.data))
+        key_ok = ~key_mask | (slot >= 0)
+        np.testing.assert_array_equal(np.asarray(found),
+                                      np.asarray(vr.found & key_ok))
+        np.testing.assert_array_equal(
+            np.asarray(found & (src == mvcc.SRC_CURRENT)),
+            np.asarray(vr.from_current & key_ok))
+        np.testing.assert_array_equal(
+            np.asarray(found & (src == mvcc.SRC_OVF)),
+            np.asarray(vr.from_ovf & key_ok))
+
+
+def test_batched_probe_locate_only_mode():
+    """``dir_keys=None`` (the mesh deployment's per-shard resolution): every
+    lane is slot-addressed; the kernel's locator must equal locate_visible
+    and the gathered payloads must equal read_visible."""
+    from repro.core import mvcc
+    _, _, tbl, fallback, _, _ = _batched_case(64, 11, with_dir=False)
+    for tsvec in (jnp.array([9, 9], jnp.uint32),
+                  jnp.array([9, 0], jnp.uint32)):
+        slot, found, src, pos = _assert_batched_matches_ref(
+            None, tbl, tsvec, fallback, None, None, 16)
+        np.testing.assert_array_equal(np.asarray(slot), np.asarray(fallback))
+        loc = mvcc.locate_visible(tbl, fallback, tsvec)
+        np.testing.assert_array_equal(np.asarray(found), np.asarray(loc.found))
+        np.testing.assert_array_equal(np.asarray(src), np.asarray(loc.src))
+        np.testing.assert_array_equal(np.asarray(pos), np.asarray(loc.pos))
+
+
+def test_batched_probe_hypothesis_sweep():
+    """Property sweep over read-set width, duplicate-key density, miss rate
+    and the directory/locate-only split: batched == the per-key oracle
+    bit-exactly, and a miss is never anything but slot == -1."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(data=st.data(),
+           n_records=st.sampled_from([16, 48, 96]),
+           width=st.integers(1, 40),
+           miss_frac=st.floats(0.0, 0.9),
+           with_dir=st.booleans())
+    @settings(max_examples=20, deadline=None)
+    def run(data, n_records, width, miss_frac, with_dir):
+        from repro.core import hashtable as ht
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        rng = np.random.RandomState(seed)
+        tbl = _probe_table(n_records, jax.random.PRNGKey(seed))
+        fallback = jnp.asarray(rng.randint(0, n_records, width), jnp.int32)
+        tsvec = jnp.asarray(rng.randint(0, 9, size=2), jnp.uint32)
+        if with_dir:
+            keys = jnp.arange(1, n_records + 1, dtype=jnp.uint32) \
+                * jnp.uint32(7919)
+            t = ht.init(2 * n_records)
+            t, _ = ht.insert(t, keys, jnp.arange(n_records, dtype=jnp.int32),
+                             max_probes=2 * n_records)
+            lane_keys = jnp.asarray(keys)[jnp.asarray(
+                rng.randint(0, n_records, width), jnp.int32)]
+            lane_keys = lane_keys.at[::3].set(lane_keys[0])   # duplicates
+            lane_keys = jnp.where(jnp.asarray(rng.rand(width) < miss_frac),
+                                  jnp.uint32(0xBEEF), lane_keys)
+            key_mask = jnp.asarray(rng.rand(width) < 0.7)
+        else:
+            t, lane_keys, key_mask = None, None, None
+        slot, found, _, _ = _assert_batched_matches_ref(
+            t, tbl, tsvec, fallback, lane_keys, key_mask, 2 * n_records,
+            bq=data.draw(st.sampled_from([4, 16, 64])))
+        s = np.asarray(slot)
+        assert not np.asarray(found)[s < 0].any()
+        if not with_dir:
+            assert (s >= 0).all()
+
+    run()
+
+
+def test_batched_probe_miss_aborts_via_snapshot_miss():
+    """Regression (ISSUE 9): a keyed miss in ANY lane of a transaction's
+    read-set makes the round abort it as ``snapshot_miss`` — identically
+    with and without the batched kernel, and never through a negative-slot
+    gather (the engine gathers the safe slot 0 for miss lanes)."""
+    from repro.core import hashtable as ht, si
+    from repro.core.tsoracle import VectorOracle
+    from repro.core import mvcc
+    T, RS, WS, W, R = 4, 3, 2, 4, 64
+    tbl = mvcc.init_table(R, W, n_old=2, n_overflow=2)
+    tbl = tbl._replace(cur_data=jax.random.randint(
+        jax.random.PRNGKey(0), (R, W), 0, 100))
+    keys = jnp.arange(1, R + 1, dtype=jnp.uint32) * jnp.uint32(31)
+    t = ht.init(2 * R)
+    t, _ = ht.insert(t, keys, jnp.arange(R, dtype=jnp.int32), max_probes=R)
+    oracle = VectorOracle(T)
+    batch = si.TxnBatch(
+        tid=jnp.arange(T, dtype=jnp.int32),
+        read_slots=jnp.arange(T * RS, dtype=jnp.int32).reshape(T, RS),
+        read_mask=jnp.ones((T, RS), bool),
+        write_ref=jnp.zeros((T, WS), jnp.int32),
+        write_mask=jnp.ones((T, WS), bool))
+    lane_keys = jnp.asarray(keys)[batch.read_slots]
+    # txn 0: one lane probes an absent key; txn 2: an invalidated entry
+    t, _ = ht.delete(t, keys[batch.read_slots[2, 1]][None])
+    lane_keys = lane_keys.at[0, 0].set(jnp.uint32(0xDEAD))
+    keyed = si.KeyedReads(keys=lane_keys, mask=jnp.ones((T, RS), bool))
+    cf = lambda rh, rd, vec: jnp.broadcast_to(
+        jnp.sum(rd, axis=1, keepdims=True), (T, WS, W)).astype(jnp.int32)
+    outs = {}
+    for flag in (False, True):
+        out = si.run_round(tbl, oracle, oracle.init(), batch, cf,
+                           directory=t, keyed=keyed, dir_max_probes=R,
+                           batched_probe=flag, fused_commit=flag)
+        outs[flag] = out
+        sm = np.asarray(out.snapshot_miss)
+        cm = np.asarray(out.committed)
+        assert sm[0] and not cm[0], "absent key must abort txn 0"
+        assert sm[2] and not cm[2], "invalidated entry must abort txn 2"
+        assert cm[1] and cm[3], "miss-free transactions must commit"
+    for a, b in zip(jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the kernel reports those lanes as slot == -1 (the only negative value)
+    slot, found, _, _ = batched_probe(
+        t.keys, t.vals, tbl, oracle.init().vec, batch.read_slots.reshape(-1),
+        lane_keys.reshape(-1), jnp.ones((T * RS,), bool), max_probes=R,
+        interpret=True)
+    s = np.asarray(slot).reshape(T, RS)
+    assert s[0, 0] == -1 and s[2, 1] == -1
+    assert (s.reshape(-1) >= 0).sum() == T * RS - 2
+    assert not np.asarray(found).reshape(T, RS)[0, 0]
+
+
+# ------------------------------------------------------------- commit ------
+def _commit_case(seed, *, R=64, K=2, T=8, WS=2, W=4, wrap=False, ext=False):
+    """Table + flat request arrays exercising the whole outcome lattice:
+    contention (duplicate hot slots), abort lanes (stale expectations,
+    already-locked targets, unmovable ring victims), inactive lanes,
+    ``txn_ok`` gating, optional ring wraparound and remote failures."""
+    from repro.core import header as hdr, mvcc
+    ks = jax.random.split(jax.random.PRNGKey(seed), 12)
+    r = jnp.arange(R)
+    tbl = mvcc.init_table(R, W, n_old=K, n_overflow=2)
+    tbl = tbl._replace(
+        cur_hdr=hdr.pack((r % 4).astype(jnp.uint32),
+                         (r % 3).astype(jnp.uint32), locked=(r % 11 == 0)),
+        cur_data=jax.random.randint(ks[0], (R, W), 0, 1000))
+    if wrap:   # counters past full revolutions: installs land at mod-K
+        tbl = tbl._replace(next_write=jax.random.randint(
+            ks[1], (R,), 0, 5 * K, jnp.int32))
+    # a third of the ring victim slots are NOT reusable (moved cleared):
+    # granted locks there fail the §5.1 feasibility check and must release
+    oh = jnp.where((r % 3 == 0)[:, None, None],
+                   hdr.with_moved(tbl.old_hdr, False), tbl.old_hdr)
+    tbl = tbl._replace(old_hdr=oh)
+
+    Q = T * WS
+    hot = jax.random.randint(ks[2], (Q,), 0, max(2, R // 8), jnp.int32)
+    cold = jax.random.randint(ks[3], (Q,), 0, R, jnp.int32)
+    req_slots = jnp.where(jnp.arange(Q) % 2 == 0, hot, cold)
+    expected = tbl.cur_hdr[req_slots]
+    stale = jax.random.bernoulli(ks[4], 0.25, (Q,))
+    expected = jnp.where(stale[:, None],
+                         expected + jnp.array([0, 1], jnp.uint32), expected)
+    req_active = jax.random.bernoulli(ks[5], 0.8, (Q,))
+    txn_of_req = jnp.repeat(jnp.arange(T, dtype=jnp.int32), WS)
+    prio = jax.random.permutation(ks[6], jnp.arange(Q)).astype(jnp.uint32)
+    vec = jax.random.randint(ks[7], (T,), 0, 5).astype(jnp.uint32)
+    cts = vec + jnp.uint32(1)
+    new_hdr = hdr.pack(jnp.repeat(jnp.arange(T, dtype=jnp.uint32), WS),
+                       jnp.repeat(cts, WS))
+    new_data = jax.random.randint(ks[8], (Q, W), 0, 1000)
+    txn_ok = jax.random.bernoulli(ks[9], 0.85, (T,))
+    txn_slot = jnp.arange(T, dtype=jnp.int32)
+    ext_fails = jax.random.randint(ks[10], (T,), 0, 2, jnp.int32) if ext \
+        else jnp.zeros((T,), jnp.int32)
+    return (tbl, vec, req_slots, expected, prio, req_active, txn_of_req,
+            new_hdr, new_data, txn_ok, txn_slot, cts, ext_fails)
+
+
+def _assert_commit_matches_ref(case):
+    ker = fused_commit(*case, interpret=True)
+    ref = fused_commit_ref(*case)
+    names = [f"table.{f}" for f in type(case[0])._fields] \
+        + ["vec", "granted", "committed", "do_install", "fails"]
+    for name, a, b in zip(names, jax.tree.leaves(ker), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"commit:{name}")
+    return ker
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("wrap,ext", [(False, False), (True, False),
+                                      (False, True), (True, True)])
+def test_fused_commit_sweep(seed, wrap, ext):
+    """The fused commit kernel vs its lock-step oracle — the PRODUCTION
+    ``si.commit_write_sets`` + the vector oracle's make-visible — across
+    contention, abort lanes, ring wraparound and remote (``ext_fails``)
+    failure injection. Every output must be bit-identical: the five header
+    planes, the ring counters, the payloads, the timestamp vector and the
+    ``granted``/``committed``/``do_install``/``fails`` masks."""
+    case = _commit_case(seed, wrap=wrap, ext=ext)
+    out = _assert_commit_matches_ref(case)
+    req_active, txn_of_req = case[5], case[6]
+    g = np.asarray(out.granted)
+    c = np.asarray(out.committed)
+    # the sweep must exercise every branch of the outcome lattice
+    assert c.any(), "nothing committed — sweep is vacuous"
+    assert (~c).any(), "nothing aborted"
+    assert (np.asarray(req_active) & ~g).any(), "no CAS denial"
+    release = g & ~c[np.asarray(txn_of_req)]
+    assert release.any(), "no abort-path release lane"
+    assert np.asarray(out.do_install).any()
+    if ext:
+        assert (np.asarray(case[12]) > 0).any()
+
+
+def test_fused_commit_contention_duplicate_slots():
+    """All requests target ONE slot: exactly one transaction's write-set may
+    win it; kernel == oracle on the arbitration outcome and the loser's
+    headers are untouched (net-transition: lock+release cancelled)."""
+    case = list(_commit_case(3, R=16, T=6, WS=2))
+    case[2] = jnp.full_like(case[2], 5)           # every lane → slot 5
+    case[3] = jnp.broadcast_to(case[0].cur_hdr[5], case[3].shape)  # fresh exp
+    case[5] = jnp.ones_like(case[5])              # all active
+    out = _assert_commit_matches_ref(tuple(case))
+    winners = np.unique(np.asarray(case[6])[np.asarray(out.granted)])
+    assert len(winners) <= 1, "two transactions granted the same slot"
+    pre = np.asarray(case[0].cur_hdr)
+    post = np.asarray(out.table.cur_hdr)
+    untouched = np.arange(16) != 5
+    np.testing.assert_array_equal(post[untouched], pre[untouched])
+
+
+def test_fused_commit_hypothesis_sweep():
+    """Property sweep: kernel == lock-step oracle for arbitrary pool/ring
+    geometry, write-set width, activity masks, stale-expectation density
+    and remote-failure injection."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           R=st.sampled_from([8, 32, 64]),
+           K=st.sampled_from([1, 2, 4]),
+           T=st.integers(1, 8),
+           WS=st.integers(1, 4),
+           wrap=st.booleans(), ext=st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def run(seed, R, K, T, WS, wrap, ext):
+        _assert_commit_matches_ref(
+            _commit_case(seed, R=R, K=K, T=T, WS=WS, wrap=wrap, ext=ext))
+
+    run()
+
+
+def test_run_round_fused_flags_bit_identical():
+    """``si.run_round(fused_commit=True, batched_probe=True)`` must equal
+    the unfused rendering bit-for-bit over chained rounds — plain,
+    key-addressed (with directory misses) and journalled (§6.2 WAL bytes
+    included in the comparison)."""
+    from repro.core import hashtable as ht, mvcc, si, wal
+    from repro.core.tsoracle import VectorOracle
+    T, RS, WS, W, R = 6, 3, 2, 4, 64
+    oracle = VectorOracle(T)
+    cf = lambda rh, rd, vec: jnp.broadcast_to(
+        jnp.sum(rd, axis=1, keepdims=True) + 1, (T, WS, W)).astype(jnp.int32)
+
+    def batch(seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        return si.TxnBatch(
+            tid=jnp.arange(T, dtype=jnp.int32),
+            read_slots=jax.random.randint(ks[0], (T, RS), 0, R, jnp.int32),
+            read_mask=jax.random.bernoulli(ks[1], 0.9, (T, RS)),
+            write_ref=jax.random.randint(ks[2], (T, WS), 0, RS, jnp.int32),
+            write_mask=jnp.ones((T, WS), bool))
+
+    def run(fused, mode):
+        tbl = mvcc.init_table(R, W, n_old=2, n_overflow=2)
+        tbl = tbl._replace(cur_data=jax.random.randint(
+            jax.random.PRNGKey(42), (R, W), 0, 100))
+        state = oracle.init()
+        kw = {}
+        if mode == "keyed":
+            keys = jnp.arange(1, R + 1, dtype=jnp.uint32) * jnp.uint32(31)
+            t = ht.init(2 * R)
+            t, _ = ht.insert(t, keys, jnp.arange(R, dtype=jnp.int32),
+                             max_probes=R)
+            kw = dict(directory=t, dir_max_probes=R)
+        journal = wal.init_journal(T, 8, T, WS, W, n_replicas=2) \
+            if mode == "journal" else None
+        outs = []
+        for rnd in range(3):
+            b = batch(rnd)
+            if mode == "keyed":
+                lk = (b.read_slots.astype(jnp.uint32) + 1) * jnp.uint32(31)
+                lk = jnp.where(b.read_slots % 5 == 0, jnp.uint32(0xDEAD), lk)
+                kw["keyed"] = si.KeyedReads(keys=lk, mask=b.read_slots % 2 == 0)
+            out = si.run_round(tbl, oracle, state, b, cf,
+                               journal=journal, journal_round=rnd,
+                               fused_commit=fused, batched_probe=fused, **kw)
+            tbl, state, journal = out.table, out.oracle_state, out.journal
+            outs.append(out)
+        return outs
+
+    for mode in ("plain", "keyed", "journal"):
+        ref, fus = run(False, mode), run(True, mode)
+        assert any(np.asarray(o.committed).any() for o in ref), mode
+        for o_r, o_f in zip(ref, fus):
+            for a, b in zip(jax.tree.leaves(o_r), jax.tree.leaves(o_f)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                              err_msg=mode)
