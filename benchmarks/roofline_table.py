@@ -132,19 +132,39 @@ def _commit_traffic(p) -> int:
             + p["n_txn"] * p["write_set"] * 48)
 
 
+def _point_vmem(kind: str, point: dict):
+    """Staged VMEM bytes for one sweep point, from the SAME traced block
+    accounting the K3 kernel audit gates on (kernel_audit.point_vmem_bytes
+    traces the launch at the point's shapes — nothing executes). None when
+    the trace is unavailable (no jax / shape drift): the column degrades
+    to '-' rather than failing the table."""
+    try:
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+        from repro.analysis import kernel_audit
+        return kernel_audit.point_vmem_bytes(kind, point)
+    except Exception:
+        return None
+
+
 def kernel_roofline_table(dirname: str) -> str:
     """§Kernel-roofline: the BENCH_probe/BENCH_commit sweep points against
     the TPU-v5e memory-bandwidth roof. Both kernels are pure gather/scatter
     over header planes (no MXU work), so roof time = min traffic / HBM BW;
-    the CPU interpret wall clock is shown for scale only."""
+    the CPU interpret wall clock is shown for scale only. ``vmem`` is the
+    per-launch staged block footprint at that point (the K3 budget the
+    kernel audit enforces, aliased planes counted once) — a point whose
+    footprint nears the 16 MiB core budget is one shard-doubling away from
+    failing to stage."""
     docs = []
     for f in sorted(glob.glob(os.path.join(dirname, "BENCH_*.json"))):
         doc = json.load(open(f))
         if doc.get("kind") in ("hash_probe", "tpcc_commit"):
             docs.append((os.path.basename(f), doc))
-    out = ["| kernel | point | min traffic | roof µs @819 GB/s | CPU µs "
-           "(fused / unfused) | speedup | CPU÷roof |",
-           "|---|---|---|---|---|---|---|"]
+    out = ["| kernel | point | min traffic | vmem bytes | roof µs @819 GB/s"
+           " | CPU µs (fused / unfused) | speedup | CPU÷roof |",
+           "|---|---|---|---|---|---|---|---|"]
     for fname, doc in docs:
         probe = doc["kind"] == "hash_probe"
         name = "hash_probe" if probe else "fused_commit"
@@ -152,14 +172,15 @@ def kernel_roofline_table(dirname: str) -> str:
             traffic = _probe_traffic(p) if probe else _commit_traffic(p)
             size = p["n_buckets"] if probe else p["n_slots"]
             roof_us = traffic / HBM_BW * 1e6
+            vmem = _point_vmem(doc["kind"], p)
             out.append(
                 f"| {name} ({fname}) | {size // 1024}k | "
-                f"{_fmt_b(traffic)} | {roof_us:.1f} | "
+                f"{_fmt_b(traffic)} | {_fmt_b(vmem)} | {roof_us:.1f} | "
                 f"{p['fused_us']:.0f} / {p['unfused_us']:.0f} | "
                 f"{p['speedup']:.2f}x | {p['fused_us'] / roof_us:.0f}x |")
     if len(out) == 2:
         out.append(f"| (no BENCH_probe/BENCH_commit artifacts in {dirname}) "
-                   "| - | - | - | - | - | - |")
+                   "| - | - | - | - | - | - | - |")
     return "\n".join(out)
 
 

@@ -1,10 +1,15 @@
 #!/usr/bin/env python
-"""Repo-root wrapper for the protocol static analyzer.
+"""Repo-root wrapper for the three-level protocol static analyzer.
 
-Equivalent to ``PYTHONPATH=src python -m repro.analysis`` but runnable from
-anywhere without environment setup — it puts ``src/`` on ``sys.path``
-itself and forwards all arguments (``--strict``, ``--out``, paths, ...) to
-:mod:`repro.analysis.__main__`. See DESIGN.md §7 for the rule catalog.
+Equivalent to ``PYTHONPATH=src python -m repro.analysis`` but runnable
+from anywhere without environment setup — it puts ``src/`` on
+``sys.path`` itself and forwards ALL arguments (``--strict``, ``--out``,
+``--sarif``, ``--vmem-budget``, level toggles, paths, ...) to
+:mod:`repro.analysis.__main__`. Deliberately argument-parser-free: the
+module owns the single arg-parsing path, so this wrapper and the bare
+``python -m`` invocation cannot drift (tests/test_kernel_audit.py pins
+this). See DESIGN.md §7 for the rule catalog and the AST → jaxpr →
+kernel level architecture.
 """
 import sys
 from pathlib import Path

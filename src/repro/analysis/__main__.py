@@ -1,9 +1,15 @@
-"""``python -m repro.analysis`` — run both analysis levels, emit a report.
+"""``python -m repro.analysis`` — run all three analysis levels, emit a
+report.
 
-Exit status (with ``--strict``): non-zero iff any *unsuppressed* finding
-exists or an audited entrypoint failed to trace. The JSON report
-(``ANALYSIS_report.json`` by default) is machine-readable and uploaded as a
-CI artifact; the human summary goes to stdout.
+Levels (DESIGN.md §7): the AST lint (W01–W05), the host-level jaxpr audit
+of the commit/replay/GC entrypoints (A1–A4), and the kernel-body sanitizer
+over the registered Pallas kernels (K1–K5, ``kernel_audit``). Exit status
+(with ``--strict``): non-zero iff any *unsuppressed* finding exists at ANY
+level, or an audited entrypoint/kernel failed to trace. The JSON report
+(``ANALYSIS_report.json`` by default, schema checked by
+``scripts/check_analysis_json.py``) is machine-readable and uploaded as a
+CI artifact; ``--sarif`` additionally writes SARIF 2.1.0 for GitHub
+code-scanning; the human summary goes to stdout.
 
 The jaxpr audit wants a multi-device host (``store.distributed_round``
 traces a real 2-shard mesh); as a process entrypoint this module can still
@@ -19,6 +25,8 @@ import os
 import sys
 from pathlib import Path
 
+SCHEMA_VERSION = 2   # 2: added the kernel level + schema_version field
+
 
 def _ensure_devices(n: int) -> None:
     if n <= 1 or "jax" in sys.modules:
@@ -29,11 +37,62 @@ def _ensure_devices(n: int) -> None:
             f"{flags} --xla_force_host_platform_device_count={n}".strip())
 
 
+def to_sarif(report: dict) -> dict:
+    """Render the analysis report as SARIF 2.1.0 (GitHub code scanning).
+
+    Suppressed findings are carried with a SARIF ``suppressions`` entry
+    (so the annotation shows as reviewed, not as an open alert); active
+    findings map to level "error" — the same severity ``--strict`` gates
+    on.
+    """
+    rules = [{
+        "id": rid,
+        "name": meta["title"].title().replace(" ", "").replace("-", ""),
+        "shortDescription": {"text": meta["title"]},
+    } for rid, meta in sorted(report["rules"].items())]
+    index = {r["id"]: i for i, r in enumerate(rules)}
+    results = []
+    for f in report["findings"]:
+        res = {
+            "ruleId": f["rule"],
+            "ruleIndex": index.get(f["rule"], -1),
+            "level": "note" if f["suppressed"] else "error",
+            "message": {"text": f"[{f['level']}] {f['msg']}"},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {"uri": f["file"],
+                                         "uriBaseId": "SRCROOT"},
+                    "region": {"startLine": max(f["line"], 1)},
+                },
+            }],
+        }
+        if f["suppressed"]:
+            res["suppressions"] = [{"kind": "inSource",
+                                    "justification": f["reason"]}]
+        results.append(res)
+    return {
+        "$schema": ("https://raw.githubusercontent.com/oasis-tcs/"
+                    "sarif-spec/master/Schemata/sarif-schema-2.1.0.json"),
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro.analysis",
+                "informationUri":
+                    "https://example.invalid/repro/DESIGN.md#7",
+                "rules": rules,
+            }},
+            "results": results,
+        }],
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Protocol static analysis: AST lint (W01-W05) + jaxpr "
-                    "audit of the commit/replay/GC entrypoints (A1-A4).")
+                    "audit of the commit/replay/GC entrypoints (A1-A4) + "
+                    "kernel-body sanitizer over the registered Pallas "
+                    "kernels (K1-K5).")
     ap.add_argument("paths", nargs="*",
                     help="files/directories to lint (default: the repo's "
                          "standard scope)")
@@ -42,10 +101,18 @@ def main(argv=None) -> int:
                          "error")
     ap.add_argument("--out", default="ANALYSIS_report.json",
                     help="JSON report path ('' disables)")
+    ap.add_argument("--sarif", default="",
+                    help="also write the findings as SARIF 2.1.0 to this "
+                         "path (GitHub code-scanning annotations)")
     ap.add_argument("--no-lint", action="store_true",
                     help="skip the AST level")
     ap.add_argument("--no-jaxpr", action="store_true",
-                    help="skip the jaxpr level (no jax import)")
+                    help="skip the jaxpr level (no mesh trace)")
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="skip the kernel level (no Pallas kernel traces)")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="per-core VMEM budget in bytes for K3 (default: "
+                         "kernel_audit.PER_CORE_VMEM_BYTES, 16 MiB)")
     ap.add_argument("--devices", type=int, default=8,
                     help="forced host device count for the mesh trace "
                          "(ignored once jax is imported)")
@@ -54,6 +121,7 @@ def main(argv=None) -> int:
     root = Path(__file__).resolve().parents[3]
     findings = []
     entry_reports = []
+    kernel_reports = []
 
     if not args.no_lint:
         from repro.analysis import lint
@@ -66,6 +134,14 @@ def main(argv=None) -> int:
         jfindings, entry_reports = jaxpr_audit.audit_tree()
         findings += jfindings
 
+    if not args.no_kernel:
+        from repro.analysis import kernel_audit
+        budget = (args.vmem_budget if args.vmem_budget is not None
+                  else kernel_audit.PER_CORE_VMEM_BYTES)
+        kfindings, kernel_reports = kernel_audit.audit_kernels(
+            vmem_budget=budget)
+        findings += kfindings
+
     def rel(p: str) -> str:
         try:
             return str(Path(p).resolve().relative_to(root))
@@ -76,28 +152,40 @@ def main(argv=None) -> int:
         f.file = rel(f.file)
 
     active = [f for f in findings if not f.suppressed]
-    trace_errors = [r for r in entry_reports if r.status != "ok"]
+    trace_errors = ([r for r in entry_reports if r.status != "ok"]
+                    + [r for r in kernel_reports if r.status != "ok"])
     ok = not active and not trace_errors
 
     from repro.analysis.rules import RULES
     report = {
         "kind": "analysis_report",
+        "schema_version": SCHEMA_VERSION,
         "ok": ok,
         "strict": args.strict,
         "rules": {w: {"jaxpr_id": r.aid, "title": r.title}
                   for w, r in RULES.items()},
         "entrypoints": [r.to_json() for r in entry_reports],
+        "kernels": [r.to_json() for r in kernel_reports],
         "findings": [f.to_json() for f in findings],
         "counts": {"total": len(findings), "active": len(active),
                    "suppressed": len(findings) - len(active)},
     }
     if args.out:
         Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    if args.sarif:
+        Path(args.sarif).write_text(
+            json.dumps(to_sarif(report), indent=2) + "\n")
 
     for r in entry_reports:
         mark = "ok " if r.status == "ok" else "ERR"
         extra = f" ({r.detail})" if r.detail else ""
         print(f"[{mark}] {r.name}: {r.n_eqns} eqns, "
+              f"{r.n_findings} active findings{extra}")
+    for r in kernel_reports:
+        mark = "ok " if r.status == "ok" else "ERR"
+        extra = f" ({r.detail})" if r.detail else ""
+        print(f"[{mark}] kernel {r.name}: {r.n_eqns} eqns, "
+              f"{r.vmem_bytes} B VMEM / {r.vmem_budget} B budget, "
               f"{r.n_findings} active findings{extra}")
     for f in findings:
         print(f.render())

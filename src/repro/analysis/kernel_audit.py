@@ -1,0 +1,779 @@
+"""Level 3: kernel-body sanitizer over the registered Pallas kernels.
+
+The PR 9 fusion moved the commit/probe hot paths inside ``pallas_call``
+bodies, where the host-level jaxpr audit (level 1) cannot see: a traced
+``pallas_call`` equation is opaque to it. Every bench win so far is
+interpret-mode, and interpret mode *forgives* the exact hazards compiled
+TPU execution does not — out-of-bounds indices are clamped, aliased
+operands are copied, VMEM is unlimited. This module traces every
+registered kernel's host wrapper with ``jax.make_jaxpr`` (nothing
+executes), digs the kernel jaxpr out of the ``pallas_call`` equation's
+params, and proves, per launch:
+
+* **K1 (index safety)** — every dynamic gather/scatter index (and every
+  dynamic ref indexer) is provably guarded before use: derived through
+  ``mod``/``clamp``/``min``-with-a-bound, ``select``/``where``-masked
+  (the §8 idiom — ``jnp.where(act, slots, 0)``, the probe's
+  ``slot = -1`` miss sentinel), a literal/iota, or arithmetic over such;
+  or the op itself routes OOB lanes with an explicit drop/fill mode. A
+  ``PROMISE_IN_BOUNDS`` gather over an unproven index is exactly the op
+  interpret mode clamps and Mosaic does not.
+* **K2 (alias hazard)** — with ``input_output_aliases``, no read of an
+  aliased operand ref after the first write to its aliased output: the
+  two are one buffer compiled, two buffers interpreted, so such a read
+  is a silent interpret/compiled divergence.
+* **K3 (VMEM budget)** — the per-launch sum of staged block shapes ×
+  dtype widths (aliased planes counted once) is reported and gated
+  against a configurable per-core budget (default 16 MiB — TPU v5e).
+  The registry traces each kernel at its DESIGN-POINT shapes (64 k-slot
+  shard), not a toy fixture, so the number is the deployment number;
+  ``benchmarks/roofline_table.py --kernels`` reuses
+  :func:`point_vmem_bytes` to print the same accounting per bench point.
+* **K4 (lock taint)** — extends A1's lock-discipline walk into the
+  commit kernel body: the CAS arbitration (the ``scatter-min``
+  tournament) must taint every value stored to an aliased state plane,
+  i.e. the grant mask provably flows to the single fused header scatter.
+* **K5 (ref parity)** — pure-AST structural check: every public
+  entrypoint in ``kernels/*/ops.py`` has a ``<name>_ref`` counterpart in
+  ``ref.py`` with a lock-step signature and a registered differential
+  test in ``tests/test_kernels.py``.
+
+Registered kernels are the protocol kernels (``commit``, ``hash_probe``
+— all launch modes); the template kernels (``flash_attention``,
+``mamba_scan``, ``moe_gmm``, ``paged_attention``) opt in by appending a
+:class:`KernelSpec` to :data:`KERNELS` when they gain protocol state
+(DESIGN.md §8); K5 covers all packages regardless, since it needs no
+trace. Findings honor the same ``# analysis: safe(K1): reason``
+suppression comments as the other two levels and merge into the same
+``ANALYSIS_report.json``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.rules import Finding, apply_suppressions
+
+# TPU v5e exposes ~16 MiB of VMEM per core; one launch must stage within
+# it. Overridable per run: `python -m repro.analysis --vmem-budget N`.
+PER_CORE_VMEM_BYTES = 16 * 1024 * 1024
+
+_KERNELS_DIR = Path(__file__).resolve().parents[1] / "kernels"
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+def _load_text(file: str) -> Optional[str]:
+    p = Path(file)
+    try:
+        return p.read_text() if p.is_file() else None
+    except OSError:
+        return None
+
+
+# ==========================================================================
+# K5 — ops/ref structural parity (pure AST; no jax import)
+# ==========================================================================
+
+def _public_funcs(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and not n.name.startswith("_")]
+
+
+def _positional_names(fn: ast.FunctionDef) -> List[str]:
+    return [a.arg for a in list(fn.args.posonlyargs) + list(fn.args.args)]
+
+
+def _kwonly_names(fn: ast.FunctionDef) -> Set[str]:
+    return {a.arg for a in fn.args.kwonlyargs}
+
+
+def check_ref_parity_sources(ops_text: str, ops_file: str,
+                             ref_text: Optional[str],
+                             tests_text: str) -> List[Finding]:
+    """K5 over one ops.py source (the corpus tests' entry hook).
+
+    ``ref_text`` is the package's ref.py source (None = missing file);
+    ``tests_text`` is tests/test_kernels.py's source, scanned for the
+    ``<name>_ref`` registration.
+    """
+    findings: List[Finding] = []
+
+    def add(node, msg):
+        findings.append(Finding(rule="K5", level="kernel", file=ops_file,
+                                line=getattr(node, "lineno", 0), msg=msg))
+
+    ops_tree = ast.parse(ops_text, filename=ops_file)
+    refs: Dict[str, ast.FunctionDef] = {}
+    if ref_text is not None:
+        refs = {f.name: f for f in _public_funcs(ast.parse(ref_text))}
+    for fn in _public_funcs(ops_tree):
+        ref_name = f"{fn.name}_ref"
+        ref = refs.get(ref_name)
+        if ref is None:
+            add(fn, f"public entrypoint `{fn.name}` has no lock-step "
+                    f"`{ref_name}` in ref.py — a kernel without its "
+                    "production oracle cannot be differentially proven")
+            continue
+        want, got = _positional_names(fn), _positional_names(ref)
+        if want != got:
+            add(fn, f"`{ref_name}` positional signature {got} does not "
+                    f"match `{fn.name}`'s {want} — ops and ref have "
+                    "drifted out of lock step")
+        extra = _kwonly_names(ref) - _kwonly_names(fn)
+        if extra:
+            add(fn, f"`{ref_name}` takes keyword-only {sorted(extra)} that "
+                    f"`{fn.name}` does not — the oracle exercises a "
+                    "contract the kernel cannot")
+        if ref_name not in tests_text:
+            add(fn, f"`{ref_name}` is not referenced by "
+                    "tests/test_kernels.py — no registered differential "
+                    "test keeps the pair in lock step")
+    return findings
+
+
+def check_ref_parity(root: Optional[Path] = None) -> List[Finding]:
+    """K5 over every package under ``src/repro/kernels/``; suppressions
+    applied."""
+    root = Path(root) if root is not None else _REPO_ROOT
+    kdir = root / "src" / "repro" / "kernels"
+    tests = root / "tests" / "test_kernels.py"
+    tests_text = _load_text(str(tests)) or ""
+    findings: List[Finding] = []
+    for pkg in sorted(p for p in kdir.iterdir() if p.is_dir()
+                      and not p.name.startswith("__")):
+        ops = pkg / "ops.py"
+        ops_text = _load_text(str(ops))
+        if ops_text is None:
+            findings.append(Finding(
+                rule="K5", level="kernel", file=str(pkg), line=0,
+                msg=f"kernel package `{pkg.name}` has no ops.py — every "
+                    "kernel directory follows the three-file shape "
+                    "(DESIGN.md §8)"))
+            continue
+        findings += check_ref_parity_sources(
+            ops_text, str(ops), _load_text(str(pkg / "ref.py")), tests_text)
+    apply_suppressions(findings, _load_text)
+    return findings
+
+
+# ==========================================================================
+# Traced-kernel audit (K1–K4) — jax imported lazily so the pure parts of
+# this module (K5, the VMEM constants) stay importable without it
+# ==========================================================================
+
+@dataclasses.dataclass
+class KernelSpec:
+    """One registered kernel launch shape.
+
+    ``tracer`` returns the closed jaxpr of the kernel's host wrapper at
+    its design-point shapes (``make_jaxpr`` over ``ShapeDtypeStruct``s —
+    nothing allocates or executes). ``expects_locks`` opts the kernel into
+    K4 (it must contain a CAS tournament feeding its state writes).
+    """
+    name: str
+    tracer: Callable[[], object]
+    expects_locks: bool = False
+
+
+@dataclasses.dataclass
+class KernelReport:
+    name: str
+    status: str            # "ok" | "error"
+    detail: str = ""
+    n_eqns: int = 0
+    vmem_bytes: int = 0    # staged per-launch bytes (aliased planes once)
+    vmem_budget: int = 0
+    n_findings: int = 0    # active (unsuppressed)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---- design-point fixtures ------------------------------------------------
+
+def _sds(shape, dtype):
+    import jax
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _commit_jaxpr(R: int = 1 << 16, K: int = 8, T: int = 1024, WS: int = 8,
+                  n_vec: Optional[int] = None):
+    import jax
+    import jax.numpy as jnp
+    import repro.core.header  # noqa: F401 — concretize constants pre-trace
+    from repro.kernels.commit.kernel import fused_commit
+    n_vec = T if n_vec is None else n_vec
+    Q = T * WS
+    args = (_sds((R, 2), jnp.uint32), _sds((R * K, 2), jnp.uint32),
+            _sds((R,), jnp.int32), _sds((n_vec,), jnp.uint32),
+            _sds((Q,), jnp.int32), _sds((Q, 2), jnp.uint32),
+            _sds((Q,), jnp.uint32), _sds((Q,), jnp.bool_),
+            _sds((Q,), jnp.int32), _sds((Q, 2), jnp.uint32),
+            _sds((T,), jnp.bool_), _sds((T,), jnp.int32),
+            _sds((T,), jnp.uint32), _sds((T,), jnp.int32))
+    return jax.make_jaxpr(
+        lambda *a: fused_commit(*a, n_old=K, interpret=True))(*args)
+
+
+def _probe_args(B, R, K, KO, n_vec, Q):
+    import jax.numpy as jnp
+    return (_sds((B,), jnp.uint32), _sds((B,), jnp.int32),
+            _sds((R,), jnp.uint32), _sds((R,), jnp.uint32),
+            _sds((R * K,), jnp.uint32), _sds((R * K,), jnp.uint32),
+            _sds((R,), jnp.int32),
+            _sds((R * KO,), jnp.uint32), _sds((R * KO,), jnp.uint32),
+            _sds((R,), jnp.int32), _sds((n_vec,), jnp.uint32),
+            _sds((Q,), jnp.uint32))
+
+
+def _hash_probe_jaxpr(B: int = 1 << 16, R: int = 1 << 16, K: int = 4,
+                      KO: int = 8, n_vec: int = 1024, Q: int = 1024,
+                      bq: int = 256, max_probes: int = 16):
+    import jax
+    import repro.core.header  # noqa: F401
+    from repro.kernels.hash_probe.kernel import hash_probe
+    return jax.make_jaxpr(
+        lambda *a: hash_probe(*a, n_old=K, n_ovf=KO, bq=bq,
+                              max_probes=max_probes, interpret=True))(
+        *_probe_args(B, R, K, KO, n_vec, Q))
+
+
+def _batched_probe_jaxpr(B: int = 1 << 16, R: int = 1 << 16, K: int = 4,
+                         KO: int = 8, n_vec: int = 1024, Q: int = 1024,
+                         bq: int = 256, locate_only: bool = False):
+    import jax
+    import jax.numpy as jnp
+    import repro.core.header  # noqa: F401
+    from repro.kernels.hash_probe.kernel import batched_probe
+    (dk, dv, cm, cc, om, oc, nw, vm, vc, vn, ts, _q) = _probe_args(
+        B, R, K, KO, n_vec, Q)
+    fb = _sds((Q,), jnp.int32)
+    keys = _sds((Q,), jnp.uint32)
+    km = _sds((Q,), jnp.bool_)
+
+    if locate_only:
+        def fn(cm, cc, om, oc, nw, vm, vc, vn, ts, fb):
+            return batched_probe(None, None, cm, cc, om, oc, nw, vm, vc,
+                                 vn, ts, fb, None, None, n_old=K, n_ovf=KO,
+                                 bq=bq, interpret=True)
+        return jax.make_jaxpr(fn)(cm, cc, om, oc, nw, vm, vc, vn, ts, fb)
+
+    def fn(dk, dv, cm, cc, om, oc, nw, vm, vc, vn, ts, fb, keys, km):
+        return batched_probe(dk, dv, cm, cc, om, oc, nw, vm, vc, vn, ts,
+                             fb, keys, km, n_old=K, n_ovf=KO, bq=bq,
+                             interpret=True)
+    return jax.make_jaxpr(fn)(dk, dv, cm, cc, om, oc, nw, vm, vc, vn, ts,
+                              fb, keys, km)
+
+
+# The audited launch registry. Template kernels opt in here the moment
+# they gain protocol state (locks/timestamps — DESIGN.md §8); until then
+# only K5's structural parity covers them.
+KERNELS: Dict[str, KernelSpec] = {
+    "commit.fused_commit": KernelSpec(
+        "commit.fused_commit", _commit_jaxpr, expects_locks=True),
+    "hash_probe.hash_probe": KernelSpec(
+        "hash_probe.hash_probe", _hash_probe_jaxpr),
+    "hash_probe.batched_probe": KernelSpec(
+        "hash_probe.batched_probe", _batched_probe_jaxpr),
+    "hash_probe.batched_probe.locate_only": KernelSpec(
+        "hash_probe.batched_probe.locate_only",
+        lambda: _batched_probe_jaxpr(locate_only=True)),
+}
+
+
+# ---- jaxpr plumbing -------------------------------------------------------
+
+def _sub_jaxprs(params: dict):
+    for val in params.values():
+        for x in (val if isinstance(val, (tuple, list)) else (val,)):
+            if hasattr(x, "jaxpr"):          # ClosedJaxpr
+                yield x.jaxpr
+            elif hasattr(x, "eqns"):         # raw Jaxpr
+                yield x
+
+
+def find_pallas_eqns(jaxpr) -> List:
+    """Every ``pallas_call`` equation reachable from ``jaxpr``."""
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(eqn)
+        else:
+            for sub in _sub_jaxprs(eqn.params):
+                out += find_pallas_eqns(sub)
+    return out
+
+
+def _frame(eqn) -> Tuple[str, int]:
+    from jax._src import source_info_util
+    try:
+        for fr in source_info_util.user_frames(eqn.source_info):
+            return fr.file_name, fr.start_line
+    except Exception:
+        pass
+    return "<kernel>", 0
+
+
+def _build_prod(jaxpr) -> dict:
+    return {ov: eqn for eqn in jaxpr.eqns for ov in eqn.outvars}
+
+
+def _count_eqns(jaxpr) -> int:
+    n = len(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for sub in _sub_jaxprs(eqn.params):
+            n += _count_eqns(sub)
+    return n
+
+
+def _is_literal(v) -> bool:
+    return not hasattr(v, "count") and hasattr(v, "val")
+
+
+def _kernel_io(eqn) -> Tuple[List, List, Dict[int, int]]:
+    """(input ref vars, output ref vars, alias map in->out) of one
+    ``pallas_call`` equation's kernel jaxpr."""
+    kj = eqn.params["jaxpr"]
+    n_out = len(eqn.params["out_avals"])
+    n_in = len(kj.invars) - n_out
+    aliases = dict(tuple(a) for a in eqn.params["input_output_aliases"])
+    return list(kj.invars[:n_in]), list(kj.invars[n_in:]), aliases
+
+
+def launch_vmem_bytes(eqn) -> int:
+    """K3 accounting for one ``pallas_call`` equation: staged block bytes,
+    counting each aliased in/out pair once (one buffer in-place)."""
+    import numpy as np
+    ins, outs, aliases = _kernel_io(eqn)
+    total = 0
+    for v in ins:
+        a = v.aval
+        total += int(np.prod(a.shape or (1,))) * np.dtype(a.dtype).itemsize
+    for o, v in enumerate(outs):
+        if o in aliases.values():
+            continue
+        a = v.aval
+        total += int(np.prod(a.shape or (1,))) * np.dtype(a.dtype).itemsize
+    return total
+
+
+# ---- K1: index provenance -------------------------------------------------
+
+# shape/layout-only wrappers: look through at operand 0
+_PASSTHRU = {"broadcast_in_dim", "reshape", "squeeze", "transpose", "slice",
+             "rev", "copy", "reduce_precision", "stop_gradient", "name",
+             "convert_element_type", "expand_dims"}
+_CALL_PRIMS = {"pjit", "closed_call", "core_call", "remat",
+               "custom_jvp_call", "custom_vjp_call"}
+# arithmetic that preserves guardedness when every operand is guarded
+_ARITH = {"add", "sub", "mul", "neg", "concatenate", "max"}
+_MAX_DEPTH = 64
+
+_Stack = List[Tuple[dict, dict]]
+
+
+def _guarded(v, stack: _Stack, depth: int = 0) -> bool:
+    """True when the index value ``v`` is provably clamped or mask-guarded
+    (the K1 contract). Conservative: opaque kernel inputs and unknown
+    producers are unguarded."""
+    if depth > _MAX_DEPTH:
+        return False
+    if _is_literal(v):
+        return True
+    prod, invmap = stack[-1]
+    e = prod.get(v)
+    if e is None:
+        if v in invmap and len(stack) > 1:
+            return _guarded(invmap[v], stack[:-1], depth + 1)
+        return False                      # a raw kernel input: unproven
+    p = e.primitive.name
+    if p in ("iota",):
+        return True
+    if p in ("rem", "clamp"):
+        return True                       # modular / explicitly clamped
+    if p == "select_n":
+        # the §8 where(mask, idx, safe_const) idiom guards; but jnp's
+        # automatic negative-index wrap ALSO lowers to select_n —
+        # select_n(idx < 0, idx, idx + n) — with no const branch and the
+        # same raw index in both cases, which guards nothing
+        cases = e.invars[1:]
+        if any(_is_literal(o) or _const_like(o, stack) for o in cases):
+            return True
+        return all(_guarded(o, stack, depth + 1) for o in cases)
+    if p in ("min", "max") and any(_is_literal(o) or _const_like(o, stack)
+                                   for o in e.invars):
+        return True                       # one-sided clamp against a bound
+    if p == "and" and any(_is_literal(o) or _const_like(o, stack)
+                          for o in e.invars):
+        return True                       # bit-masked index
+    if p in _PASSTHRU:
+        return _guarded(e.invars[0], stack, depth + 1)
+    if p in _ARITH:
+        return all(_guarded(o, stack, depth + 1) for o in e.invars)
+    if p in _CALL_PRIMS:
+        subs = list(_sub_jaxprs(e.params))
+        if len(subs) == 1:
+            sub = subs[0]
+            try:
+                i = list(e.outvars).index(v)
+            except ValueError:
+                return False
+            out = sub.outvars[i]
+            if _is_literal(out):
+                return True
+            sinv = (dict(zip(sub.invars, e.invars))
+                    if len(sub.invars) == len(e.invars) else {})
+            return _guarded(out, stack + [(_build_prod(sub), sinv)],
+                            depth + 1)
+        return False
+    if p == "scan":
+        body = next(iter(_sub_jaxprs(e.params)), None)
+        if body is None:
+            return False
+        try:
+            i = list(e.outvars).index(v)
+        except ValueError:
+            return False
+        if i >= len(body.outvars):
+            return False
+        out = body.outvars[i]
+        if _is_literal(out):
+            return True
+        # scan eqn invars = consts + carry-init + xs; body invars =
+        # consts + carry + xs — positionally aligned
+        sinv = (dict(zip(body.invars, e.invars))
+                if len(body.invars) == len(e.invars) else {})
+        return _guarded(out, stack + [(_build_prod(body), sinv)], depth + 1)
+    if p == "while":
+        body = e.params.get("body_jaxpr")
+        body = body.jaxpr if hasattr(body, "jaxpr") else body
+        if body is None:
+            return False
+        try:
+            i = list(e.outvars).index(v)
+        except ValueError:
+            return False
+        if i >= len(body.outvars):
+            return False
+        out = body.outvars[i]
+        if _is_literal(out):
+            return True
+        cn = e.params.get("cond_nconsts", 0)
+        sinv = {bv: e.invars[cn + j] for j, bv in enumerate(body.invars)
+                if cn + j < len(e.invars)}
+        return _guarded(out, stack + [(_build_prod(body), sinv)], depth + 1)
+    if p == "cond":
+        branches = e.params.get("branches", ())
+        outs = []
+        for br in branches:
+            bj = br.jaxpr if hasattr(br, "jaxpr") else br
+            try:
+                i = list(e.outvars).index(v)
+            except ValueError:
+                return False
+            if i >= len(bj.outvars):
+                return False
+            out = bj.outvars[i]
+            sinv = (dict(zip(bj.invars, e.invars[1:]))
+                    if len(bj.invars) == len(e.invars) - 1 else {})
+            outs.append((out, bj, sinv))
+        return bool(outs) and all(
+            _is_literal(out)
+            or _guarded(out, stack + [(_build_prod(bj), sinv)], depth + 1)
+            for out, bj, sinv in outs)
+    return False
+
+
+def _const_like(v, stack: _Stack, depth: int = 0) -> bool:
+    """A (possibly broadcast/converted/pjit-hoisted) literal."""
+    if _is_literal(v):
+        return True
+    if depth > 12:
+        return False
+    prod, invmap = stack[-1]
+    e = prod.get(v)
+    if e is None:
+        # a sub-jaxpr invar: a hoisted literal lives in the outer frame
+        if v in invmap and len(stack) > 1:
+            return _const_like(invmap[v], stack[:-1], depth + 1)
+        return False
+    if e.primitive.name in _PASSTHRU:
+        return _const_like(e.invars[0], stack, depth + 1)
+    return False
+
+
+# gather/scatter modes that route OOB lanes explicitly (the §8 drop
+# contract) or clamp by declared semantics — no index proof needed
+def _mode_is_safe(mode) -> bool:
+    s = str(mode)
+    return ("FILL_OR_DROP" in s) or ("CLIP" in s)
+
+
+@dataclasses.dataclass
+class _KCtx:
+    entry: str
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+
+    def add(self, rule: str, eqn, msg: str) -> None:
+        f, ln = _frame(eqn)
+        self.findings.append(Finding(rule=rule, level="kernel", file=f,
+                                     line=ln, msg=f"[{self.entry}] {msg}"))
+
+
+def _check_k1(jaxpr, stack: _Stack, ctx: _KCtx) -> None:
+    prod = stack[-1][0]
+    for eqn in jaxpr.eqns:
+        p = eqn.primitive.name
+        if p == "gather":
+            if not _mode_is_safe(eqn.params.get("mode")) \
+                    and not _guarded(eqn.invars[1], stack):
+                ctx.add("K1", eqn,
+                        "dynamic gather index is not provably clamped or "
+                        "mask-guarded — interpret mode clamps OOB, "
+                        "compiled TPU execution does not")
+        elif p.startswith("scatter"):
+            if not _mode_is_safe(eqn.params.get("mode")) \
+                    and not _guarded(eqn.invars[1], stack):
+                ctx.add("K1", eqn,
+                        f"dynamic `{p}` index is not provably clamped, "
+                        "mask-guarded, or routed with mode='drop'")
+        elif p in ("dynamic_slice", "dynamic_update_slice"):
+            start = 1 if p == "dynamic_slice" else 2
+            for o in eqn.invars[start:]:
+                if not _guarded(o, stack):
+                    ctx.add("K1", eqn,
+                            f"dynamic `{p}` start index is not provably "
+                            "clamped or mask-guarded")
+                    break
+        elif p in ("get", "swap", "addupdate") and len(eqn.invars) > (
+                2 if p == "swap" else 1):
+            # dynamic ref indexer operands (pl.load/store with tracer idx)
+            start = 2 if p == "swap" else 1
+            for o in eqn.invars[start:]:
+                if not _guarded(o, stack):
+                    ctx.add("K1", eqn,
+                            f"dynamic ref indexer on `{p}` is not provably "
+                            "clamped or mask-guarded")
+                    break
+        for sub in _sub_jaxprs(eqn.params):
+            sinv = (dict(zip(sub.invars, eqn.invars))
+                    if len(sub.invars) == len(eqn.invars) else {})
+            _check_k1(sub, stack + [(_build_prod(sub), sinv)], ctx)
+
+
+# ---- K2: aliased read-after-write ----------------------------------------
+
+def _ref_events(jaxpr, ref_of: Dict, out: List) -> None:
+    """Flatten (kind, ref-var, eqn) ref accesses in execution order.
+    ``ref_of`` maps vars in this frame to outer ref vars (for refs closed
+    over into sub-jaxprs)."""
+    for eqn in jaxpr.eqns:
+        p = eqn.primitive.name
+        if p == "get":
+            r = ref_of.get(eqn.invars[0], eqn.invars[0])
+            out.append(("read", r, eqn))
+        elif p in ("swap", "addupdate"):
+            r = ref_of.get(eqn.invars[0], eqn.invars[0])
+            out.append(("write", r, eqn))
+        for sub in _sub_jaxprs(eqn.params):
+            sub_map = dict(ref_of)
+            if len(sub.invars) == len(eqn.invars):
+                for sv, ov in zip(sub.invars, eqn.invars):
+                    if not _is_literal(ov):
+                        sub_map[sv] = ref_of.get(ov, ov)
+            _ref_events(sub, sub_map, out)
+
+
+def _check_k2(eqn, ctx: _KCtx) -> None:
+    ins, outs, aliases = _kernel_io(eqn)
+    if not aliases:
+        return
+    events: List = []
+    _ref_events(eqn.params["jaxpr"], {}, events)
+    in_of_out = {outs[o]: ins[i] for i, o in aliases.items()}
+    aliased_in = {ins[i]: outs[o] for i, o in aliases.items()}
+    written: Set = set()
+    for kind, ref, e in events:
+        if kind == "write" and ref in in_of_out:
+            written.add(in_of_out[ref])
+        elif kind == "read" and ref in aliased_in and ref in written:
+            ctx.add("K2", e,
+                    "read of an aliased operand ref after the first write "
+                    "to its aliased output — one buffer compiled, two "
+                    "buffers interpreted: the kernel must finish reading "
+                    "an aliased plane before writing it in place")
+
+
+# ---- K4: in-kernel lock taint --------------------------------------------
+
+def _taint_walk(jaxpr, env: Dict, seeded: List) -> None:
+    """Forward taint from every ``scatter-min`` (the CAS tournament).
+    Over-approximate like A1's walk: unknown equations pass taint
+    through, so a missing flow is structural, not imprecision."""
+    for eqn in jaxpr.eqns:
+        tainted = any(env.get(v, False) for v in eqn.invars
+                      if not _is_literal(v))
+        if eqn.primitive.name == "scatter-min":
+            tainted = True
+            seeded.append(eqn)
+        for sub in _sub_jaxprs(eqn.params):
+            senv: Dict = {}
+            if len(sub.invars) == len(eqn.invars):
+                for sv, ov in zip(sub.invars, eqn.invars):
+                    if not _is_literal(ov):
+                        senv[sv] = env.get(ov, False)
+            else:
+                for sv in sub.invars:
+                    senv[sv] = tainted
+            sub_seeded: List = []
+            _taint_walk(sub, senv, sub_seeded)
+            seeded.extend(sub_seeded)
+            if sub_seeded or any(senv.get(v, False) for v in sub.outvars
+                                 if not _is_literal(v)):
+                tainted = True
+        for ov in eqn.outvars:
+            env[ov] = tainted
+
+
+def _check_k4(eqn, ctx: _KCtx) -> None:
+    ins, outs, aliases = _kernel_io(eqn)
+    env: Dict = {}
+    seeded: List = []
+    kj = eqn.params["jaxpr"]
+    _taint_walk(kj, env, seeded)
+    if not seeded:
+        ctx.add("K4", eqn,
+                "lock-carrying kernel contains no CAS tournament "
+                "(scatter-min) — the arbitration was lost or bypassed")
+        return
+    aliased_outs = {outs[o] for o in aliases.values()}
+    for e in _iter_eqns(kj):
+        if e.primitive.name in ("swap", "addupdate") \
+                and e.invars[0] in aliased_outs:
+            stored = [v for v in e.invars[1:] if not _is_literal(v)]
+            if stored and not any(env.get(v, False) for v in stored):
+                ctx.add("K4", e,
+                        "in-place state write whose stored value is not "
+                        "derived from the CAS grant — an install that "
+                        "bypasses arbitration publishes unowned versions")
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from _iter_eqns(sub)
+
+
+# ---- the audit entrypoints ------------------------------------------------
+
+def audit_closed_jaxpr(closed, name: str, *, expects_locks: bool = False,
+                       vmem_budget: int = PER_CORE_VMEM_BYTES,
+                       ) -> Tuple[List[Finding], int]:
+    """Audit every ``pallas_call`` inside an already-traced closed jaxpr.
+    Returns (findings, total staged VMEM bytes); suppressions applied."""
+    ctx = _KCtx(entry=name)
+    eqns = find_pallas_eqns(closed.jaxpr)
+    if not eqns:
+        ctx.findings.append(Finding(
+            rule="K5", level="kernel", file="<trace>", line=0,
+            msg=f"[{name}] traced callable contains no pallas_call — "
+                "nothing to audit (is the kernel behind a flag that "
+                "defaulted off?)"))
+    vmem_total = 0
+    for eqn in eqns:
+        kj = eqn.params["jaxpr"]
+        _check_k1(kj, [(_build_prod(kj), {})], ctx)
+        _check_k2(eqn, ctx)
+        vmem = launch_vmem_bytes(eqn)
+        vmem_total = max(vmem_total, vmem)   # per-launch, not summed
+        if vmem > vmem_budget:
+            ctx.add("K3", eqn,
+                    f"launch stages {vmem} bytes of blocks into VMEM, "
+                    f"over the {vmem_budget}-byte per-core budget — "
+                    "shrink blocks or shard the launch")
+        if expects_locks:
+            _check_k4(eqn, ctx)
+    apply_suppressions(ctx.findings, _load_text)
+    return ctx.findings, vmem_total
+
+
+def audit_kernel_callable(fn, *args, name: str = "kernel",
+                          expects_locks: bool = False,
+                          vmem_budget: int = PER_CORE_VMEM_BYTES,
+                          ) -> List[Finding]:
+    """Trace ``fn(*args)`` and audit its launches — the corpus tests'
+    entry hook."""
+    import jax
+    closed = jax.make_jaxpr(fn)(*args)
+    findings, _ = audit_closed_jaxpr(closed, name,
+                                     expects_locks=expects_locks,
+                                     vmem_budget=vmem_budget)
+    return findings
+
+
+def audit_kernels(*, vmem_budget: int = PER_CORE_VMEM_BYTES,
+                  specs: Optional[Sequence[KernelSpec]] = None,
+                  with_ref_parity: bool = True,
+                  ) -> Tuple[List[Finding], List[KernelReport]]:
+    """Trace and audit every registered kernel at its design-point shapes,
+    then run the K5 structural parity over the kernel tree. Findings are
+    deduped by (rule, file, line) — the probe launch modes share bodies."""
+    findings: List[Finding] = []
+    reports: List[KernelReport] = []
+    seen: Set[Tuple[str, str, int]] = set()
+    for spec in (specs if specs is not None else KERNELS.values()):
+        try:
+            closed = spec.tracer()
+        except Exception as e:   # an untraceable kernel is itself a bug
+            reports.append(KernelReport(
+                spec.name, "error", detail=f"{type(e).__name__}: {e}",
+                vmem_budget=vmem_budget))
+            continue
+        fs, vmem = audit_closed_jaxpr(closed, spec.name,
+                                      expects_locks=spec.expects_locks,
+                                      vmem_budget=vmem_budget)
+        fresh = []
+        for f in fs:
+            key = (f.rule, f.file, f.line)
+            if key not in seen:
+                seen.add(key)
+                fresh.append(f)
+        findings.extend(fresh)
+        reports.append(KernelReport(
+            spec.name, "ok", n_eqns=_count_eqns(closed.jaxpr),
+            vmem_bytes=vmem, vmem_budget=vmem_budget,
+            n_findings=sum(1 for f in fresh if not f.suppressed)))
+    if with_ref_parity:
+        for f in check_ref_parity():
+            key = (f.rule, f.file, f.line)
+            if key not in seen:
+                seen.add(key)
+                findings.append(f)
+    return findings, reports
+
+
+# ---- bench-point VMEM accounting (roofline_table --kernels) ---------------
+
+def point_vmem_bytes(kind: str, point: dict) -> int:
+    """Staged VMEM bytes for one BENCH_probe/BENCH_commit sweep point,
+    computed from the SAME traced block shapes K3 gates on (the bench
+    fixture shapes: probe stages one record per bucket, ``bq`` = the full
+    query set; commit stages the whole pool with a [T]-slot vector)."""
+    if kind == "hash_probe":
+        closed = _hash_probe_jaxpr(
+            B=point["n_buckets"], R=point["n_records"], K=point["n_old"],
+            KO=point["n_overflow"], n_vec=8, Q=point["n_queries"],
+            bq=point["n_queries"], max_probes=point.get("max_probes", 16))
+    elif kind == "tpcc_commit":
+        closed = _commit_jaxpr(
+            R=point["n_slots"], K=point["n_old"], T=point["n_txn"],
+            WS=point["write_set"], n_vec=point["n_txn"])
+    else:
+        raise ValueError(f"unknown bench kind {kind!r}")
+    eqns = find_pallas_eqns(closed.jaxpr)
+    return max(launch_vmem_bytes(e) for e in eqns)

@@ -1,14 +1,20 @@
 """Rule catalog, findings, and suppression syntax for ``repro.analysis``.
 
-The analyzer runs at two levels (DESIGN.md §7): a jaxpr audit over the
-traced commit/replay/GC entrypoints (rule ids A1–A4) and an AST lint over
-the source tree (rule ids W01–W05). W01–W04 mirror A1–A4 — the A-form sees
-through tracing (actual dataflow, actual dtypes), the W-form catches the
-same bug class at the call-site spelling before it is ever traced; W05 is
-AST-only. Every rule encodes a bug class this repo actually shipped and
-fixed (PR 4/6/7); the minimized reproductions live in
-``tests/analysis_corpus/`` and the suite asserts each rule fires on its
-corpus entry and stays silent on the current tree.
+The analyzer runs at three levels (DESIGN.md §7): a jaxpr audit over the
+traced commit/replay/GC entrypoints (rule ids A1–A4), an AST lint over
+the source tree (rule ids W01–W05), and a kernel-body sanitizer over the
+registered Pallas kernels (rule ids K1–K5, ``kernel_audit``). W01–W04
+mirror A1–A4 — the A-form sees through tracing (actual dataflow, actual
+dtypes), the W-form catches the same bug class at the call-site spelling
+before it is ever traced; W05 is AST-only. K1–K5 have no host-level twin:
+they check hazards that only exist inside a ``pallas_call`` body (OOB
+indices that interpret mode forgives but compiled TPU execution does not,
+``input_output_aliases`` read-after-write, the VMEM budget, the in-kernel
+lock taint, ops/ref structural parity). Every W/A rule encodes a bug class
+this repo actually shipped and fixed (PR 4/6/7); every K rule encodes a
+hazard class the PR 9 fusion made possible. The minimized reproductions
+live in ``tests/analysis_corpus/`` and the suite asserts each rule fires
+on its corpus entry and stays silent on the current tree.
 
 Suppression syntax
 ------------------
@@ -18,11 +24,11 @@ directly above it::
     # analysis: safe(W03): boolean mask operand — no sentinels
     first = jnp.argmax(ok, axis=1)
 
-The rule list takes W- or A-form ids (comma-separated for several rules);
-the reason is **mandatory** — ``safe(W03)`` without one does not suppress.
-Both levels honor the same comments: the jaxpr audit maps each equation
-back to its source line, so one annotation silences both the lint and the
-trace-level finding.
+The rule list takes W-, A- or K-form ids (comma-separated for several
+rules); the reason is **mandatory** — ``safe(W03)`` without one does not
+suppress. All three levels honor the same comments: the jaxpr and kernel
+audits map each equation back to its source line, so one annotation
+silences the lint and the trace-level findings alike.
 """
 from __future__ import annotations
 
@@ -76,6 +82,46 @@ RULES: Dict[str, Rule] = {
         "correct before the first wrap. Use wal._live_window, which maps "
         "each position to its latest append index — the PR 6 "
         "wraparound-blind replay-window bug."),
+    # ---- kernel-level rules (level 3, repro.analysis.kernel_audit) --------
+    "K1": Rule(
+        "K1", None, "unguarded dynamic index inside a kernel body",
+        "Every dynamic gather/scatter index inside a Pallas kernel body "
+        "must be provably clamped (mod/clamp/min-with-bound) or "
+        "mask-guarded (select/where — including the probe's slot = -1 "
+        "miss sentinel) before use, or the op must route OOB lanes "
+        "explicitly (mode='drop'/fill). Interpret mode clamps OOB "
+        "indices; compiled TPU execution does not."),
+    "K2": Rule(
+        "K2", None, "aliased-operand read after aliased-output write",
+        "With input_output_aliases, the aliased input ref and output ref "
+        "are the SAME buffer when compiled but distinct copies in "
+        "interpret mode. A read of an aliased operand ref after the first "
+        "write to its aliased output sees pre-write data interpreted, "
+        "post-write data compiled — the kernel must read every aliased "
+        "plane before its first in-place write (the PR 9 net-transition "
+        "fusion exists to make this single-pass shape natural)."),
+    "K3": Rule(
+        "K3", None, "per-launch VMEM budget exceeded",
+        "The sum of one launch's staged block shapes x dtype widths "
+        "(aliased planes counted once) must fit the per-core VMEM budget "
+        "(default 16 MiB, --vmem-budget). Interpret mode has no memory "
+        "ceiling; a compiled launch that overflows VMEM fails to compile "
+        "or silently spills to HBM, voiding the fusion's premise."),
+    "K4": Rule(
+        "K4", None, "CAS grant does not reach the fused header scatter",
+        "Inside a lock-carrying kernel body, the CAS arbitration result "
+        "(the scatter-min tournament) must provably flow into every "
+        "in-place header-plane write: an install that bypasses the grant "
+        "mask publishes versions whose locks were never won — the "
+        "kernel-body extension of A1's lock-discipline taint walk."),
+    "K5": Rule(
+        "K5", None, "kernel entrypoint without lock-step ref parity",
+        "Every public entrypoint in kernels/*/ops.py must have a "
+        "lock-step ref.py counterpart named <entrypoint>_ref with a "
+        "matching signature (same positional parameters; ref keyword-only "
+        "params a subset of the op's) and a registered differential test "
+        "in tests/test_kernels.py. A kernel without its oracle in lock "
+        "step is a protocol change, not an access path (DESIGN.md §8)."),
 }
 
 _ALIASES: Dict[str, str] = {r.aid: w for w, r in RULES.items() if r.aid}
@@ -94,8 +140,8 @@ def mirror(rule_id: str) -> Optional[str]:
 
 @dataclasses.dataclass
 class Finding:
-    rule: str          # canonical W-form id
-    level: str         # "jaxpr" | "ast"
+    rule: str          # canonical W-form (or K-form) id
+    level: str         # "jaxpr" | "ast" | "kernel"
     file: str
     line: int
     msg: str
@@ -117,7 +163,7 @@ class Finding:
 
 # reason is mandatory: the trailing `:\s*\S` refuses a bare safe(W03)
 _SUPPRESS_RE = re.compile(
-    r"#\s*analysis:\s*safe\(\s*([AWaw][0-9]+(?:\s*,\s*[AWaw][0-9]+)*\s*)\)"
+    r"#\s*analysis:\s*safe\(\s*([AWKawk][0-9]+(?:\s*,\s*[AWKawk][0-9]+)*\s*)\)"
     r"\s*:\s*(\S.*)")
 
 Suppressions = Dict[int, Tuple[Set[str], str]]

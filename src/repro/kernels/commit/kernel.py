@@ -97,7 +97,9 @@ def _commit_kernel(cur_ref, old_ref, nw_ref, vec_ref,
     fails = jnp.zeros(txn_ok.shape, jnp.int32).at[txn].add(
         (act & ~effective).astype(jnp.int32))
     committed = (fails + ext_fails == 0) & txn_ok
-    do_install = effective & committed[txn]
+    # inactive lanes may carry garbage txn ids (padding): route them to 0 —
+    # `effective` already includes `act`, so the gathered value is dead there
+    do_install = effective & committed[jnp.where(act, txn, 0)]
 
     # ---- net state transition: one scatter per header plane --------------
     # lock-set + release cancel within the launch; only install slots move.

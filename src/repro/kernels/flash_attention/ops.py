@@ -15,9 +15,10 @@ from repro.kernels.flash_attention.kernel import flash_attention_folded
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
-                                             "bq", "bk", "interpret"))
+                                             "scale", "bq", "bk",
+                                             "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
-                    bq=128, bk=128, interpret=None):
+                    scale=None, bq=128, bk=128, interpret=None):
     """q: [B, Sq, Hq, D]; k, v: [B, Sk, Hkv, D] → [B, Sq, Hq, D]."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -28,6 +29,6 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
     kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
     vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
     of = flash_attention_folded(qf, kf, vf, g=g, causal=causal,
-                                window=window, softcap=softcap, bq=bq,
-                                bk=bk, interpret=interpret)
+                                window=window, softcap=softcap, scale=scale,
+                                bq=bq, bk=bk, interpret=interpret)
     return of.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -77,7 +77,11 @@ def _resolve_versions(slot, cm, cc, om, oc, nw, vm, vc, vn, tsvec, *,
     """
 
     def usable(meta, cts):
-        tid = (meta >> thread_shift).astype(jnp.int32)
+        # a header's thread id is 29 bits wide — garbage headers (never
+        # written, mid-recovery) can carry tids past the vector; clamp to
+        # the last slot (tid >= 0 always: uint32 >> 3 fits int32)
+        raw = (meta >> thread_shift).astype(jnp.int32)
+        tid = jnp.minimum(raw, tsvec.shape[0] - 1)
         vis = cts <= tsvec[tid]
         return vis & ((meta & jnp.uint32(deleted_bit)) == 0)
 
@@ -168,7 +172,10 @@ def _batched_kernel(dk_ref, dv_ref, cm_ref, cc_ref, om_ref, oc_ref, nw_ref,
     else:
         val = jnp.full(fb.shape, -1, jnp.int32)
         got = jnp.zeros(fb.shape, jnp.bool_)
-    resolved = jnp.where(km, jnp.where(got, val, 0), fb)
+    # slot-addressed lanes trust the caller's fb; clamp to the pool so the
+    # header gathers are in-bounds by construction (no-op for valid slots)
+    safe_fb = jnp.clip(fb, 0, cm_ref.shape[0] - 1)
+    resolved = jnp.where(km, jnp.where(got, val, 0), safe_fb)
     key_ok = ~km | got
     found, src, pos = _resolve_versions(
         resolved, cm_ref[...], cc_ref[...], om_ref[...], oc_ref[...],

@@ -8,11 +8,11 @@ import jax
 from repro.kernels.paged_attention.kernel import paged_attention as _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("window", "softcap",
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
                                              "interpret"))
 def paged_attention(q, k_pool, v_pool, page_table, kv_len, *, window=None,
-                    softcap=None, interpret=None):
+                    softcap=None, scale=None, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return _kernel(q, k_pool, v_pool, page_table, kv_len, window=window,
-                   softcap=softcap, interpret=interpret)
+                   softcap=softcap, scale=scale, interpret=interpret)

@@ -1,0 +1,53 @@
+"""K1 corpus: dynamic gather inside a kernel body with a raw input index.
+
+``bad_launch`` gathers ``table[idx]`` where ``idx`` comes straight off a
+kernel operand — interpret mode clamps an out-of-range lane, compiled TPU
+execution does not (the gather lowers with PROMISE_IN_BOUNDS). This is the
+minimized form of the `committed[txn]` hazard the kernel audit caught in
+the fused commit kernel (padding lanes carry garbage txn ids).
+``good_launch`` is the §8 idiom the rule accepts: the same gather behind a
+``where(mask, idx, 0)`` guard. Do not fix: tests/test_kernel_audit.py
+asserts the bad variant fires and the good one stays silent.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N, Q = 128, 64
+
+
+def _bad_kernel(t_ref, i_ref, o_ref):
+    table = t_ref[...]
+    idx = i_ref[...]
+    o_ref[...] = table[idx]          # raw operand index: unproven
+
+
+def _good_kernel(t_ref, i_ref, m_ref, o_ref):
+    table = t_ref[...]
+    idx = i_ref[...]
+    mask = m_ref[...]
+    safe = jnp.where(mask, idx, 0)   # mask-guarded: the accepted idiom
+    o_ref[...] = jnp.where(mask, table[safe], 0)
+
+
+def bad_launch(table, idx):
+    return pl.pallas_call(
+        _bad_kernel,
+        out_shape=jax.ShapeDtypeStruct((Q,), jnp.uint32),
+        interpret=True,
+    )(table, idx)
+
+
+def good_launch(table, idx, mask):
+    return pl.pallas_call(
+        _good_kernel,
+        out_shape=jax.ShapeDtypeStruct((Q,), jnp.uint32),
+        interpret=True,
+    )(table, idx, mask)
+
+
+BAD_ARGS = (jax.ShapeDtypeStruct((N,), jnp.uint32),
+            jax.ShapeDtypeStruct((Q,), jnp.int32))
+GOOD_ARGS = (jax.ShapeDtypeStruct((N,), jnp.uint32),
+             jax.ShapeDtypeStruct((Q,), jnp.int32),
+             jax.ShapeDtypeStruct((Q,), jnp.bool_))

@@ -1,0 +1,58 @@
+"""K2 corpus: de-fused variant of the PR 9 commit scatter.
+
+The fused commit kernel reads every aliased header plane ONCE, computes
+the net transition, and applies one in-place scatter per plane — that
+single-pass shape is what makes ``input_output_aliases`` sound.
+``bad_launch`` undoes the fusion: it applies the lock-set scatter to the
+aliased output, then RE-READS the aliased operand ref for the install
+pass. In interpret mode the operand is a separate copy, so the re-read
+sees pre-lock headers and the test passes; compiled, operand and output
+are one buffer and the re-read sees the locked headers — a silent
+divergence. ``good_launch`` is the fused single-pass shape. Do not fix:
+tests/test_kernel_audit.py asserts the bad variant fires.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+R, Q = 128, 32
+LOCK = 1 << 31
+
+
+def _bad_kernel(h_ref, s_ref, n_ref, o_ref):
+    hdr = h_ref[...]
+    safe = jnp.where(s_ref[...] >= 0, s_ref[...], 0)
+    # pass 1: lock-set scatter, written in place to the aliased output
+    o_ref[...] = hdr.at[safe].set(hdr[safe] | jnp.uint32(LOCK), mode="drop")
+    # pass 2 re-reads the OPERAND ref after the aliased output was
+    # written: pre-lock data interpreted, post-lock data compiled
+    hdr2 = h_ref[...]
+    o_ref[...] = hdr2.at[safe].set(n_ref[...], mode="drop")
+
+
+def _good_kernel(h_ref, s_ref, n_ref, o_ref):
+    hdr = h_ref[...]                 # single read, then one net scatter
+    safe = jnp.where(s_ref[...] >= 0, s_ref[...], 0)
+    o_ref[...] = hdr.at[safe].set(n_ref[...], mode="drop")
+
+
+def _launch(kernel, hdr, slots, new):
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.uint32),
+        input_output_aliases={0: 0},
+        interpret=True,
+    )(hdr, slots, new)
+
+
+def bad_launch(hdr, slots, new):
+    return _launch(_bad_kernel, hdr, slots, new)
+
+
+def good_launch(hdr, slots, new):
+    return _launch(_good_kernel, hdr, slots, new)
+
+
+ARGS = (jax.ShapeDtypeStruct((R,), jnp.uint32),
+        jax.ShapeDtypeStruct((Q,), jnp.int32),
+        jax.ShapeDtypeStruct((Q,), jnp.uint32))

@@ -1,0 +1,41 @@
+"""K3 corpus: one launch staging more block bytes than a core's VMEM.
+
+``bad_launch`` stages a 64 MiB float32 plane (4096 x 4096) into a single
+launch — interpret mode has no memory ceiling so everything passes, but a
+compiled launch either fails to build or spills to HBM, voiding the
+VMEM-residency premise the fusion banks on. ``good_launch`` stages the
+same total work as a 64-step grid of 1 MiB blocks. Do not fix:
+tests/test_kernel_audit.py asserts the bad variant exceeds the default
+16 MiB budget and the good one fits.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N = 4096
+
+
+def _scale_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def bad_launch(x):
+    return pl.pallas_call(
+        _scale_kernel,
+        out_shape=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def good_launch(x):
+    return pl.pallas_call(
+        _scale_kernel,
+        grid=(N // 64,),
+        in_specs=[pl.BlockSpec((64, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((64, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+ARGS = (jax.ShapeDtypeStruct((N, N), jnp.float32),)

@@ -1,0 +1,75 @@
+"""K4 corpus: a lock-carrying kernel whose install bypasses the CAS grant.
+
+``bad_launch`` runs the scatter-min arbitration tournament (so the lock
+protocol is nominally present) but then installs new headers into the
+aliased state plane UNCONDITIONALLY — the stored value is not derived
+from the tournament, so lanes that lost arbitration still publish their
+versions. ``no_cas_launch`` is the cruder variant: a kernel registered as
+lock-carrying with no tournament at all. ``good_launch`` mirrors the
+fused commit kernel's shape: the install index is gated on the grant, so
+the taint walk sees the arbitration flow into the in-place write. Do not
+fix: tests/test_kernel_audit.py asserts both bad variants fire.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+R, Q = 128, 32
+NO_WINNER = 0xFFFFFFFF
+
+
+def _bad_kernel(h_ref, s_ref, p_ref, n_ref, o_ref, o_won_ref):
+    hdr = h_ref[...]
+    safe = jnp.where(s_ref[...] >= 0, s_ref[...], 0)
+    prio = p_ref[...]
+    arb = jnp.full((R,), jnp.uint32(NO_WINNER), jnp.uint32).at[safe].min(prio)
+    won = arb[safe] == prio          # the tournament runs...
+    o_won_ref[...] = won
+    # ...but the install ignores it: every lane writes its header
+    o_ref[...] = hdr.at[safe].set(n_ref[...], mode="drop")
+
+
+def _no_cas_kernel(h_ref, s_ref, p_ref, n_ref, o_ref, o_won_ref):
+    hdr = h_ref[...]
+    safe = jnp.where(s_ref[...] >= 0, s_ref[...], 0)
+    o_won_ref[...] = jnp.ones((Q,), jnp.bool_)
+    o_ref[...] = hdr.at[safe].set(n_ref[...], mode="drop")
+
+
+def _good_kernel(h_ref, s_ref, p_ref, n_ref, o_ref, o_won_ref):
+    hdr = h_ref[...]
+    safe = jnp.where(s_ref[...] >= 0, s_ref[...], 0)
+    prio = p_ref[...]
+    arb = jnp.full((R,), jnp.uint32(NO_WINNER), jnp.uint32).at[safe].min(prio)
+    won = arb[safe] == prio
+    o_won_ref[...] = won
+    iidx = jnp.where(won, safe, R)   # losers route out of bounds: dropped
+    o_ref[...] = hdr.at[iidx].set(n_ref[...], mode="drop")
+
+
+def _launch(kernel, hdr, slots, prio, new):
+    return pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((R,), jnp.uint32),
+                   jax.ShapeDtypeStruct((Q,), jnp.bool_)],
+        input_output_aliases={0: 0},
+        interpret=True,
+    )(hdr, slots, prio, new)
+
+
+def bad_launch(hdr, slots, prio, new):
+    return _launch(_bad_kernel, hdr, slots, prio, new)
+
+
+def no_cas_launch(hdr, slots, prio, new):
+    return _launch(_no_cas_kernel, hdr, slots, prio, new)
+
+
+def good_launch(hdr, slots, prio, new):
+    return _launch(_good_kernel, hdr, slots, prio, new)
+
+
+ARGS = (jax.ShapeDtypeStruct((R,), jnp.uint32),
+        jax.ShapeDtypeStruct((Q,), jnp.int32),
+        jax.ShapeDtypeStruct((Q,), jnp.uint32),
+        jax.ShapeDtypeStruct((Q,), jnp.uint32))

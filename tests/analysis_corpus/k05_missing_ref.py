@@ -1,0 +1,55 @@
+"""K5 corpus: kernel packages whose ops/ref pairs drifted out of lock step.
+
+Unlike k01–k04 these are SOURCE PAIRS, not importable kernels: K5 is the
+pure-AST structural check, so the corpus feeds
+``kernel_audit.check_ref_parity_sources`` synthetic ops.py/ref.py texts
+reproducing each drift: a missing ``_ref`` counterpart, a positional
+signature mismatch, a ref-only keyword (the exact drift the audit caught
+in flash_attention/paged_attention: the ref took ``scale``, the public
+wrapper never plumbed it), and a pair with no registered differential
+test. Do not fix: tests/test_kernel_audit.py asserts each fires.
+"""
+
+OPS_MISSING_REF = '''
+def lookup(table, keys, *, max_probes=16):
+    return table, keys
+'''
+REF_MISSING_REF = '''
+def _helper(x):
+    return x
+'''
+
+OPS_SIG_DRIFT = '''
+def commit(headers, slots, expected):
+    return headers
+'''
+REF_SIG_DRIFT = '''
+def commit_ref(headers, requests, expected):
+    return headers
+'''
+
+OPS_KW_DRIFT = '''
+def attend(q, k, v, *, causal=True):
+    return q
+'''
+REF_KW_DRIFT = '''
+def attend_ref(q, k, v, *, causal=True, scale=None):
+    return q
+'''
+
+OPS_GOOD = '''
+def probe(table, keys, *, max_probes=16):
+    return table
+'''
+REF_GOOD = '''
+def probe_ref(table, keys, *, max_probes=16):
+    return table
+'''
+
+# a tests/test_kernels.py that registers probe_ref but nothing else
+TESTS_TEXT = '''
+from ref import probe_ref
+
+def test_probe_matches_ref():
+    assert probe_ref is not None
+'''

@@ -1,0 +1,336 @@
+"""Differential tests for the kernel-level sanitizer (K1–K5).
+
+Contract (ISSUE 10): every K rule fires on its minimized known-bad corpus
+entry under tests/analysis_corpus/k0*, and the kernel audit stays silent
+on the current tree (the registered commit/probe kernels + every
+ops/ref pair). Plus the regressions for the real hazards this audit
+caught in the live kernels — the commit kernel's raw `committed[txn]`
+gather on padding lanes, the probe's unclamped header thread-id, the
+batched probe's trusted fallback slots, and the attention wrappers'
+missing `scale` plumbing — each fixed in this PR, not suppressed.
+"""
+import importlib.util
+import inspect
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import kernel_audit as ka
+from repro.analysis import rules
+
+TESTS = pathlib.Path(__file__).resolve().parent
+CORPUS = TESTS / "analysis_corpus"
+ROOT = TESTS.parent
+
+
+def _active(findings):
+    return [f for f in findings if not f.suppressed]
+
+
+def _fired(findings):
+    return {f.rule for f in _active(findings)}
+
+
+def _load_corpus(name):
+    spec = importlib.util.spec_from_file_location(name, CORPUS / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ------------------------------------------------------ rules fire on corpus
+
+class TestFiresOnCorpus:
+    def test_k1_unclamped_gather(self):
+        mod = _load_corpus("k01_unclamped_gather")
+        assert "K1" in _fired(
+            ka.audit_kernel_callable(mod.bad_launch, *mod.BAD_ARGS))
+        assert not _active(
+            ka.audit_kernel_callable(mod.good_launch, *mod.GOOD_ARGS))
+
+    def test_k2_aliased_reread(self):
+        mod = _load_corpus("k02_aliased_reread")
+        assert "K2" in _fired(
+            ka.audit_kernel_callable(mod.bad_launch, *mod.ARGS))
+        assert not _active(
+            ka.audit_kernel_callable(mod.good_launch, *mod.ARGS))
+
+    def test_k3_vmem_hog(self):
+        mod = _load_corpus("k03_vmem_hog")
+        fs = ka.audit_kernel_callable(mod.bad_launch, *mod.ARGS)
+        assert "K3" in _fired(fs)
+        assert not _active(
+            ka.audit_kernel_callable(mod.good_launch, *mod.ARGS))
+
+    def test_k3_reports_bytes(self):
+        mod = _load_corpus("k03_vmem_hog")
+        closed = jax.make_jaxpr(mod.bad_launch)(*mod.ARGS)
+        (eqn,) = ka.find_pallas_eqns(closed.jaxpr)
+        # 4096 x 4096 float32 in + the same out, no aliasing
+        assert ka.launch_vmem_bytes(eqn) == 2 * 4096 * 4096 * 4
+
+    def test_k4_grantless_install(self):
+        mod = _load_corpus("k04_grantless_install")
+        assert "K4" in _fired(ka.audit_kernel_callable(
+            mod.bad_launch, *mod.ARGS, expects_locks=True))
+        assert "K4" in _fired(ka.audit_kernel_callable(
+            mod.no_cas_launch, *mod.ARGS, expects_locks=True))
+        assert not _active(ka.audit_kernel_callable(
+            mod.good_launch, *mod.ARGS, expects_locks=True))
+
+    def test_k5_parity_drifts(self):
+        mod = _load_corpus("k05_missing_ref")
+        for ops, ref in [(mod.OPS_MISSING_REF, mod.REF_MISSING_REF),
+                         (mod.OPS_SIG_DRIFT, mod.REF_SIG_DRIFT),
+                         (mod.OPS_KW_DRIFT, mod.REF_KW_DRIFT)]:
+            fs = ka.check_ref_parity_sources(ops, "<ops>", ref,
+                                             mod.TESTS_TEXT)
+            assert "K5" in _fired(fs)
+        assert not _active(ka.check_ref_parity_sources(
+            mod.OPS_GOOD, "<ops>", mod.REF_GOOD, mod.TESTS_TEXT))
+
+    def test_k5_missing_test_registration(self):
+        mod = _load_corpus("k05_missing_ref")
+        fs = ka.check_ref_parity_sources(mod.OPS_GOOD, "<ops>",
+                                         mod.REF_GOOD, tests_text="")
+        assert "K5" in _fired(fs)
+
+
+# ------------------------------------------------------- silent on the tree
+
+class TestSilentOnTree:
+    def test_registered_kernels_clean(self):
+        findings, reports = ka.audit_kernels()
+        assert not _active(findings), [f.render() for f in _active(findings)]
+        assert reports, "no kernels were traced"
+        assert all(r.status == "ok" for r in reports), [
+            (r.name, r.detail) for r in reports if r.status != "ok"]
+
+    def test_ref_parity_clean(self):
+        assert not _active(ka.check_ref_parity())
+
+    def test_all_registered_kernels_have_launches(self):
+        # every registry entry resolves to >= 1 pallas_call
+        for spec in ka.KERNELS.values():
+            closed = spec.tracer()
+            assert ka.find_pallas_eqns(closed.jaxpr), spec.name
+
+    def test_vmem_within_budget(self):
+        _, reports = ka.audit_kernels()
+        for r in reports:
+            assert 0 < r.vmem_bytes <= ka.PER_CORE_VMEM_BYTES, (
+                r.name, r.vmem_bytes)
+
+
+# ------------------------------------------------ budget knob + suppressions
+
+class TestKnobsAndSuppressions:
+    def test_tiny_budget_fires_k3_on_real_kernel(self):
+        findings, _ = ka.audit_kernels(vmem_budget=1 << 20)
+        assert "K3" in _fired(findings)
+
+    def test_k_ids_parse_in_suppression_syntax(self):
+        supp = rules.scan_suppressions(
+            "x = 1  # analysis: safe(K1, K3): fixture shapes, bounded\n")
+        assert supp[1][0] == {"K1", "K3"}
+
+    def test_suppression_silences_kernel_finding(self, tmp_path):
+        src = (CORPUS / "k01_unclamped_gather.py").read_text()
+        src = src.replace(
+            "    o_ref[...] = table[idx]          # raw operand index: "
+            "unproven",
+            "    # analysis: safe(K1): test fixture — index is trusted\n"
+            "    o_ref[...] = table[idx]")
+        mod_file = tmp_path / "k01_suppressed.py"
+        mod_file.write_text(src)
+        spec = importlib.util.spec_from_file_location("k01_supp", mod_file)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        fs = ka.audit_kernel_callable(mod.bad_launch, *mod.BAD_ARGS)
+        k1 = [f for f in fs if f.rule == "K1"]
+        assert k1 and all(f.suppressed for f in k1)
+
+    def test_reason_is_mandatory_for_k_ids(self):
+        assert rules.scan_suppressions("x  # analysis: safe(K1):\n") == {}
+
+
+# --------------------------------------- regressions: the real hazards fixed
+
+class TestHazardRegressions:
+    """The audit caught real bugs in the live kernels; these pin the fixes.
+
+    Interpret mode clamps OOB gathers, so pre-fix these all PASSED
+    interpreted while being undefined compiled — the tests assert the
+    now-explicit semantics (garbage routed/clamped) stay bit-identical to
+    the oracle, and the silent-on-tree test above proves the unproven
+    gathers are gone.
+    """
+
+    def test_commit_garbage_txn_on_inactive_lanes(self):
+        from repro.core import header as hdr, mvcc
+        from repro.kernels.commit.ops import fused_commit
+        R, K, T, WS, W = 64, 2, 4, 2, 4
+        Q = T * WS
+        rng = np.random.default_rng(7)
+        tbl = mvcc.init_table(R, W, n_old=K, n_overflow=2)
+        vec = jnp.zeros((T,), jnp.uint32)
+        req_slots = jnp.asarray(rng.integers(0, R, Q), jnp.int32)
+        expected = tbl.cur_hdr[req_slots]
+        prio = jnp.arange(Q, dtype=jnp.uint32)
+        act = jnp.asarray(np.arange(Q) < Q // 2)
+        txn = np.repeat(np.arange(T, dtype=np.int32), WS)
+        cts = jnp.full((T,), 5, jnp.uint32)
+        new_hdr = hdr.pack(jnp.repeat(jnp.arange(T, dtype=jnp.uint32), WS),
+                           jnp.repeat(cts, WS))
+        new_data = jnp.asarray(rng.integers(0, 1000, (Q, W)), jnp.int32)
+        txn_ok = jnp.ones((T,), bool)
+        txn_slot = jnp.arange(T, dtype=jnp.int32)
+        ef = jnp.zeros((T,), jnp.int32)
+
+        def run(txn_vec):
+            return fused_commit(tbl, vec, req_slots, expected, prio, act,
+                                jnp.asarray(txn_vec), new_hdr, new_data,
+                                txn_ok, txn_slot, cts, ef, interpret=True)
+
+        garbage = txn.copy()
+        garbage[Q // 2:] = 2_000_000_000    # way past T: padding-lane junk
+        for a, b in zip(jax.tree.leaves(run(txn)),
+                        jax.tree.leaves(run(garbage))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_probe_garbage_header_tid_matches_ref(self):
+        from repro.core import header as hdr, mvcc
+        from repro.kernels.hash_probe.ops import hash_probe
+        from repro.kernels.hash_probe.ref import hash_probe_ref
+        B, R, K, KO, NV = 32, 16, 2, 2, 4
+        key = 77
+        b = (key * 2654435769) % (1 << 32) % B
+        dir_keys = jnp.zeros((B,), jnp.uint32).at[b].set(key + 1)
+        dir_vals = jnp.full((B,), -1, jnp.int32).at[b].set(3)
+        tbl = mvcc.init_table(R, 2, n_old=K, n_overflow=KO)
+        # record 3's header carries a GARBAGE thread id (recovery junk):
+        # the tid field encodes far past the timestamp vector's n_slots
+        tbl = tbl._replace(cur_hdr=tbl.cur_hdr.at[3].set(
+            hdr.pack(jnp.uint32(NV + 1000), jnp.uint32(1))))
+        ts_vec = jnp.full((NV,), 9, jnp.uint32)
+        queries = jnp.array([key], jnp.uint32)
+        got = hash_probe(dir_keys, dir_vals, tbl, ts_vec, queries,
+                         interpret=True)
+        want = hash_probe_ref(dir_keys, dir_vals, tbl, ts_vec, queries)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_batched_probe_oob_fallback_slot_clamps(self):
+        from repro.core import mvcc
+        from repro.kernels.hash_probe.ops import batched_probe
+        R, K, KO, NV = 16, 2, 2, 4
+        tbl = mvcc.init_table(R, 2, n_old=K, n_overflow=KO)
+        ts = jnp.zeros((NV,), jnp.uint32)
+
+        def run(fb):
+            return batched_probe(None, None, tbl, ts,
+                                 jnp.asarray(fb, jnp.int32), None, None,
+                                 interpret=True)
+
+        oob = run(np.array([R + 5, -3], np.int32))
+        pinned = run(np.array([R - 1, 0], np.int32))
+        # found/src/pos resolve the CLAMPED slot — identical to the pinned
+        # in-range run (slot echoes the caller's fb verbatim, so skip [0])
+        for g, w in zip(oob[1:], pinned[1:]):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_attention_wrappers_plumb_scale(self):
+        from repro.kernels.flash_attention.ops import flash_attention
+        from repro.kernels.flash_attention.ref import flash_attention_ref
+        from repro.kernels.paged_attention.ops import paged_attention
+        assert "scale" in inspect.signature(flash_attention).parameters
+        assert "scale" in inspect.signature(paged_attention).parameters
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+        got = flash_attention(q, k, v, causal=True, scale=0.1,
+                              bq=8, bk=8, interpret=True)
+        want = flash_attention_ref(q, k, v, causal=True, window=None,
+                                   softcap=None, scale=0.1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------- report plumbing + entrypoints
+
+class TestReportPlumbing:
+    def test_point_vmem_bytes_probe(self):
+        n = ka.point_vmem_bytes("hash_probe", {
+            "n_buckets": 1024, "n_records": 1024, "n_old": 2,
+            "n_overflow": 4, "n_queries": 256})
+        assert 0 < n <= ka.PER_CORE_VMEM_BYTES
+
+    def test_point_vmem_bytes_commit(self):
+        n = ka.point_vmem_bytes("tpcc_commit", {
+            "n_slots": 1024, "n_old": 2, "n_txn": 64, "write_set": 4})
+        assert 0 < n <= ka.PER_CORE_VMEM_BYTES
+
+    def test_point_vmem_bytes_unknown_kind(self):
+        with pytest.raises(ValueError):
+            ka.point_vmem_bytes("nope", {})
+
+    def test_run_analysis_is_a_shim(self):
+        # satellite: one arg-parsing path — the script must not grow its
+        # own ArgumentParser, only delegate to repro.analysis.__main__
+        text = (ROOT / "scripts" / "run_analysis.py").read_text()
+        assert "ArgumentParser" not in text
+        assert "repro.analysis" in text
+
+    def test_sarif_shape(self):
+        from repro.analysis.__main__ import to_sarif
+        report = {
+            "rules": {"K1": {"jaxpr_id": None, "title": "unguarded index"}},
+            "findings": [
+                {"rule": "K1", "level": "kernel", "file": "a.py",
+                 "line": 3, "msg": "boom", "suppressed": False,
+                 "reason": ""},
+                {"rule": "K1", "level": "kernel", "file": "b.py",
+                 "line": 0, "msg": "meh", "suppressed": True,
+                 "reason": "fixture"},
+            ],
+        }
+        sarif = to_sarif(report)
+        assert sarif["version"] == "2.1.0"
+        run = sarif["runs"][0]
+        assert run["tool"]["driver"]["rules"][0]["id"] == "K1"
+        active, suppressed = run["results"]
+        assert active["level"] == "error"
+        assert active["locations"][0]["physicalLocation"]["region"][
+            "startLine"] == 3
+        assert suppressed["level"] == "note"
+        assert suppressed["suppressions"][0]["justification"] == "fixture"
+        assert suppressed["locations"][0]["physicalLocation"]["region"][
+            "startLine"] == 1    # SARIF lines are 1-based
+        json.dumps(sarif)        # must be serializable as-is
+
+    def test_cli_kernel_level_in_report(self, tmp_path):
+        out = tmp_path / "report.json"
+        sarif = tmp_path / "report.sarif"
+        res = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--strict",
+             "--no-lint", "--no-jaxpr", "--out", str(out),
+             "--sarif", str(sarif)],
+            capture_output=True, text=True, cwd=ROOT,
+            env={**__import__("os").environ,
+                 "PYTHONPATH": str(ROOT / "src")})
+        assert res.returncode == 0, res.stdout + res.stderr
+        report = json.loads(out.read_text())
+        assert report["schema_version"] == 2
+        assert report["ok"] is True
+        names = {k["name"] for k in report["kernels"]}
+        assert "commit.fused_commit" in names
+        assert all(k["vmem_bytes"] > 0 for k in report["kernels"])
+        assert json.loads(sarif.read_text())["version"] == "2.1.0"
